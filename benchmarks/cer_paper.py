@@ -1,0 +1,238 @@
+"""CER benchmarks mirroring the paper's experiments (§6, Figs. 7–9).
+
+Each function reproduces one figure/table of the paper on the host engine
+(the faithful reproduction) and, where marked, on the device engine (the
+TPU-native adaptation).  Throughput is events/second over a fixed event
+budget; the paper's qualitative claims are asserted by tests
+(tests/test_paper_claims.py) — flat in window size, flat in query length,
+linear memory.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import Event, compile_query
+from repro.core.engine import Engine, WindowSpec
+from repro.data.streams import NOISE_TYPES, StreamSpec, random_stream, stock_stream
+from repro.vector import VectorEngine
+
+DEFAULT_EVENTS = 20000
+MAX_ENUM = 10  # paper: "we only enumerate the first ten results"
+
+
+def _run_host(qtext: str, stream: List[Event], window: WindowSpec,
+              max_enumerate: Optional[int] = MAX_ENUM,
+              consume: bool = True) -> Dict[str, float]:
+    q = compile_query(qtext)
+    eng = Engine(q.cea, window=window, consume_on_match=consume,
+                 max_enumerate=max_enumerate)
+    t0 = time.perf_counter()
+    matches = 0
+    for ev in stream:
+        matches += len(eng.process(ev))
+    dt = time.perf_counter() - t0
+    return {"events_per_sec": len(stream) / dt, "matches": matches,
+            "nodes": eng.tecs.nodes_created, "seconds": dt}
+
+
+def sequence_query(n: int) -> str:
+    pat = " ; ".join(f"A{i}" for i in range(1, n + 1))
+    return f"SELECT * FROM S WHERE {pat}"
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7: sequence queries with output, n = 3,5,7,9, T = 100 events
+# ---------------------------------------------------------------------------
+
+
+def fig7_sequence_with_output(num_events: int = DEFAULT_EVENTS,
+                              ns=(3, 5, 7, 9)) -> List[Dict]:
+    out = []
+    for n in ns:
+        types = [f"A{i}" for i in range(1, n + 1)]
+        stream = random_stream(StreamSpec(types, seed=7), num_events)
+        r = _run_host(sequence_query(n), stream, WindowSpec.events(100))
+        r_upd = _run_host(sequence_query(n), stream, WindowSpec.events(100),
+                          max_enumerate=0)
+        out.append({"name": f"fig7_seq_n{n}", "n": n,
+                    "throughput": r["events_per_sec"],
+                    "update_throughput": r_upd["events_per_sec"],
+                    "matches": r["matches"],
+                    "nodes_per_event": r["nodes"] / num_events})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 left: windows 50..3200, A1;A2;A3 with A3 absent (no output)
+# ---------------------------------------------------------------------------
+
+
+def fig8_window_sweep(num_events: int = DEFAULT_EVENTS,
+                      windows=(50, 100, 150, 200, 800, 3200)) -> List[Dict]:
+    qtext = "SELECT * FROM S WHERE A1 ; A2 ; A3"
+    stream = random_stream(StreamSpec(["A1", "A2"], seed=3), num_events)
+    out = []
+    for w in windows:
+        r = _run_host(qtext, stream, WindowSpec.events(w))
+        out.append({"name": f"fig8_window_{w}", "window": w,
+                    "throughput": r["events_per_sec"],
+                    "matches": r["matches"]})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 right: selection strategies over the no-output workload
+# ---------------------------------------------------------------------------
+
+
+def fig8_selection_strategies(num_events: int = DEFAULT_EVENTS) -> List[Dict]:
+    from repro.core.query import compile_query as cq
+    stream = random_stream(StreamSpec(["A1", "A2"], seed=3), num_events)
+    out = []
+    for strategy in ("ALL", "NXT", "LAST", "MAX"):
+        pre = "" if strategy == "ALL" else strategy + " "
+        q = cq(f"SELECT {pre}* FROM S WHERE A1 ; A2 ; A3 WITHIN 100 events")
+        ex = q.make_executor(max_enumerate=MAX_ENUM)
+        t0 = time.perf_counter()
+        for ev in stream:
+            ex.process(ev)
+        dt = time.perf_counter() - t0
+        out.append({"name": f"fig8_strategy_{strategy}",
+                    "strategy": strategy,
+                    "throughput": num_events / dt})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 left: iteration (K3, K5) and disjunction (D3, D5), T = 100
+# ---------------------------------------------------------------------------
+
+K3 = "SELECT * FROM S WHERE A1 ; A2+ ; A3"
+K5 = "SELECT * FROM S WHERE A1 ; A2+ ; A3 ; A4+ ; A5"
+D3 = "SELECT * FROM S WHERE A1 ; (A2 OR A2') ; A3"
+D5 = "SELECT * FROM S WHERE A1 ; (A2 OR A2') ; A3 ; (A4 OR A4') ; A5"
+
+
+def fig9_other_operators(num_events: int = DEFAULT_EVENTS) -> List[Dict]:
+    cases = {
+        "K3": (K3, ["A1", "A2", "A3"]),
+        "K5": (K5, ["A1", "A2", "A3", "A4", "A5"]),
+        "D3": (D3, ["A1", "A2", "A2'", "A3"]),
+        "D5": (D5, ["A1", "A2", "A2'", "A3", "A4", "A4'", "A5"]),
+    }
+    out = []
+    for name, (qtext, types) in cases.items():
+        stream = random_stream(StreamSpec(types, seed=11), num_events)
+        r = _run_host(qtext, stream, WindowSpec.events(100))
+        out.append({"name": f"fig9_{name}", "throughput": r["events_per_sec"],
+                    "matches": r["matches"]})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 right: stock-market queries Q1..Q7 (Appendix C)
+# ---------------------------------------------------------------------------
+
+STOCK_QUERIES = {
+    "Q1": """SELECT * FROM S
+        WHERE SELL AS msft ; BUY AS oracle ; BUY AS csco ; SELL AS amat
+        FILTER msft[name = 'MSFT'] AND oracle[name = 'ORCL'] AND
+        csco[name = 'CSCO'] AND amat[name = 'AMAT']
+        WITHIN 30000 [stock_time]""",
+    "Q2": """SELECT * FROM S
+        WHERE SELL AS msft ; BUY AS oracle ; BUY AS csco ; SELL AS amat
+        FILTER msft[name = 'MSFT'] AND msft[price > 26.0] AND
+        oracle[name = 'ORCL'] AND oracle[price > 11.14] AND
+        csco[name = 'CSCO'] AND amat[name = 'AMAT'] AND amat[price >= 18.92]
+        WITHIN 30000 [stock_time]""",
+    "Q3": """SELECT * FROM S
+        WHERE SELL AS msft ; BUY AS oracle ; BUY AS csco ; SELL AS amat
+        FILTER msft[name = 'MSFT'] AND oracle[name = 'ORCL'] AND
+        csco[name = 'CSCO'] AND amat[name = 'AMAT']
+        PARTITION BY [volume]
+        WITHIN 30000 [stock_time]
+        CONSUME BY ANY""",
+    "Q4": """SELECT * FROM S
+        WHERE SELL AS msft ; (BUY OR SELL) AS oracle ;
+        (BUY OR SELL) AS csco ; SELL AS amat
+        FILTER msft[name = 'MSFT'] AND oracle[name = 'ORCL'] AND
+        csco[name = 'CSCO'] AND amat[name = 'AMAT']
+        WITHIN 30000 [stock_time]""",
+    "Q5": """SELECT * FROM S
+        WHERE SELL AS msft ; (BUY OR SELL) AS oracle ;
+        (BUY OR SELL) AS csco ; SELL AS amat
+        FILTER msft[name = 'MSFT'] AND msft[price > 26.0] AND
+        oracle[name = 'ORCL'] AND oracle[price > 11.14] AND
+        csco[name = 'CSCO'] AND amat[name = 'AMAT'] AND amat[price >= 18.92]
+        WITHIN 30000 [stock_time]""",
+    "Q6": """SELECT * FROM S
+        WHERE SELL AS msft ; (BUY OR SELL) AS oracle ;
+        (BUY OR SELL) AS csco ; SELL AS amat
+        FILTER msft[name = 'MSFT'] AND oracle[name = 'ORCL'] AND
+        csco[name = 'CSCO'] AND amat[name = 'AMAT']
+        PARTITION BY [volume]
+        WITHIN 30000 [stock_time]
+        CONSUME BY ANY""",
+    "Q7": """SELECT * FROM S
+        WHERE SELL AS a ; (BUY OR SELL)+ AS b ; SELL AS c
+        FILTER a[name = 'MSFT'] AND c[name = 'AMAT']
+        WITHIN 30000 [stock_time]""",
+}
+
+
+def fig9_stock_queries(num_events: int = DEFAULT_EVENTS) -> List[Dict]:
+    stream = stock_stream(num_events, seed=13)
+    out = []
+    for name, qtext in STOCK_QUERIES.items():
+        q = compile_query(qtext)
+        ex = q.make_executor(max_enumerate=MAX_ENUM)
+        t0 = time.perf_counter()
+        matches = 0
+        for ev in stream:
+            matches += len(ex.process(ev))
+        dt = time.perf_counter() - t0
+        out.append({"name": f"fig9_stock_{name}",
+                    "throughput": num_events / dt, "matches": matches})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Device engine (TPU-native adaptation): same workloads, batched streams
+# ---------------------------------------------------------------------------
+
+
+def vector_engine_throughput(num_events: int = 4096, batch: int = 32,
+                             epsilon: int = 95, use_pallas: bool = False
+                             ) -> List[Dict]:
+    import jax
+
+    out = []
+    for name, qtext, types in [
+        ("seq3", sequence_query(3), ["A1", "A2", "A3"]),
+        ("seq5", sequence_query(5), [f"A{i}" for i in range(1, 6)]),
+        ("K3", K3, ["A1", "A2", "A3"]),
+        ("D3", D3, ["A1", "A2", "A2'", "A3"]),
+    ]:
+        streams = [random_stream(StreamSpec(types, seed=100 + b), num_events)
+                   for b in range(batch)]
+        ve = VectorEngine(qtext, epsilon=epsilon, use_pallas=use_pallas)
+        attrs = ve.encode(streams)
+        ids = ve.classify(attrs)
+        state = ve.init_state(batch)
+        scan = jax.jit(lambda i, s: ve.scan(i, s))
+        m, s2 = scan(ids, state)  # compile + warm
+        jax.block_until_ready(m)
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            m, _ = scan(ids, state)
+        jax.block_until_ready(m)
+        dt = (time.perf_counter() - t0) / reps
+        out.append({"name": f"vector_{name}",
+                    "throughput": num_events * batch / dt,
+                    "matches": float(np.asarray(m).sum()),
+                    "S": ve.tables.num_states, "C": ve.tables.num_classes})
+    return out

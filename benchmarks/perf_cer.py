@@ -1,0 +1,108 @@
+"""CER engine §Perf track: paper-faithful baseline vs beyond-paper packed scan.
+
+Hillclimb cell #3 (most representative of the paper's technique).  Measured
+on the actual runtime (CPU XLA here; kernels additionally validated in
+interpret mode) — this is the one §Perf track with real wall-clock numbers.
+
+Baseline  : q single-query scans (each padded to the 128-lane MXU tile).
+Optimized : 1 packed block-diagonal scan (vector/multiquery.py).
+
+Napkin math (TPU target): q queries of S≈16 states pad to 128 lanes each →
+q·(W×128)×(128×128) MACs vs one (W×128)×(128×128) for the pack → ideal q×.
+On CPU XLA there is no 128-lane quantum, so the expected win is the
+arithmetic ratio  q·Ŝ_pad² / Ŝ_packed²  (less per-scan overheads).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.events import Event
+from repro.data.streams import StreamSpec, random_stream
+from repro.vector import VectorEngine
+from repro.vector.multiquery import MultiQueryEngine
+
+QUERIES = [
+    "SELECT * FROM S WHERE A1 ; A2 ; A3",
+    "SELECT * FROM S WHERE A1 ; A2+ ; A3",
+    "SELECT * FROM S WHERE A1 ; (A2 OR A3) ; A1",
+    "SELECT * FROM S WHERE A2 ; A3 ; A1",
+    "SELECT * FROM S WHERE A1 ; A3 WITHIN 50 events",
+    "SELECT * FROM S WHERE A3 ; A2 ; A1",
+    "SELECT * FROM S WHERE A2 ; (A1 OR A3)+ ; A2",
+    "SELECT * FROM S WHERE A3 ; A1 ; A2 ; A3",
+]
+
+
+def _time(fn, reps=3):
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def compare(num_events: int = 4096, batch: int = 16, epsilon: int = 95,
+            n_queries: int = 8, use_pallas: bool = False) -> Dict:
+    queries = QUERIES[:n_queries]
+    types = ["A1", "A2", "A3"]
+    streams = [random_stream(StreamSpec(types, seed=50 + b), num_events)
+               for b in range(batch)]
+
+    # baseline: q independent scans
+    singles = [VectorEngine(q, epsilon=epsilon, use_pallas=use_pallas)
+               for q in queries]
+    enc = [ve.encode(streams) for ve in singles]
+    ids = [ve.classify(a) for ve, a in zip(singles, enc)]
+    states = [ve.init_state(batch) for ve in singles]
+    scans = [jax.jit(lambda i, s, _ve=ve: _ve.scan(i, s)) for ve in singles]
+
+    def run_singles():
+        return [scan(i, s)[0] for scan, i, s in zip(scans, ids, states)]
+
+    t_base = _time(run_singles)
+
+    # optimized: one packed scan
+    mq = MultiQueryEngine(queries, epsilon=epsilon, use_pallas=use_pallas)
+    attrs = mq.encoder.encode_streams(streams)
+    mids = mq.classify(jax.numpy.asarray(attrs))
+    mstate = mq.init_state(batch)
+    packed = jax.jit(lambda i, s: mq.scan(i, s))
+
+    t_packed = _time(lambda: packed(mids, mstate)[0])
+
+    # correctness: identical counts
+    m_packed = np.asarray(packed(mids, mstate)[0])
+    for qi in range(len(queries)):
+        m_single = np.asarray(scans[qi](ids[qi], states[qi])[0])
+        np.testing.assert_array_equal(m_packed[:, :, qi], m_single)
+
+    ev_total = num_events * batch
+    return {
+        "queries": len(queries),
+        "packed_states": mq.packed_states,
+        "single_states": [ve.tables.num_states for ve in singles],
+        "baseline_s": t_base,
+        "packed_s": t_packed,
+        "speedup": t_base / t_packed,
+        "baseline_eps": ev_total * len(queries) / t_base,
+        "packed_eps": ev_total * len(queries) / t_packed,
+    }
+
+
+def main() -> None:
+    for nq in (2, 4, 8):
+        r = compare(n_queries=nq)
+        print(f"q={nq}: packed Ŝ={r['packed_states']} "
+              f"baseline {r['baseline_s']*1e3:.1f} ms → "
+              f"packed {r['packed_s']*1e3:.1f} ms "
+              f"({r['speedup']:.2f}×, {r['packed_eps']:.0f} query-events/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+# 512 virtual devices BEFORE jax init — first two lines.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""LM §Perf hillclimbs: three cells, hypothesis → change → re-lower → record.
+
+Cells (chosen from the baseline roofline table, see EXPERIMENTS.md §Roofline):
+
+* ``dsv3_train``    — deepseek-v3-671b × train_4k: worst absolute bound
+  (memory-dominant), most representative large-scale cell.
+* ``qwen3_train``   — qwen3-32b × train_4k: the dense-train workhorse;
+  collective-heavy via fp32 FSDP gathers.
+* ``granite_decode``— granite-moe-1b × decode_32k: most collective-bound
+  cell (per-token full-parameter regather).
+
+Each variant re-lowers the cell on the single-pod mesh and reports the three
+roofline terms (x_flops/x_bytes via the unrolled-variant extrapolation,
+collectives via the scan-aware HLO parse).
+
+    PYTHONPATH=src:. python -m benchmarks.perf_lm [--cell dsv3_train]
+"""
+import argparse
+import dataclasses
+import json
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import attention
+from repro.sharding import AxisRules, DECODE_RULES, TRAIN_RULES
+from repro.launch.costmodel import _lower_costs, type_counts, variants
+from repro.launch.dryrun import rules_for
+from repro.launch.mesh import make_production_mesh
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+_FACTORS = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+            "all-to-all": 1.0, "collective-permute": 1.0}
+
+TP_ONLY_DECODE = AxisRules(tuple(
+    (k, None if k == "fsdp" else v) for k, v in DECODE_RULES.rules))
+
+
+def _lower_scanned(cfg, shape_name: str, mesh, rules,
+                   sharded_logits: bool = False):
+    """Compile the real scanned program; return scan-aware collectives.
+
+    This matches the baseline table's methodology exactly (the unrolled
+    variants reshard differently and over-count collectives).
+    ``sharded_logits`` keeps decode logits vocab-sharded on `model` instead
+    of forcing replicated outputs (the baseline decode cells' biggest wire
+    cost turns out to be the replicated-logits all-gather).
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.sharding import set_rules
+    from repro.sharding.specs import sharding_tree
+    from repro.models import (make_prefill_step, make_serve_step,
+                              make_train_step)
+    from repro.launch.dryrun import collective_bytes
+    from repro.launch.specs import input_specs
+
+    with set_rules(rules):
+        spec = input_specs(cfg, shape_name)
+        with jax.set_mesh(mesh):
+            if spec["kind"] == "train":
+                step = make_train_step(cfg, spec["opt_cfg"])
+                in_sh = (sharding_tree(spec["state"], spec["state_axes"],
+                                       rules, mesh),
+                         sharding_tree(spec["batch"], spec["batch_axes"],
+                                       rules, mesh))
+                compiled = jax.jit(step, in_shardings=in_sh,
+                                   donate_argnums=0).lower(
+                    spec["state"], spec["batch"]).compile()
+            elif spec["kind"] == "prefill":
+                step = make_prefill_step(cfg)
+                in_sh = (sharding_tree(spec["params"], spec["param_axes"],
+                                       rules, mesh),
+                         sharding_tree(spec["batch"], spec["batch_axes"],
+                                       rules, mesh))
+                compiled = jax.jit(step, in_shardings=in_sh).lower(
+                    spec["params"], spec["batch"]).compile()
+            else:
+                step = make_serve_step(cfg)
+                cache_sh = sharding_tree(spec["caches"], spec["cache_axes"],
+                                         rules, mesh)
+                in_sh = (sharding_tree(spec["params"], spec["param_axes"],
+                                       rules, mesh), None, cache_sh, None)
+                out_sh = None
+                if sharded_logits:
+                    logits_sh = NamedSharding(
+                        mesh, P(("pod", "data") if "pod" in mesh.axis_names
+                                else "data", "model"))
+                    out_sh = (logits_sh, cache_sh)
+                compiled = jax.jit(step, in_shardings=in_sh,
+                                   out_shardings=out_sh,
+                                   donate_argnums=2).lower(
+                    spec["params"], spec["token"], spec["caches"],
+                    spec["index"]).compile()
+    coll = collective_bytes(compiled.as_text())
+    return coll
+
+
+def measure(cfg, shape_name: str, mesh, rules,
+            sharded_logits: bool = False) -> Dict[str, float]:
+    """flops/bytes via unrolled-variant extrapolation; collectives via the
+    scanned program (same methodology as the baseline roofline table)."""
+    from repro.launch.costmodel import _solve
+
+    vs = variants(cfg)
+    types = sorted({t for _, c in vs for t in c})
+    real = type_counts(cfg)
+    A, rows_nc = [], []
+    attention.set_no_chunk(True)
+    try:
+        for vcfg, counts in vs:
+            A.append([1.0] + [float(counts.get(t, 0)) for t in types])
+            rows_nc.append(_lower_costs(vcfg, shape_name, mesh, rules))
+    finally:
+        attention.set_no_chunk(False)
+    has_attention = (cfg.block_kind == "attn" or cfg.shared_attn_every
+                     or cfg.encoder_layers)
+    from repro.configs import SHAPES
+    if has_attention and SHAPES[shape_name]["kind"] in ("train", "prefill"):
+        rows_ch = [_lower_costs(vcfg, shape_name, mesh, rules)
+                   for vcfg, _ in vs]
+    else:
+        rows_ch = rows_nc
+    flops = _solve(A, rows_nc, "flops", types, real)
+    bytes_ = _solve(A, rows_ch, "bytes", types, real)
+    coll = _lower_scanned(cfg, shape_name, mesh, rules,
+                          sharded_logits=sharded_logits)
+    coll_wire = sum(coll.get(k, 0.0) * f for k, f in _FACTORS.items())
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_ / HBM_BW,
+        "collective_s": coll_wire / ICI_BW,
+        "flops": flops, "bytes": bytes_,
+        "coll_wire": coll_wire,
+    }
+
+
+# --------------------------------------------------------------------------
+# variant definitions: (name, hypothesis, cfg transform, rules, attn_mode)
+# --------------------------------------------------------------------------
+
+def _bf16(cfg):
+    return dataclasses.replace(cfg, param_dtype="bfloat16")
+
+
+def _cap10(cfg):
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+
+
+def _pad_vocab(cfg):
+    return dataclasses.replace(cfg, vocab_pad_multiple=128)
+
+
+def _pad_bf16(cfg):
+    return _bf16(_pad_vocab(cfg))
+
+
+DEF_CHUNKS = (1024, 2048)
+
+CELLS: Dict[str, Dict] = {
+    "qwen3_train": {
+        "arch": "qwen3-32b", "shape": "train_4k",
+        "variants": [
+            ("param_bf16", "qchunk4k was REFUTED for GQA (7x worse: "
+             "unchunked attention forces full-tensor gathers) — revert to "
+             "default chunks and halve FSDP gather wire with bf16 params",
+             _bf16, None, "f32", DEF_CHUNKS, False),
+            ("param_bf16+attn", "additionally bf16 attention chunks "
+             "(f32 accumulation)",
+             _bf16, None, "bf16", DEF_CHUNKS, False),
+        ],
+    },
+    "granite_decode": {
+        "arch": "granite-moe-1b-a400m", "shape": "decode_32k",
+        "variants": [
+            ("pad_shard_logits", "dominant decode wire = replicated "
+             "(B,49155) logits gather; vocab 49155 % 16 != 0 blocks "
+             "sharding -> pad the unembedding to 49280 (x128, masked cols) "
+             "and keep logits vocab-sharded",
+             _pad_vocab, None, "f32", DEF_CHUNKS, True),
+            ("pad_shl+tp+bf16", "additionally TP-only bf16 params "
+             "(no fsdp regather, half weight traffic)",
+             _pad_bf16, TP_ONLY_DECODE, "f32", DEF_CHUNKS, True),
+        ],
+    },
+}
+
+
+def run_cell(name: str, mesh) -> List[Dict]:
+    spec = CELLS[name]
+    cfg0 = get_config(spec["arch"])
+    out = []
+    for vname, hypo, tf, rules, attn_mode, chunks, shl in spec["variants"]:
+        cfg = tf(cfg0)
+        rules = rules or rules_for(spec["shape"])
+        attention.set_accum_mode(attn_mode)
+        attention.set_chunk_sizes(*chunks)
+        try:
+            m = measure(cfg, spec["shape"], mesh, rules, sharded_logits=shl)
+        finally:
+            attention.set_accum_mode("f32")
+            attention.set_chunk_sizes(*DEF_CHUNKS)
+        dom = max(("compute_s", "memory_s", "collective_s"),
+                  key=lambda k: m[k])
+        rec = {"cell": name, "variant": vname, "hypothesis": hypo,
+               "dominant": dom, **m}
+        out.append(rec)
+        print(f"[{name}/{vname}] compute {m['compute_s']:.3f}s "
+              f"memory {m['memory_s']:.3f}s "
+              f"collective {m['collective_s']:.3f}s  ← {dom}", flush=True)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(CELLS))
+    ap.add_argument("--out", default="benchmarks/results/perf_lm.json")
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=False)
+    cells = [args.cell] if args.cell else list(CELLS)
+    results = []
+    for c in cells:
+        results.extend(run_cell(c, mesh))
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    existing = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            existing = json.load(f)
+    seen = {(r["cell"], r["variant"]) for r in results}
+    existing = [r for r in existing
+                if (r["cell"], r["variant"]) not in seen]
+    with open(args.out, "w") as f:
+        json.dump(existing + results, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

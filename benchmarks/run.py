@@ -1,0 +1,51 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = microseconds per
+input event for CER benchmarks; derived = the figure's headline metric,
+events/second).
+
+    PYTHONPATH=src python -m benchmarks.run [--events N] [--quick]
+"""
+import argparse
+import sys
+
+
+def _emit(rows, metric="throughput"):
+    for r in rows:
+        us = 1e6 / r[metric] if r.get(metric) else float("nan")
+        derived = r.get(metric, 0.0)
+        print(f"{r['name']},{us:.4f},{derived:.1f}")
+        sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import cer_paper
+
+    n = args.events or (5000 if args.quick else 20000)
+    print("name,us_per_call,derived")
+    _emit(cer_paper.fig7_sequence_with_output(n))
+    _emit(cer_paper.fig8_window_sweep(n))
+    _emit(cer_paper.fig8_selection_strategies(n))
+    _emit(cer_paper.fig9_other_operators(n))
+    _emit(cer_paper.fig9_stock_queries(n))
+    _emit(cer_paper.vector_engine_throughput(
+        num_events=1024 if args.quick else 4096))
+
+    # roofline summary (uses whatever dry-run records exist)
+    from benchmarks import roofline
+    recs = roofline.load_records(mesh=None)
+    if recs:
+        print(f"# roofline: {len(recs)} dry-run cells analyzed "
+              f"(see EXPERIMENTS.md §Roofline)")
+        for r in recs:
+            print(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
+                  f"{r['bound_s'] * 1e6:.4f},{r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

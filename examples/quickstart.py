@@ -1,0 +1,53 @@
+"""Quickstart: compile a CEQL query, run it over a stream, enumerate matches.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import Event, compile_query
+from repro.data.streams import stock_stream
+from repro.vector import VectorEngine
+
+QUERY = """
+SELECT * FROM Stock
+WHERE SELL AS msft ; (BUY OR SELL) AS orcl ; SELL AS amzn
+FILTER msft[name = 'MSFT'] AND msft[price > 26.0]
+  AND orcl[name = 'ORCL']
+  AND amzn[name = 'AMZN'] AND amzn[price >= 18.97]
+WITHIN 30000 [stock_time]
+"""
+
+
+def main() -> None:
+    # ------------------------------------------------------------------
+    # host engine: constant update time, output-linear enumeration
+    # ------------------------------------------------------------------
+    stream = stock_stream(50_000, seed=42)
+    q = compile_query(QUERY)
+    print(f"query compiled: {q.cea.num_states} CEA states, "
+          f"{q.cea.registry.num_bits} atomic predicates")
+    shown = 0
+    total = 0
+    for pos, match in q.run(iter(stream), max_enumerate=10):
+        total += 1
+        if shown < 5:
+            print(f"  match at {pos}: interval={match.time} "
+                  f"events={match.data}")
+            shown += 1
+    print(f"host engine: {total} complex events (first 10 per position)")
+
+    # ------------------------------------------------------------------
+    # device engine: same query, batched streams, counting on accelerator
+    # ------------------------------------------------------------------
+    qtext = ("SELECT * FROM S WHERE SELL AS a ; BUY AS b "
+             "FILTER a[price > 25.0] AND b[price < 10.0] ")
+    streams = [stock_stream(4096, seed=s) for s in range(8)]
+    ve = VectorEngine(qtext, epsilon=100)
+    counts, _ = ve.run(streams)
+    print(f"device engine: {int(counts.sum())} matches across "
+          f"{len(streams)} parallel streams "
+          f"(det states={ve.tables.num_states}, "
+          f"classes={ve.tables.num_classes})")
+    print(f"hit positions (first 5): {ve.hit_positions(counts)[:5]}")
+
+
+if __name__ == "__main__":
+    main()

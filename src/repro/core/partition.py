@@ -1,0 +1,51 @@
+"""PARTITION BY evaluation (paper §3 semantics, §5.4 implementation).
+
+The stream is logically split into maximal substreams that agree (and are
+non-NULL) on every partition attribute; WHERE-SELECT-WITHIN runs on each
+substream separately.  CORE implements this by hashing the attribute values
+and running one engine instance per partition — here a dict of engines.
+
+Each partition engine evaluates over its substream with *local* positions
+(count-based windows therefore count events of the substream, matching the
+"executes WHERE-SELECT-WITHIN on each substream separately" semantics); the
+returned complex events are relabelled back to global stream positions.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Hashable, Iterable, List, Optional, Tuple
+
+from .events import ComplexEvent, Event, NULL
+
+
+class PartitionedEngine:
+    def __init__(self, make_engine: Callable[[], "object"],
+                 attrs: Tuple[str, ...]):
+        self.make_engine = make_engine
+        self.attrs = attrs
+        self.partitions: Dict[Hashable, object] = {}
+        self.j = -1
+
+    def process(self, t: Event) -> List[ComplexEvent]:
+        self.j += 1
+        key = tuple(t.get(a) for a in self.attrs)
+        if any(v is NULL for v in key):
+            return []  # tuples NULL on a partition attribute join no substream
+        eng = self.partitions.get(key)
+        if eng is None:
+            eng = self.make_engine()
+            self.partitions[key] = eng
+        # Each partition engine sees only its substream; positions inside the
+        # engine are per-substream, and we relabel outputs to global positions.
+        pos_map = getattr(eng, "_global_positions", None)
+        if pos_map is None:
+            pos_map = []
+            eng._global_positions = pos_map
+        pos_map.append(self.j)
+        out = eng.process(t)
+        return [ComplexEvent(pos_map[c.start], pos_map[c.end],
+                             tuple(pos_map[p] for p in c.data))
+                for c in out]
+
+    @property
+    def num_partitions(self) -> int:
+        return len(self.partitions)

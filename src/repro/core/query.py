@@ -1,0 +1,78 @@
+"""Top-level CEQL query execution: parse → compile → evaluate.
+
+This is the public API of the host (reference) engine::
+
+    q = compile_query("SELECT * FROM S WHERE A as x ; B as y WITHIN 10")
+    for pos, match in q.run(stream):
+        ...
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Iterable, Iterator, List, Optional, Tuple
+
+from . import ceql
+from .cea import CEA, compile_cel
+from .engine import Engine, WindowSpec
+from .events import ComplexEvent, Event
+from .partition import PartitionedEngine
+from .predicates import AtomRegistry
+from .selection import apply_strategy
+
+
+@dataclass
+class CompiledQuery:
+    query: ceql.Query
+    cea: CEA
+
+    def make_executor(self, max_enumerate: Optional[int] = None) -> "Executor":
+        return Executor(self, max_enumerate=max_enumerate)
+
+    def run(self, stream: Iterable[Event],
+            max_enumerate: Optional[int] = None
+            ) -> Iterator[Tuple[int, ComplexEvent]]:
+        return self.make_executor(max_enumerate).run(stream)
+
+
+class Executor:
+    """Drives (possibly partitioned) engines and applies the selection strategy."""
+
+    def __init__(self, compiled: CompiledQuery,
+                 max_enumerate: Optional[int] = None):
+        self.compiled = compiled
+        q = compiled.query
+
+        def make_engine() -> Engine:
+            return Engine(compiled.cea, window=q.window,
+                          consume_on_match=q.consume_on_match,
+                          max_enumerate=max_enumerate)
+
+        if q.partition_by:
+            self.engine: object = PartitionedEngine(make_engine, q.partition_by)
+        else:
+            self.engine = make_engine()
+        self.strategy = q.strategy
+        self.j = -1
+
+    def process(self, t: Event) -> List[ComplexEvent]:
+        self.j += 1
+        matches = self.engine.process(t)
+        return apply_strategy(self.strategy, matches)
+
+    def run(self, stream: Iterable[Event]) -> Iterator[Tuple[int, ComplexEvent]]:
+        for t in stream:
+            for ce in self.process(t):
+                yield self.j, ce
+
+    @property
+    def stats(self):
+        if isinstance(self.engine, PartitionedEngine):
+            return [e.stats for e in self.engine.partitions.values()]
+        return self.engine.stats
+
+
+def compile_query(text: str, registry: Optional[AtomRegistry] = None
+                  ) -> CompiledQuery:
+    q = ceql.parse(text)
+    cea = compile_cel(q.formula(), registry)
+    return CompiledQuery(q, cea)

@@ -1,0 +1,54 @@
+"""Selection strategies (paper §2, §6 'Selection strategies'; semantics in [31]).
+
+CORE supports ALL (the default skip-till-any-match), NXT, LAST and MAX.  The
+paper implements these at the automaton level via a strategy-aware
+determinization.  Here ALL is automaton-level (identical algorithm); NXT, LAST
+and MAX are *result-level reducers* applied to the per-position output set —
+observably equivalent (design deviation D2 in DESIGN.md), since a selection
+strategy is by definition a subset selector of the matched complex events.
+
+Definitions used (per position j, over the set M_j of matches ending at j):
+
+* ``MAX``  — keep C ∈ M_j iff no C' ∈ M_j with same interval start and
+  C.data ⊊ C'.data (maximal sequences; the paper's Q3 segmentation use-case).
+* ``LAST`` — keep the matches with the latest start; ties broken by keeping
+  maximal data sets.
+* ``NXT``  — keep, per start position, the lexicographically earliest data set
+  (the "next"/earliest-match heuristic).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .events import ComplexEvent
+
+
+def apply_strategy(strategy: str, matches: List[ComplexEvent]) -> List[ComplexEvent]:
+    if strategy in ("ALL", "ANY") or not matches:
+        return matches
+    if strategy == "MAX":
+        out = []
+        for c in matches:
+            dominated = any(
+                c2 is not c and c2.start == c.start and
+                set(c.data) < set(c2.data)
+                for c2 in matches)
+            if not dominated:
+                out.append(c)
+        return out
+    if strategy == "LAST":
+        best = max(c.start for c in matches)
+        latest = [c for c in matches if c.start == best]
+        return apply_strategy("MAX", latest)
+    if strategy in ("NXT", "NEXT"):
+        per_start: Dict[int, ComplexEvent] = {}
+        for c in matches:
+            cur = per_start.get(c.start)
+            if cur is None or c.data < cur.data:
+                per_start[c.start] = c
+        return [per_start[k] for k in sorted(per_start)]
+    if strategy == "STRICT":
+        # strict contiguity: every position in [start, end] is in data
+        return [c for c in matches
+                if len(c.data) == c.end - c.start + 1]
+    raise ValueError(f"unknown selection strategy {strategy!r}")

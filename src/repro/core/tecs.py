@@ -1,0 +1,192 @@
+"""timed Enumerable Compact Set (tECS) — paper §5.1–5.2 and Algorithm 2.
+
+A tECS is a DAG with three node kinds:
+
+* **bottom** nodes — labelled with a stream position, no child (the start of an
+  open complex event);
+* **output** nodes — labelled with a stream position, one child ``next``;
+* **union**  nodes — two children ``left``/``right`` with
+  ``⟦u⟧ = ⟦left⟧ ∪ ⟦right⟧``.
+
+Invariants maintained by the construction methods (``new_bottom``/``extend``/
+``union``/``merge``):
+
+* *time-ordered*: every node caches ``max_start``; for union nodes
+  ``max_start(left) ≥ max_start(right)`` — enabling the window prune;
+* *3-bounded*: output-depth ≤ 3 everywhere, via the "safe node" discipline
+  (safe ⇔ non-union, or odepth(n) = 1 ∧ odepth(right(n)) ≤ 2);
+* *duplicate-free*: guaranteed by the caller (I/O-determinism, Theorem 3).
+
+Enumeration (Algorithm 2) is a stack-based DFS that visits left children first
+and pushes right children only when their ``max_start`` passes the window
+threshold — yielding output-linear delay (Theorem 2).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, List, Optional, Tuple
+
+from .events import ComplexEvent
+
+BOTTOM = 0
+OUTPUT = 1
+UNION = 2
+
+
+class Node:
+    __slots__ = ("kind", "pos", "max_start", "left", "right")
+
+    def __init__(self, kind: int, pos: int, max_start: int,
+                 left: Optional["Node"] = None, right: Optional["Node"] = None):
+        self.kind = kind
+        self.pos = pos            # stream position (bottom/output only)
+        self.max_start = max_start
+        self.left = left          # union: left child; output: next
+        self.right = right        # union: right child
+
+    # -- structural helpers (used by tests / assertions) ---------------------
+    def odepth(self) -> int:
+        d, n = 0, self
+        while n.kind == UNION:
+            d += 1
+            n = n.left
+        return d
+
+    def is_safe(self) -> bool:
+        if self.kind != UNION:
+            return True
+        return self.odepth() == 1 and (self.right.odepth() <= 2)
+
+    def __repr__(self):  # pragma: no cover
+        k = {BOTTOM: "⊥", OUTPUT: "o", UNION: "∨"}[self.kind]
+        return f"{k}(pos={self.pos}, max={self.max_start})"
+
+
+class TECS:
+    """The tECS ``E`` plus its construction methods (paper §5.2)."""
+
+    def __init__(self, check_invariants: bool = False):
+        self.nodes_created = 0
+        self._check = check_invariants
+
+    # -- node constructors ----------------------------------------------------
+    def new_bottom(self, i: int) -> Node:
+        self.nodes_created += 1
+        return Node(BOTTOM, i, i)
+
+    def extend(self, n: Node, j: int) -> Node:
+        self.nodes_created += 1
+        return Node(OUTPUT, j, n.max_start, left=n)
+
+    def union(self, n1: Node, n2: Node) -> Node:
+        """Fig. 5 gadgets (a)–(d).  Requires n1, n2 safe, max(n1) = max(n2)."""
+        if self._check:
+            assert n1.is_safe() and n2.is_safe()
+            assert n1.max_start == n2.max_start
+        m = n1.max_start
+        self.nodes_created += 1
+        if n1.kind != UNION:  # (a)
+            return Node(UNION, -1, m, left=n1, right=n2)
+        if n2.kind != UNION:  # (b)
+            return Node(UNION, -1, m, left=n2, right=n1)
+        # both unions: 3 new nodes keep everything time-ordered and 3-bounded
+        self.nodes_created += 2
+        if n1.right.max_start >= n2.right.max_start:  # (c)
+            u2 = Node(UNION, -1, max(n1.right.max_start, n2.right.max_start),
+                      left=n1.right, right=n2.right)
+            u1 = Node(UNION, -1, m, left=n2.left, right=u2)
+            u = Node(UNION, -1, m, left=n1.left, right=u1)
+        else:  # (d)
+            u2 = Node(UNION, -1, max(n1.right.max_start, n2.right.max_start),
+                      left=n2.right, right=n1.right)
+            u1 = Node(UNION, -1, m, left=n2.left, right=u2)
+            u = Node(UNION, -1, m, left=n1.left, right=u1)
+        if self._check:
+            assert u.is_safe()
+        return u
+
+
+# ---------------------------------------------------------------------------
+# Union-lists (paper §5.2): non-empty sequences n0, n1, ..., nk of safe nodes
+# with n0 non-union, max(n0) ≥ max(ni), and max(nj) > max(n_{j+1}) for j ≥ 1.
+# ---------------------------------------------------------------------------
+
+UnionList = List[Node]
+
+
+def new_ulist(n: Node) -> UnionList:
+    return [n]
+
+
+def ulist_insert(tecs: TECS, ul: UnionList, n: Node) -> UnionList:
+    """In-place insert of safe node ``n`` with ``max(n) ≤ max(ul[0])``."""
+    m = n.max_start
+    for i in range(1, len(ul)):
+        if ul[i].max_start == m:
+            # replace n_i by union(n_i, n) — also updates E
+            ul[i] = tecs.union(ul[i], n)
+            return ul
+        if ul[i].max_start < m:
+            ul.insert(i, n)  # keeps positions ≥ 1 strictly decreasing
+            return ul
+    ul.append(n)  # smallest max-start so far (or max(n) = max(n0), len == 1)
+    return ul
+
+
+def ulist_merge(tecs: TECS, ul: UnionList) -> Node:
+    """Fig. 5(e): fold the union-list into one safe node, right-chained."""
+    if len(ul) == 1:
+        return ul[0]
+    acc = ul[-1]
+    for i in range(len(ul) - 2, 0, -1):
+        tecs.nodes_created += 1
+        acc = Node(UNION, -1, ul[i].max_start, left=ul[i], right=acc)
+    tecs.nodes_created += 1
+    return Node(UNION, -1, ul[0].max_start, left=ul[0], right=acc)
+
+
+def ulist_max(ul: UnionList) -> int:
+    return ul[0].max_start
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — enumeration with output-linear delay.
+# ---------------------------------------------------------------------------
+
+
+def enumerate_node(n: Node, j: int, threshold_start: int
+                   ) -> Iterator[ComplexEvent]:
+    """Enumerate ``⟦n⟧ε(j)`` = complex events closed at ``j`` whose start
+    position is ``≥ threshold_start`` (i.e. within the window).
+
+    ``threshold_start`` is ``j - ε`` for count-based windows; for time-based
+    windows the engine maps the timestamp bound back to the earliest admissible
+    start *position* before calling (stream order = time order).
+    """
+    if n.max_start < threshold_start:
+        return
+    # Stack entries: (node, reversed linked list of marked positions).  The
+    # linked-list representation makes pushing a snapshot O(1) (paper B.1).
+    stack: List[Tuple[Node, Optional[tuple]]] = [(n, None)]
+    while stack:
+        node, plist = stack.pop()
+        while True:
+            if node.kind == BOTTOM:
+                # ⟦p̄⟧ = (i, D): i = pos(bottom); D = labels of the *output*
+                # nodes along the full-path (the bottom's own position is the
+                # start of the interval, not automatically part of D).
+                # The path visits output nodes latest-first and conses each onto
+                # the list head, so walking the cons list yields ascending order.
+                data = []
+                cell = plist
+                while cell is not None:
+                    data.append(cell[0])
+                    cell = cell[1]
+                yield ComplexEvent(node.pos, j, tuple(data))
+                break
+            elif node.kind == OUTPUT:
+                plist = (node.pos, plist)
+                node = node.left
+            else:  # UNION
+                if node.right.max_start >= threshold_start:
+                    stack.append((node.right, plist))
+                node = node.left

@@ -1,0 +1,5 @@
+from .streams import (random_stream, stock_stream, StreamSpec)
+from .tokens import TokenPipeline, TokenPipelineState
+
+__all__ = ["random_stream", "stock_stream", "StreamSpec", "TokenPipeline",
+           "TokenPipelineState"]

@@ -1,0 +1,159 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles: TPU-alignment padding (S → ×128 MXU lanes, W → ×8 f32 sublanes,
+B → ×b_tile), interpret-mode fallback off-TPU, VMEM budget checks, and
+re-slicing outputs back to logical shapes.  The pure-jnp oracles live in
+:mod:`repro.kernels.ref`; tests assert allclose between the two on shape /
+dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .bitvector import bitvector_pallas
+from .cea_scan import cea_scan_pallas
+
+VMEM_BYTES = 16 * 1024 * 1024  # v5e VMEM per core (we budget ~16 MB)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def ring_size(epsilon: int) -> int:
+    """Ring-buffer slots for window ε, aligned to the f32 sublane width."""
+    return _pad_to(epsilon + 1, 8)
+
+
+# ---------------------------------------------------------------------------
+# bit-vector
+# ---------------------------------------------------------------------------
+
+
+def bitvector(attrs: jnp.ndarray, specs: Sequence[Tuple[int, int, float]],
+              *, use_pallas: bool = True, interpret: Optional[bool] = None
+              ) -> jnp.ndarray:
+    """(B, A) f32 → (B,) int32 packed predicate bits."""
+    if not use_pallas:
+        idx = jnp.asarray([s[0] for s in specs], dtype=jnp.int32)
+        ops = jnp.asarray([s[1] for s in specs], dtype=jnp.int32)
+        thr = jnp.asarray([s[2] for s in specs], dtype=jnp.float32)
+        return ref.bitvector_ref(attrs, idx, ops, thr)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, A = attrs.shape
+    b_tile = min(256, _pad_to(B, 8))
+    Bp = _pad_to(B, b_tile)
+    if Bp != B:
+        attrs = jnp.pad(attrs, ((0, Bp - B), (0, 0)))
+    out = bitvector_pallas(attrs, specs, b_tile=b_tile, interpret=interpret)
+    return out[:B]
+
+
+# ---------------------------------------------------------------------------
+# CEA scan
+# ---------------------------------------------------------------------------
+
+
+def cea_scan(class_ids: jnp.ndarray, m_all: jnp.ndarray, finals: jnp.ndarray,
+             c0: jnp.ndarray, *, epsilon: int, start_pos: int = 0,
+             init_state: int = 1, use_pallas: bool = True,
+             interpret: Optional[bool] = None, b_tile: int = 8
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Windowed CEA scan over T events for B streams.
+
+    class_ids (T, B) int32 | m_all (C, S, S) f32 | finals (S,) | c0 (B, W, S)
+    with W ≥ epsilon+1 → (matches (T, B) f32, c_final (B, W, S) f32).
+
+    Ring arithmetic is exact under padding: the kernel evicts start j-ε-1
+    and seeds start j each step, so any ring size W ≥ ε+1 gives identical
+    semantics (the padded slots simply stay empty).
+    """
+    T, B = class_ids.shape
+    NC, S, _ = m_all.shape
+    W = c0.shape[1]
+    if not use_pallas:
+        return _scan_xla(class_ids, m_all, finals, c0, epsilon, start_pos,
+                         init_state)
+
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    if W % 8 != 0:
+        # Ring arithmetic is mod W, so W cannot be padded here without
+        # stranding carried-over starts: the caller must allocate the ring at
+        # ring_size(epsilon) (×8).  Fall back to the exact XLA path otherwise.
+        return _scan_xla(class_ids, m_all, finals, c0, epsilon, start_pos,
+                         init_state)
+    # --- TPU alignment padding ---------------------------------------------
+    Sp = _pad_to(S, 128)
+    Bp = _pad_to(B, b_tile)
+    NCp = _pad_to(NC, 8)
+    m_pad = jnp.pad(m_all, ((0, NCp - NC), (0, Sp - S), (0, Sp - S)))
+    f_pad = jnp.pad(finals.astype(jnp.float32), (0, Sp - S))[None, :]
+    c_pad = jnp.pad(c0, ((0, Bp - B), (0, 0), (0, Sp - S)))
+    ids_pad = jnp.pad(class_ids.T, ((0, Bp - B), (0, 0)))  # (Bp, T)
+
+    vmem = 4 * (b_tile * W * Sp * 2 + NCp * Sp * Sp + b_tile * W * Sp)
+    if vmem > VMEM_BYTES:
+        raise ValueError(f"cea_scan VMEM budget exceeded: {vmem} bytes "
+                         f"(W={W}, S={Sp}, C={NCp}, b_tile={b_tile})")
+
+    matches, c_fin = cea_scan_pallas(
+        ids_pad, m_pad, f_pad, c_pad,
+        epsilon=epsilon, start_pos=start_pos, init_state=init_state,
+        b_tile=b_tile, interpret=interpret)
+    return matches[:B].T, c_fin[:B, :W, :S]
+
+
+def _scan_xla(class_ids, m_all, finals, c0, epsilon, start_pos, init_state):
+    c_fin, matches = ref.cea_scan_ref(c0, m_all, class_ids, finals,
+                                      epsilon=epsilon, start_pos=start_pos,
+                                      init_state=init_state)
+    return matches, c_fin
+
+
+def cea_scan_multi(class_ids: jnp.ndarray, m_all: jnp.ndarray,
+                   finals_q: jnp.ndarray, c0: jnp.ndarray,
+                   *, init_mask: jnp.ndarray, epsilon: int,
+                   start_pos: int = 0, use_pallas: bool = True,
+                   interpret: Optional[bool] = None, b_tile: int = 8
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Packed multi-query scan (vector/multiquery.py).
+
+    class_ids (T, B) | m_all (C, S, S) | finals_q (Q, S) | c0 (B, W, S)
+    → (matches (T, B, Q), c_final).
+    """
+    from .cea_scan import cea_scan_multi_pallas
+
+    T, B = class_ids.shape
+    NC, S, _ = m_all.shape
+    NQ = finals_q.shape[0]
+    W = c0.shape[1]
+    if not use_pallas or W % 8 != 0:
+        c_fin, m = ref.cea_scan_multi_ref(c0, m_all, class_ids, finals_q,
+                                          init_mask, epsilon,
+                                          start_pos=start_pos)
+        return m, c_fin
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    Sp = _pad_to(S, 128)
+    Bp = _pad_to(B, b_tile)
+    NCp = _pad_to(NC, 8)
+    NQp = _pad_to(NQ, 8)
+    m_pad = jnp.pad(m_all, ((0, NCp - NC), (0, Sp - S), (0, Sp - S)))
+    f_pad = jnp.pad(finals_q.astype(jnp.float32),
+                    ((0, NQp - NQ), (0, Sp - S)))
+    i_pad = jnp.pad(init_mask.astype(jnp.float32), (0, Sp - S))[None, :]
+    c_pad = jnp.pad(c0, ((0, Bp - B), (0, 0), (0, Sp - S)))
+    ids_pad = jnp.pad(class_ids.T, ((0, Bp - B), (0, 0)))
+    matches, c_fin = cea_scan_multi_pallas(
+        ids_pad, m_pad, f_pad, i_pad, c_pad, epsilon=epsilon,
+        start_pos=start_pos, b_tile=b_tile, interpret=interpret)
+    return jnp.moveaxis(matches[:B, :, :NQ], 0, 1), c_fin[:B, :, :S]

@@ -1,0 +1,130 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests).
+
+Shapes / conventions shared with the kernels:
+
+* ``attrs``      — ``(B, A)`` f32: one row per event, numerically-encoded
+                   attributes (categoricals pre-encoded on host).
+* ``bitvec``     — ``(B,)`` int32: packed predicate bits (bit i ⇔ P_i holds).
+* ``C``          — ``(B, W, S)`` f32: windowed run-count tensor; ``W`` ring
+                   slots indexed by ``start mod W``; ``S`` det states
+                   (0 = dead, 1 = initial).
+* ``M_all``      — ``(C, S, S)`` f32 counting-semiring transition matrices.
+* ``class_ids``  — ``(T, B)`` int32 symbol class per event per stream.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# op codes shared with the bit-vector kernel
+OP_EQ, OP_NE, OP_LT, OP_LE, OP_GT, OP_GE = range(6)
+
+
+def bitvector_ref(attrs: jnp.ndarray, attr_idx: jnp.ndarray,
+                  op_code: jnp.ndarray, threshold: jnp.ndarray) -> jnp.ndarray:
+    """(B, A) f32 × k predicate specs → (B,) int32 packed bit-vectors."""
+    vals = attrs[:, attr_idx]                      # (B, k)
+    thr = threshold[None, :]                       # (1, k)
+    results = jnp.stack([
+        vals == thr, vals != thr, vals < thr,
+        vals <= thr, vals > thr, vals >= thr,
+    ], axis=0)                                      # (6, B, k)
+    bits = jnp.take_along_axis(
+        results, op_code[None, None, :].astype(jnp.int32), axis=0)[0]  # (B, k)
+    weights = (1 << jnp.arange(attr_idx.shape[0], dtype=jnp.int32))
+    return jnp.sum(bits.astype(jnp.int32) * weights[None, :], axis=1)
+
+
+def cea_step_ref(C: jnp.ndarray, M: jnp.ndarray, seed_slot: jnp.ndarray,
+                 expire_slot: jnp.ndarray, finals: jnp.ndarray,
+                 init_state: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One windowed CEA step (Algorithm 1's update, dense form).
+
+    C:           (B, W, S) run counts by (stream, start-ring-slot, state)
+    M:           (B, S, S) per-stream transition matrix for this event
+    seed_slot:   () int32 — ring slot of the current position (j mod W); a
+                 fresh run (start = j) is seeded there.  With W ≥ ε+1 the
+                 slot is guaranteed empty (its previous occupant was evicted
+                 when it crossed the window boundary).
+    expire_slot: () int32 — slot of start j-ε-1, which just left the window
+                 (ring padding W > ε+1 keeps ring arithmetic exact).
+    finals:      (S,) f32 mask of accepting det states.
+    Returns (C', matches) with matches (B,) = matches closing at this step.
+    """
+    B, W, S = C.shape
+    arange_w = jnp.arange(W)
+    clear = (arange_w == seed_slot) | (arange_w == expire_slot)   # (W,)
+    C = C * (1.0 - clear.astype(C.dtype))[None, :, None]
+    seed_oh = (arange_w == seed_slot).astype(C.dtype)
+    init_oh = (jnp.arange(S) == init_state).astype(C.dtype)
+    C = C + seed_oh[None, :, None] * init_oh[None, None, :]
+    # advance every live run by this event: counting-semiring matmul
+    C = jnp.einsum("bws,bst->bwt", C, M)
+    matches = jnp.einsum("bws,s->b", C, finals.astype(C.dtype))
+    return C, matches
+
+
+def cea_scan_ref(C0: jnp.ndarray, M_all: jnp.ndarray, class_ids: jnp.ndarray,
+                 finals: jnp.ndarray, epsilon: int, start_pos: int = 0,
+                 init_state: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scan ``cea_step_ref`` over T events with window ``end-start ≤ epsilon``.
+
+    Requires ring size W ≥ epsilon + 1.  Returns (C_T, matches (T, B)).
+    """
+    B, W, S = C0.shape
+    assert W >= epsilon + 1, (W, epsilon)
+    T = class_ids.shape[0]
+    finals_f = finals.astype(C0.dtype)
+
+    def step(C, inputs):
+        t, ids = inputs
+        M = M_all[ids]                     # (B, S, S) gather
+        j = start_pos + t
+        seed_slot = j % W
+        expire_slot = (j - epsilon - 1) % W
+        C, m = cea_step_ref(C, M, seed_slot, expire_slot, finals_f, init_state)
+        return C, m
+
+    ts = jnp.arange(T, dtype=jnp.int32)
+    C_T, matches = jax.lax.scan(step, C0, (ts, class_ids))
+    return C_T, matches
+
+
+def cea_scan_multi_ref(C0: jnp.ndarray, M_all: jnp.ndarray,
+                       class_ids: jnp.ndarray, finals_q: jnp.ndarray,
+                       init_mask: jnp.ndarray, epsilon: int,
+                       start_pos: int = 0
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Packed multi-query scan oracle (see vector/multiquery.py).
+
+    finals_q: (Q, S) per-query final-state masks; init_mask: (S,) multi-hot
+    (one initial state per packed query block).  Returns
+    (C_T, matches (T, B, Q)).
+    """
+    B, W, S = C0.shape
+    assert W >= epsilon + 1
+    T = class_ids.shape[0]
+    fq = finals_q.astype(C0.dtype)
+    im = init_mask.astype(C0.dtype)
+
+    def step(C, inputs):
+        t, ids = inputs
+        M = M_all[ids]
+        j = start_pos + t
+        seed_slot = j % W
+        expire_slot = (j - epsilon - 1) % W
+        arange_w = jnp.arange(W)
+        clear = (arange_w == seed_slot) | (arange_w == expire_slot)
+        C = C * (1.0 - clear.astype(C.dtype))[None, :, None]
+        seed_oh = (arange_w == seed_slot).astype(C.dtype)
+        C = C + seed_oh[None, :, None] * im[None, None, :]
+        C = jnp.einsum("bws,bst->bwt", C, M)
+        m = jnp.einsum("bws,qs->bq", C, fq)
+        return C, m
+
+    ts = jnp.arange(T, dtype=jnp.int32)
+    C_T, matches = jax.lax.scan(step, C0, (ts, class_ids))
+    return C_T, matches

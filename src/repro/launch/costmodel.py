@@ -1,0 +1,244 @@
+# XLA must see 512 virtual devices BEFORE any jax import — first two lines.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Scan-aware cost extrapolation (second pass over the dry-run results).
+
+``compiled.cost_analysis()`` counts a while-loop body **once**, regardless of
+trip count (verified experimentally — see EXPERIMENTS.md §Dry-run), so raw
+HLO numbers undercount every scan-over-layers model.  This pass recovers the
+true per-step costs:
+
+1. For each cell, build small **unrolled** config variants (scan_layers=False,
+   1–2 layers per segment type, attention unchunked via
+   ``attention.set_no_chunk``) — one variant per distinct layer type plus a
+   base, chosen so the (base, per-layer-type) linear system is square.
+2. Lower + compile each variant on the same mesh/shape; collect flops, bytes
+   and per-kind collective bytes.
+3. Solve  F(variant) = base + Σ_t count_t(variant) · per_layer_t  and
+   extrapolate to the real layer counts.
+4. Write ``x_flops / x_bytes / x_collectives`` back into the dry-run JSON.
+
+Residual known undercounts (documented): the RWKV WKV token scan and the
+Mamba2 chunk-boundary scan (≈2% and <1% of their layers' flops).
+
+Usage:
+    python -m repro.launch.costmodel --all [--mesh pod16x16]
+    python -m repro.launch.costmodel --arch qwen3-32b --shape train_4k
+"""
+import argparse
+import dataclasses
+import glob
+import json
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from ..configs import ALIASES, SHAPES, get_config
+from ..models import attention
+from ..models.config import ModelConfig
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def type_counts(cfg: ModelConfig) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for i, kind in enumerate(cfg.layer_kinds()):
+        t = f"{kind}{'_moe' if cfg.layer_is_moe(i) else ''}"
+        counts[t] = counts.get(t, 0) + 1
+    if cfg.encoder_layers:
+        counts["encoder"] = cfg.encoder_layers
+    return counts
+
+
+def variants(cfg: ModelConfig) -> List[Tuple[ModelConfig, Dict[str, int]]]:
+    """Small unrolled variants spanning the (base, per-type) system."""
+    def mk(**kw) -> ModelConfig:
+        return dataclasses.replace(cfg, scan_layers=False, **kw)
+
+    out: List[ModelConfig] = []
+    if cfg.shared_attn_every:                       # zamba2 family
+        out = [mk(num_layers=2, shared_attn_every=2),
+               mk(num_layers=3, shared_attn_every=3),
+               mk(num_layers=4, shared_attn_every=2)]
+    elif cfg.moe is not None and cfg.first_dense_layers > 0:   # dsv3
+        out = [mk(num_layers=2, first_dense_layers=1),
+               mk(num_layers=3, first_dense_layers=2),
+               mk(num_layers=3, first_dense_layers=1)]
+    elif cfg.encoder_layers:                        # whisper
+        out = [mk(num_layers=1, encoder_layers=1),
+               mk(num_layers=2, encoder_layers=1),
+               mk(num_layers=1, encoder_layers=2)]
+    else:                                           # uniform stack
+        out = [mk(num_layers=1), mk(num_layers=2)]
+    return [(v, type_counts(v)) for v in out]
+
+
+def _lower_costs(cfg: ModelConfig, shape_name: str, mesh, rules
+                 ) -> Dict[str, float]:
+    import jax
+
+    from ..sharding import set_rules
+    from ..sharding.specs import sharding_tree
+    from ..models import make_prefill_step, make_serve_step, make_train_step
+    from .dryrun import collective_bytes
+    from .specs import input_specs
+
+    with set_rules(rules):
+        spec = input_specs(cfg, shape_name)
+        with jax.set_mesh(mesh):
+            if spec["kind"] == "train":
+                step = make_train_step(cfg, spec["opt_cfg"])
+                in_sh = (sharding_tree(spec["state"], spec["state_axes"],
+                                       rules, mesh),
+                         sharding_tree(spec["batch"], spec["batch_axes"],
+                                       rules, mesh))
+                lowered = jax.jit(step, in_shardings=in_sh,
+                                  donate_argnums=0).lower(
+                    spec["state"], spec["batch"])
+            elif spec["kind"] == "prefill":
+                step = make_prefill_step(cfg)
+                in_sh = (sharding_tree(spec["params"], spec["param_axes"],
+                                       rules, mesh),
+                         sharding_tree(spec["batch"], spec["batch_axes"],
+                                       rules, mesh))
+                lowered = jax.jit(step, in_shardings=in_sh).lower(
+                    spec["params"], spec["batch"])
+            else:
+                step = make_serve_step(cfg)
+                in_sh = (sharding_tree(spec["params"], spec["param_axes"],
+                                       rules, mesh),
+                         None,
+                         sharding_tree(spec["caches"], spec["cache_axes"],
+                                       rules, mesh),
+                         None)
+                lowered = jax.jit(step, in_shardings=in_sh,
+                                  donate_argnums=2).lower(
+                    spec["params"], spec["token"], spec["caches"],
+                    spec["index"])
+            compiled = lowered.compile()
+    cost = dict(compiled.cost_analysis() or {})
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0))}
+    coll = collective_bytes(compiled.as_text())
+    for k in _COLL_KINDS:
+        out[f"coll_{k}"] = float(coll.get(k, 0.0))
+    return out
+
+
+def _solve(A, rows, metric, types, real) -> float:
+    y = np.asarray([r[metric] for r in rows])
+    sol, *_ = np.linalg.lstsq(np.asarray(A), y, rcond=None)
+    base, per = sol[0], dict(zip(types, sol[1:]))
+    return float(max(base, 0.0) + sum(
+        max(per[t], 0.0) * real.get(t, 0) for t in types))
+
+
+def extrapolate(arch: str, shape_name: str, mesh, mesh_name: str
+                ) -> Dict[str, float]:
+    """Two passes per cell:
+
+    * flops from UNCHUNKED variants — inner attention scans hide flops from
+      cost_analysis, so chunking must be off; the giant unchunked score
+      buffer is never materialized (compile only) and does not affect flops.
+    * bytes from CHUNKED variants — unchunked attention would charge a
+      phantom (B,H,S,S) fp32 buffer the real program never allocates.  The
+      chunked inner scan's own traffic is counted once (≈the per-chunk
+      working set), a documented small undercount.
+    """
+    from .dryrun import rules_for
+
+    cfg = get_config(arch)
+    rules = rules_for(shape_name, cfg)
+    vs = variants(cfg)
+    types = sorted({t for _, c in vs for t in c})
+    real = type_counts(cfg)
+
+    A, rows_nochunk = [], []
+    attention.set_no_chunk(True)
+    try:
+        for vcfg, counts in vs:
+            A.append([1.0] + [float(counts.get(t, 0)) for t in types])
+            rows_nochunk.append(_lower_costs(vcfg, shape_name, mesh, rules))
+    finally:
+        attention.set_no_chunk(False)
+    # the chunked bytes pass only matters where _sdpa actually chunks:
+    # train/prefill shapes of attention-bearing archs (decode never chunks;
+    # rwkv has no attention at all)
+    has_attention = (cfg.block_kind == "attn" or cfg.shared_attn_every
+                     or cfg.encoder_layers)
+    needs_chunk_pass = has_attention and         SHAPES[shape_name]["kind"] in ("train", "prefill")
+    if needs_chunk_pass:
+        rows_chunked = [_lower_costs(vcfg, shape_name, mesh, rules)
+                        for vcfg, _ in vs]
+    else:
+        rows_chunked = rows_nochunk
+
+    out: Dict[str, float] = {}
+    out["flops"] = _solve(A, rows_nochunk, "flops", types, real)
+    out["bytes"] = _solve(A, rows_chunked, "bytes", types, real)
+    for k in _COLL_KINDS:
+        out[f"coll_{k}"] = _solve(A, rows_nochunk, f"coll_{k}", types, real)
+    return out
+
+
+def apply_to_record(path: str, mesh_cache: Dict) -> None:
+    from .mesh import make_production_mesh
+
+    with open(path) as f:
+        rec = json.load(f)
+    mesh_name = rec["mesh"]
+    if mesh_name not in mesh_cache:
+        mesh_cache[mesh_name] = make_production_mesh(
+            multi_pod=(mesh_name == "pods2x16x16"))
+    x = extrapolate(rec["arch"], rec["shape"], mesh_cache[mesh_name],
+                    mesh_name)
+    rec["x_flops"] = x["flops"]
+    rec["x_bytes"] = x["bytes"]
+    rec["x_collectives"] = {k: x[f"coll_{k}"] for k in _COLL_KINDS}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[costmodel] {rec['arch']} × {rec['shape']} × {mesh_name}: "
+          f"x_flops={x['flops']:.3e} (raw {rec['flops']:.3e}) "
+          f"x_bytes={x['bytes']:.3e}")
+
+
+def main() -> None:
+    from .dryrun import RESULTS_DIR
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod16x16",
+                    help="only extrapolate records for this mesh "
+                         "(roofline is single-pod); 'all' for both")
+    ap.add_argument("--keep-going", action="store_true")
+    args = ap.parse_args()
+
+    paths = sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json")))
+    if args.arch:
+        arch = ALIASES.get(args.arch, args.arch)
+        paths = [p for p in paths if os.path.basename(p).startswith(arch)]
+    if args.shape:
+        paths = [p for p in paths if f"__{args.shape}__" in p]
+    if args.mesh != "all":
+        paths = [p for p in paths if p.endswith(f"__{args.mesh}.json")]
+
+    mesh_cache: Dict = {}
+    failures = []
+    for p in paths:
+        try:
+            apply_to_record(p, mesh_cache)
+        except Exception as e:
+            failures.append((p, repr(e)))
+            print(f"[costmodel] FAIL {p}: {e}")
+            if not args.keep_going:
+                raise
+    if failures:
+        raise SystemExit(f"{len(failures)} failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,342 @@
+# XLA must see 512 virtual devices BEFORE any jax import (jax locks the
+# device count at first initialization) — these two lines stay first.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds ShapeDtypeStruct inputs (no allocation), shards
+them by the logical-axis rules, lowers the appropriate step function under
+the production mesh, compiles it, and records:
+
+* ``memory_analysis()``  — proves the cell fits (bytes per device),
+* ``cost_analysis()``    — HLO FLOPs / bytes for the roofline,
+* collective bytes       — parsed from the post-SPMD HLO text,
+
+into ``benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-moe-1b-a400m --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod-only | --single-pod-only]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ALIASES, ARCHS, SHAPES, all_cells, get_config
+from ..models import make_serve_step, make_train_step, make_prefill_step
+from ..models.steps import loss_fn
+from ..sharding import (DECODE_RULES, LONG_DECODE_RULES, TRAIN_RULES,
+                        set_rules)
+from ..sharding.specs import sharding_tree
+from .mesh import make_production_mesh
+from .specs import input_specs
+
+RESULTS_DIR = os.environ.get(
+    "REPRO_RESULTS_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "benchmarks", "results", "dryrun"))
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4,
+                "u16": 2, "u8": 1, "pred": 1}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16"
+                       r"|u8|pred)\[([0-9,]*)\]")
+
+
+def _line_collective(s: str):
+    """(kind, result bytes) if the HLO line is a collective start/sync op."""
+    for kind in _COLLECTIVES:
+        if f" {kind}(" in s or f" {kind}-start(" in s:
+            m = _SHAPE_RE.search(s.split("=", 1)[-1])
+            if m:
+                dt, dims = m.groups()
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                return kind, n * _DTYPE_BYTES.get(dt, 4)
+            return kind, 0.0
+    return None
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Scan-aware per-device collective wire bytes from the partitioned HLO.
+
+    A naive text scan (like ``cost_analysis``) counts a while-loop body once;
+    lax.scan-over-layers programs execute it ``trip_count`` times.  This
+    parser splits the module into computations, attributes each collective to
+    its computation, recovers while trip counts from the loop condition's
+    integer constant, and accumulates recursively:
+
+        total(comp) = own + sum_while trip(cond) * total(body)
+
+    Result-shape bytes approximate ring wire traffic (all-reduce gets a 2x
+    factor downstream in benchmarks/roofline.py).
+    """
+    # --- split into computations -----------------------------------------
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        st = line.strip()
+        if st.endswith("{") and "->" in st and not st.startswith("//"):
+            name_part = st[6:] if st.startswith("ENTRY") else st
+            m = _COMP_RE.match(name_part.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if st.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if st == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(st)
+
+    # --- per-computation collectives and while edges ----------------------
+    own: Dict[str, Dict[str, float]] = {}
+    whiles: Dict[str, list] = {}
+    for name, lines in comps.items():
+        acc = {k: 0.0 for k in _COLLECTIVES}
+        wl = []
+        for st in lines:
+            hit = _line_collective(st)
+            if hit:
+                acc[hit[0]] += hit[1]
+            if " while(" in st:
+                cm = re.search(r"condition=%?([\w.\-]+)", st)
+                bm = re.search(r"body=%?([\w.\-]+)", st)
+                if cm and bm:
+                    tm = _TRIP_RE.search(st)
+                    trip = int(tm.group(1)) if tm else None
+                    wl.append((cm.group(1), bm.group(1), trip))
+        own[name] = acc
+        whiles[name] = wl
+
+    def trip_count(cond: str) -> int:
+        # fallback when backend_config lacks known_trip_count
+        consts = [int(c) for c in _CONST_RE.findall(
+            "\n".join(comps.get(cond, [])))]
+        return max(consts) if consts else 1
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def total(name: str, depth: int = 0) -> Dict[str, float]:
+        if name in memo or depth > 16:
+            return memo.get(name, {k: 0.0 for k in _COLLECTIVES})
+        acc = dict(own.get(name, {k: 0.0 for k in _COLLECTIVES}))
+        for cond, body, trip in whiles.get(name, []):
+            n = trip if trip is not None else trip_count(cond)
+            sub = total(body, depth + 1)
+            for k in _COLLECTIVES:
+                acc[k] += n * sub[k]
+        memo[name] = acc
+        return acc
+
+    result = total(entry) if entry else {k: 0.0 for k in _COLLECTIVES}
+    result["ops"] = {}  # schema stability
+    return result
+
+
+def _mem_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+
+
+def rules_for(shape_name: str, cfg=None):
+    """Sharding rules per shape.
+
+    With REPRO_OPT_RULES=1 (the §Perf-adopted configuration), decode shapes
+    drop the fsdp axis whenever the parameter shards fit TP-only (≤ 6 GB per
+    chip across the 16-way model axis) — eliminating the per-token parameter
+    re-gather that dominates the baseline decode cells.
+    """
+    if shape_name == "train_4k":
+        return TRAIN_RULES
+    base = LONG_DECODE_RULES if shape_name == "long_500k" else DECODE_RULES
+    if cfg is not None and os.environ.get("REPRO_OPT_RULES") == "1":
+        import numpy as _np
+        total, _ = cfg.param_counts()
+        dtype_bytes = 2 if "bf16" in cfg.param_dtype or \
+            "bfloat16" in cfg.param_dtype else 4
+        if total * dtype_bytes / 16 <= 6e9:   # fits TP-16 without fsdp
+            from ..sharding.axis_rules import AxisRules
+            return AxisRules(tuple(
+                (k, None if k == "fsdp" else v) for k, v in base.rules))
+    return base
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             save: bool = True, verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    rules = rules_for(shape_name, cfg)
+    t0 = time.time()
+    with set_rules(rules):
+        spec = input_specs(cfg, shape_name)
+        with jax.set_mesh(mesh):
+            if spec["kind"] == "train":
+                step = make_train_step(cfg, spec["opt_cfg"])
+                in_sh = (sharding_tree(spec["state"], spec["state_axes"],
+                                       rules, mesh),
+                         sharding_tree(spec["batch"], spec["batch_axes"],
+                                       rules, mesh))
+                lowered = jax.jit(step, in_shardings=in_sh,
+                                  donate_argnums=0).lower(
+                    spec["state"], spec["batch"])
+            elif spec["kind"] == "prefill":
+                step = make_prefill_step(cfg)
+                in_sh = (sharding_tree(spec["params"], spec["param_axes"],
+                                       rules, mesh),
+                         sharding_tree(spec["batch"], spec["batch_axes"],
+                                       rules, mesh))
+                lowered = jax.jit(step, in_shardings=in_sh).lower(
+                    spec["params"], spec["batch"])
+            else:  # decode
+                step = make_serve_step(cfg)
+                cache_sh = sharding_tree(spec["caches"], spec["cache_axes"],
+                                         rules, mesh)
+                in_sh = (sharding_tree(spec["params"], spec["param_axes"],
+                                       rules, mesh),
+                         None, cache_sh, None)
+                out_sh = None
+                if os.environ.get("REPRO_OPT_RULES") == "1":
+                    # §Perf-adopted: keep decode logits vocab-sharded where
+                    # the vocab divides the model axis (else replicated —
+                    # or set cfg.vocab_pad_multiple to make it divide)
+                    from jax.sharding import NamedSharding
+                    from jax.sharding import PartitionSpec as P
+                    from ..sharding.axis_rules import divisible_spec
+                    batch_axes = tuple(a for a in ("pod", "data")
+                                       if a in mesh.axis_names)
+                    sizes = {a: int(n) for a, n in zip(
+                        mesh.axis_names, np.shape(mesh.devices))}
+                    lspec = divisible_spec(
+                        P(batch_axes, "model"),
+                        (SHAPES[shape_name]["global_batch"],
+                         cfg.padded_vocab), sizes)
+                    out_sh = (NamedSharding(mesh, lspec), cache_sh)
+                lowered = jax.jit(step, in_shardings=in_sh,
+                                  out_shardings=out_sh,
+                                  donate_argnums=2).lower(
+                    spec["params"], spec["token"], spec["caches"],
+                    spec["index"])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+    cost = dict(compiled.cost_analysis() or {})
+    cost = {k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and not k.startswith("utilization")}
+    mem = _mem_dict(compiled)
+    try:
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        hlo_len = len(hlo)
+        del hlo
+    except Exception as e:  # pragma: no cover
+        coll, hlo_len = {"error": str(e)}, 0
+
+    total, active = cfg.param_counts()
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": spec["kind"],
+        "num_devices": int(np.prod(np.shape(mesh.devices))),
+        "seq_len": SHAPES[shape_name]["seq_len"],
+        "global_batch": SHAPES[shape_name]["global_batch"],
+        "params_total": total, "params_active": active,
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "cost_analysis": cost,
+        "memory_analysis": mem,
+        "collectives": coll,
+        "hlo_chars": hlo_len,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"flops={record['flops']:.3e} "
+              f"bytes={record['bytes_accessed']:.3e}")
+        print(f"  memory_analysis: {mem}")
+        print(f"  collectives: { {k: v for k, v in coll.items() if k != 'ops'} }")
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR,
+                            f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2×16×16 multi-pod mesh for --arch/--shape")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--keep-going", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if not args.single_pod_only:
+        meshes.append(("pods2x16x16", make_production_mesh(multi_pod=True)))
+
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        arch = ALIASES.get(args.arch, args.arch)
+        cells = [(arch, args.shape)]
+        if args.multi_pod:
+            meshes = [("pods2x16x16", make_production_mesh(multi_pod=True))]
+
+    failures = []
+    for arch, shape in cells:
+        for mesh_name, mesh in meshes:
+            try:
+                run_cell(arch, shape, mesh, mesh_name)
+            except Exception as e:
+                failures.append((arch, shape, mesh_name, repr(e)))
+                print(f"[dryrun] FAIL {arch} × {shape} × {mesh_name}: {e}")
+                if not args.keep_going:
+                    traceback.print_exc()
+                    raise
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

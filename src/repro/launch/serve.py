@@ -1,0 +1,116 @@
+# Pod-scale dry runs on CPU hosts: set device count BEFORE jax init.
+import os
+if os.environ.get("REPRO_FORCE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_FORCE_DEVICES"])
+
+"""Serving launcher: batched decode with the CORE monitor attached.
+
+    python -m repro.launch.serve --arch qwen2.5-14b --smoke --tokens 32
+        [--guard "SELECT ... PARTITION BY [lane]"]
+
+Production shape: prefill builds lane caches, the decode loop emits one CER
+event per (lane, token) into the partitioned engine; matches surface as
+guardrail hits alongside the generated tokens.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ALIASES, get_config, get_smoke_config
+from ..core import Event, compile_query
+from ..models import init_params, make_serve_step, prefill
+from ..sharding import DECODE_RULES, set_rules
+from .mesh import make_host_mesh, make_production_mesh
+
+DEFAULT_GUARD = """
+SELECT * FROM Tokens
+WHERE TOK AS a ; TOK AS b ; TOK AS c
+FILTER a[logp < -2.5] AND b[logp < -2.5] AND c[logp < -2.5]
+WITHIN 8 events
+PARTITION BY [lane]
+"""
+
+
+def grow_caches(caches, tgt):
+    def pad(v, axis):
+        w = [(0, 0)] * v.ndim
+        w[axis] = (0, tgt - v.shape[axis])
+        return jnp.pad(v, w)
+
+    segs = []
+    for seg in caches["segments"]:
+        seg2 = {}
+        for k, v in seg.items():
+            if k == "mixer" and isinstance(v, dict):
+                m2 = {}
+                for kk, vv in v.items():
+                    if kk in ("k", "v"):
+                        m2[kk] = pad(vv, vv.ndim - 3)
+                    elif kk in ("c_kv", "k_rope"):
+                        m2[kk] = pad(vv, vv.ndim - 2)
+                    else:
+                        m2[kk] = vv
+                seg2[k] = m2
+            else:
+                seg2[k] = v
+        segs.append(seg2)
+    return dict(caches, segments=segs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--guard", default=DEFAULT_GUARD)
+    args = ap.parse_args()
+
+    arch = ALIASES.get(args.arch, args.arch)
+    cfg = get_smoke_config(arch) if args.smoke else get_config(arch)
+    mesh = make_host_mesh() if args.smoke else make_production_mesh()
+
+    with set_rules(DECODE_RULES), jax.set_mesh(mesh):
+        params, _ = init_params(cfg, jax.random.PRNGKey(0))
+        B, S0 = args.lanes, args.prompt_len
+        S_max = S0 + args.tokens
+        batch = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (B, S0), 0, cfg.vocab_size)}
+        if cfg.frontend == "vision_stub":
+            batch["patches"] = jnp.ones(
+                (B, cfg.frontend_seq, cfg.frontend_dim), jnp.float32)
+        if cfg.encoder_layers:
+            batch["frames"] = jnp.ones((B, cfg.encoder_seq, cfg.d_model),
+                                       jnp.float32)
+        logits, caches = prefill(params, cfg, batch)
+        caches = grow_caches(caches, S_max +
+                             (cfg.frontend_seq
+                              if cfg.frontend == "vision_stub" else 0))
+        serve_step = jax.jit(make_serve_step(cfg))
+        guard = compile_query(args.guard).make_executor(max_enumerate=1)
+
+        prefix = cfg.frontend_seq if cfg.frontend == "vision_stub" else 0
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        fired = 0
+        for t in range(args.tokens):
+            logits_t, caches = serve_step(params, tok, caches,
+                                          S0 + t + prefix)
+            logp = jax.nn.log_softmax(logits_t.astype(jnp.float32), axis=-1)
+            tok = jnp.argmax(logits_t, axis=-1)[:, None]
+            chosen = np.take_along_axis(np.asarray(logp), np.asarray(tok),
+                                        axis=1)[:, 0]
+            for lane in range(B):
+                ev = Event("TOK", {"lane": lane,
+                                   "logp": float(chosen[lane]),
+                                   "tok": int(tok[lane, 0])})
+                fired += len(guard.process(ev))
+    print(f"generated {args.tokens} × {B} lanes; guardrail fired {fired}×")
+
+
+if __name__ == "__main__":
+    main()

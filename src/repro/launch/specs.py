@@ -1,0 +1,116 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+
+The paper-shannon pattern: weak-type-correct, shardable stand-ins, no device
+allocation.  `abstract_*` helpers trace the real init functions under
+``jax.eval_shape``, capturing the logical-axes trees (static data) through a
+side box — so the 671B config costs nothing to "initialize" here.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES
+from ..models import (init_decode_caches, init_train_state)
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, global_batch: int, seq_len: int
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    batch = {"tokens": sds((global_batch, seq_len), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = sds((global_batch, cfg.frontend_seq,
+                                cfg.frontend_dim), jnp.float32)
+    if cfg.encoder_layers:
+        batch["frames"] = sds((global_batch, cfg.encoder_seq, cfg.d_model),
+                              jnp.float32)
+    return batch
+
+
+def batch_axes(cfg: ModelConfig) -> Dict[str, tuple]:
+    axes = {"tokens": ("batch", None)}
+    if cfg.frontend == "vision_stub":
+        axes["patches"] = ("batch", None, None)
+    if cfg.encoder_layers:
+        axes["frames"] = ("batch", None, None)
+    return axes
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig
+                         ) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct state tree, logical-axes tree) — no allocation."""
+    box: Dict[str, Any] = {}
+
+    def build(key):
+        state, axes = init_train_state(cfg, opt_cfg, key)
+        box["axes"] = axes
+        return state
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return shapes, box["axes"]
+
+
+def abstract_params(cfg: ModelConfig) -> Tuple[Any, Any]:
+    from ..models import init_params
+    box: Dict[str, Any] = {}
+
+    def build(key):
+        params, axes = init_params(cfg, key)
+        box["axes"] = axes
+        return params
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return shapes, box["axes"]
+
+
+def abstract_decode_caches(cfg: ModelConfig, batch: int, seq_len: int
+                           ) -> Tuple[Any, Any]:
+    box: Dict[str, Any] = {}
+
+    def build():
+        caches, axes = init_decode_caches(cfg, batch, seq_len)
+        box["axes"] = axes
+        return caches
+
+    shapes = jax.eval_shape(build)
+    return shapes, box["axes"]
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """Everything the dry-run needs to lower one cell.
+
+    kind == train   → {"state", "state_axes", "batch", "batch_axes"}
+    kind == prefill → {"params", "param_axes", "batch", "batch_axes"}
+    kind == decode  → {"params", "param_axes", "token", "caches",
+                       "cache_axes", "index"}
+    """
+    shape = SHAPES[shape_name]
+    B, S = shape["global_batch"], shape["seq_len"]
+    if shape["kind"] == "train":
+        opt_cfg = AdamWConfig(moment_dtype=cfg.opt_state_dtype)
+        state, state_axes = abstract_train_state(cfg, opt_cfg)
+        return {"kind": "train", "opt_cfg": opt_cfg,
+                "state": state, "state_axes": state_axes,
+                "batch": batch_specs(cfg, B, S),
+                "batch_axes": batch_axes(cfg)}
+    if shape["kind"] == "prefill":
+        params, param_axes = abstract_params(cfg)
+        return {"kind": "prefill",
+                "params": params, "param_axes": param_axes,
+                "batch": batch_specs(cfg, B, S),
+                "batch_axes": batch_axes(cfg)}
+    # decode: one new token against a seq_len cache
+    params, param_axes = abstract_params(cfg)
+    caches, cache_axes = abstract_decode_caches(cfg, B, S)
+    return {"kind": "decode",
+            "params": params, "param_axes": param_axes,
+            "token": sds((B, 1), jnp.int32),
+            "caches": caches, "cache_axes": cache_axes,
+            "index": sds((), jnp.int32)}

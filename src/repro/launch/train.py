@@ -1,0 +1,80 @@
+# Allow pod-scale dry runs on a CPU host: set device count BEFORE jax init.
+import os
+if os.environ.get("REPRO_FORCE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_FORCE_DEVICES"])
+
+"""Production training launcher.
+
+    python -m repro.launch.train --arch qwen3-32b [--steps 100]
+        [--multi-pod] [--compress-grads] [--checkpoint-dir DIR]
+
+On a real TPU pod this binary runs per host under the JAX distributed
+runtime; on CPU it drives the same code path on a 1×1 mesh (smoke) or, with
+REPRO_FORCE_DEVICES=512, lowers the full production sharding.
+"""
+import argparse
+
+import jax
+
+from ..configs import ALIASES, SHAPES, get_config, get_smoke_config
+from ..data.tokens import TokenPipeline
+from ..models import init_train_state, make_train_step
+from ..optim import AdamWConfig
+from ..runtime import Trainer, TrainerConfig
+from ..sharding import TRAIN_RULES, set_rules
+from ..sharding.specs import sharding_tree
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on the host mesh (CPU)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    args = ap.parse_args()
+
+    arch = ALIASES.get(args.arch, args.arch)
+    cfg = get_smoke_config(arch) if args.smoke else get_config(arch)
+    B = args.global_batch or (8 if args.smoke else
+                              SHAPES["train_4k"]["global_batch"])
+    S = args.seq_len or (64 if args.smoke else SHAPES["train_4k"]["seq_len"])
+
+    mesh = make_host_mesh() if args.smoke else \
+        make_production_mesh(multi_pod=args.multi_pod)
+    opt_cfg = AdamWConfig(total_steps=args.steps,
+                          moment_dtype=cfg.opt_state_dtype)
+
+    with set_rules(TRAIN_RULES), jax.set_mesh(mesh):
+        state, axes = init_train_state(cfg, opt_cfg, jax.random.PRNGKey(0),
+                                       compress=args.compress_grads)
+        shardings = sharding_tree(state, axes, TRAIN_RULES, mesh)
+        state = jax.device_put(state, shardings)
+        step = jax.jit(make_train_step(cfg, opt_cfg,
+                                       compress=args.compress_grads),
+                       donate_argnums=0)
+        frontend = {}
+        if cfg.frontend == "vision_stub":
+            frontend["patches"] = (cfg.frontend_seq, cfg.frontend_dim)
+        if cfg.encoder_layers:
+            frontend["frames"] = (cfg.encoder_seq, cfg.d_model)
+        data = TokenPipeline(cfg.vocab_size, B, S, seed=0, frontend=frontend)
+        trainer = Trainer(
+            step, state, data,
+            TrainerConfig(total_steps=args.steps,
+                          checkpoint_every=args.checkpoint_every,
+                          checkpoint_dir=args.checkpoint_dir))
+        report = trainer.run()
+    print(f"done: {report}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from .config import (ATTN, MAMBA2, RWKV6, SHARED_ATTN, ModelConfig, MoEConfig,
+                     SSMConfig)
+from .stack import decode_step, forward_train, init_params, prefill
+from .steps import (cross_entropy, init_decode_caches, init_train_state,
+                    loss_fn, make_prefill_step, make_serve_step,
+                    make_train_step)
+
+__all__ = ["ATTN", "MAMBA2", "RWKV6", "SHARED_ATTN", "ModelConfig",
+           "MoEConfig", "SSMConfig", "decode_step", "forward_train",
+           "init_params", "prefill", "cross_entropy", "init_decode_caches",
+           "init_train_state", "loss_fn", "make_prefill_step",
+           "make_serve_step", "make_train_step"]

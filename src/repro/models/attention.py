@@ -1,0 +1,373 @@
+"""Attention: GQA (RoPE, qk-norm, qkv-bias) and MLA (DeepSeek-V3).
+
+Three entry points per variant:
+
+* ``*_train``   — full-sequence causal (or bidirectional) attention.  Long
+  sequences use an online-softmax scan over KV chunks so the score matrix is
+  never fully materialized (chunked flash-style attention in pure JAX).
+* ``*_prefill`` — train-path forward that also returns the KV cache.
+* ``*_decode``  — one query token against a KV cache (in-place cache update).
+
+MLA caches only the compressed latent (kv_lora_rank + rope_head_dim per
+position) — the memory win that makes deepseek-v3 32k/500k serving viable.
+The default decode path *expands* the latent to full K/V per step; the
+"absorbed" variant (fold W_uk into the query head) is implemented as an
+option and studied in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import with_logical_constraint as wlc
+from .config import ModelConfig
+from .layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
+
+Params = Dict[str, Any]
+
+ATTN_CHUNK_Q = 1024  # query chunk for online-softmax attention
+ATTN_CHUNK_K = 2048  # KV chunk
+
+# Cost-model mode (launch/costmodel.py): disable chunking so attention flops
+# appear outside while-loops, where cost_analysis can count them.
+_NO_CHUNK = False
+
+# Accumulation mode (§Perf lever): "f32" casts K/V chunks to fp32 before the
+# score/AV einsums (baseline, belt-and-braces numerics); "bf16" keeps chunks
+# in bf16 and relies on preferred_element_type=f32 MXU accumulation — halves
+# attention HBM traffic with the same accumulation precision.
+_ACCUM_MODE = "bf16"  # §Perf default: bf16 chunks, f32 accum
+
+
+def set_no_chunk(flag: bool) -> None:
+    global _NO_CHUNK
+    _NO_CHUNK = flag
+
+
+def set_accum_mode(mode: str) -> None:
+    assert mode in ("f32", "bf16")
+    global _ACCUM_MODE
+    _ACCUM_MODE = mode
+
+
+def set_chunk_sizes(q: int, k: int) -> None:
+    """§Perf lever: chunk shapes trade VMEM/temp footprint against the number
+    of in-loop iterations (collectives trapped inside the chunk scans execute
+    per iteration — fewer, larger chunks shrink the collective term)."""
+    global ATTN_CHUNK_Q, ATTN_CHUNK_K
+    ATTN_CHUNK_Q, ATTN_CHUNK_K = q, k
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["wq"], a["wq"] = dense_init(ks[0], d, h * hd, None, "heads", dtype,
+                                  bias=cfg.qkv_bias)
+    p["wk"], a["wk"] = dense_init(ks[1], d, kv * hd, None, "kv_heads", dtype,
+                                  bias=cfg.qkv_bias)
+    p["wv"], a["wv"] = dense_init(ks[2], d, kv * hd, None, "kv_heads", dtype,
+                                  bias=cfg.qkv_bias)
+    p["wo"], a["wo"] = dense_init(ks[3], h * hd, d, "heads", None, dtype)
+    if cfg.qk_norm:
+        p["qnorm"], a["qnorm"] = rmsnorm_init(hd, dtype)
+        p["knorm"], a["knorm"] = rmsnorm_init(hd, dtype)
+    return p, a
+
+
+def _qkv(p, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense(p["wq"], x).reshape(B, S, h, hd)
+    k = dense(p["wk"], x).reshape(B, S, kv, hd)
+    v = dense(p["wv"], x).reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qnorm"], q, cfg.norm_eps)
+        k = rmsnorm(p["knorm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa_inner(qh, kc, vc, causal: bool, q_pos, scale: float):
+    """Online-softmax over KV chunks.  qh: (B,Sq,KV,g,D); kc/vc chunked
+    (n_chunks, B, Ck, KV, D); q_pos: (Sq,) global query positions."""
+    B, Sq, KV, groups, D = qh.shape
+    n_chunks, _, Ck, _, _ = kc.shape
+
+    def chunk_step(carry, inputs):
+        m, l, acc = carry
+        idx, kb, vb = inputs
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qh, kb,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            k_pos = idx * Ck + jnp.arange(Ck)
+            mask = q_pos[:, None] >= k_pos[None, :]            # (Sq,Ck)
+            s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new = -inf): keep exp at 0
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p_ = jnp.exp(s - m_safe[..., None])
+        p_ = jnp.where(jnp.isfinite(s), p_, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p_, axis=-1)
+        p_v = p_.astype(vb.dtype) if _ACCUM_MODE == "bf16" else p_
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p_v, vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, groups), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, groups), dtype=jnp.float32)
+    acc0 = jnp.zeros((B, Sq, KV, groups, D), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(chunk_step, (m0, l0, acc0),
+                                  (jnp.arange(n_chunks), kc, vc))
+    return acc / jnp.maximum(l[..., None], 1e-20)
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=0):
+    """Flash-style chunked attention (q and kv both chunked).
+
+    q: (B,Sq,H,D); k,v: (B,Sk,KV,D).  Never materializes more than a
+    (Cq, Ck) score block per (batch, head) — prefill_32k stays in budget.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    groups = H // KV
+    scale = 1.0 / math.sqrt(D)
+
+    nk = max(1, Sk // ATTN_CHUNK_K) if Sk % ATTN_CHUNK_K == 0 else 1
+    nq = max(1, Sq // ATTN_CHUNK_Q) if Sq % ATTN_CHUNK_Q == 0 else 1
+    if _NO_CHUNK:
+        nk = nq = 1
+    Ck = Sk // nk
+    chunk_dtype = k.dtype if _ACCUM_MODE == "bf16" else jnp.float32
+    kc = jnp.moveaxis(k.reshape(B, nk, Ck, KV, D), 1, 0).astype(chunk_dtype)
+    vc = jnp.moveaxis(v.reshape(B, nk, Ck, KV, D), 1, 0).astype(chunk_dtype)
+
+    Cq = Sq // nq
+    qh = q.reshape(B, nq, Cq, KV, groups, D)
+
+    def q_chunk(idx):
+        q_pos = q_offset + idx * Cq + jnp.arange(Cq)
+        out = _sdpa_inner(qh[:, idx], kc, vc, causal, q_pos, scale)
+        return out                                            # (B,Cq,KV,g,D)
+
+    if nq == 1:
+        out = q_chunk(0)
+        return out.reshape(B, Sq, H, D).astype(q.dtype)
+    outs = jax.lax.map(q_chunk, jnp.arange(nq))               # (nq,B,Cq,KV,g,D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def gqa_train(p, cfg: ModelConfig, x, *, causal: bool = True):
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, cfg, x, positions)
+    q = wlc(q, ("batch", None, "heads", "head_dim"))
+    k = wlc(k, ("batch", None, "kv_heads", "head_dim"))
+    out = _sdpa(q, k, v, causal=causal)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return dense(p["wo"], out)
+
+
+def gqa_prefill(p, cfg: ModelConfig, x):
+    """Returns (output, cache) — cache = (k, v) over the full prefix."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = _sdpa(q, k, v, causal=True)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return dense(p["wo"], out), {"k": k, "v": v}
+
+
+def gqa_decode(p, cfg: ModelConfig, x, cache, index):
+    """x: (B, 1, d); cache k/v: (B, S_max, KV, D); index: () current length."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), index, dtype=jnp.int32)
+    q, k_new, v_new = _qkv(p, cfg, x, positions)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, index, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, index, 0, 0))
+    k = wlc(k, ("batch", "cache_seq", "kv_heads", "head_dim"))
+    v = wlc(v, ("batch", "cache_seq", "kv_heads", "head_dim"))
+    S_max = k.shape[1]
+    groups = cfg.num_heads // cfg.num_kv_heads
+    qh = q.reshape(B, 1, cfg.num_kv_heads, groups, cfg.head_dim)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qh, k.astype(q.dtype))
+    s = s / math.sqrt(cfg.head_dim)
+    valid = jnp.arange(S_max)[None, None, None, None, :] <= index
+    s = jnp.where(valid, s, -jnp.inf)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", w, v.astype(q.dtype))
+    out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+    return dense(p["wo"], out), {"k": k, "v": v}
+
+
+def gqa_cross(p, cfg: ModelConfig, x, enc_kv):
+    """Cross-attention against precomputed encoder K/V (whisper decoder)."""
+    B, S, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense(p["wq"], x).reshape(B, S, h, hd)
+    out = _sdpa(q, enc_kv["k"], enc_kv["v"], causal=False)
+    out = out.reshape(B, S, h * hd)
+    return dense(p["wo"], out)
+
+
+def cross_kv(p, cfg: ModelConfig, enc_out):
+    B, S, _ = enc_out.shape
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = dense(p["wk"], enc_out).reshape(B, S, kv, hd)
+    v = dense(p["wv"], enc_out).reshape(B, S, kv, hd)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, deepseek-v3)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    hd, rd, vd = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 8)
+    p, a = {}, {}
+    p["wq_a"], a["wq_a"] = dense_init(ks[0], d, qr, None, None, dtype)
+    p["qnorm"], a["qnorm"] = rmsnorm_init(qr, dtype)
+    p["wq_b"], a["wq_b"] = dense_init(ks[1], qr, h * (hd + rd), None, "heads",
+                                      dtype)
+    p["wkv_a"], a["wkv_a"] = dense_init(ks[2], d, kvr + rd, None, None, dtype)
+    p["kvnorm"], a["kvnorm"] = rmsnorm_init(kvr, dtype)
+    p["wkv_b"], a["wkv_b"] = dense_init(ks[3], kvr, h * (hd + vd), None,
+                                        "heads", dtype)
+    p["wo"], a["wo"] = dense_init(ks[4], h * vd, d, "heads", None, dtype)
+    return p, a
+
+
+def _mla_q(p, cfg, x, positions):
+    B, S, _ = x.shape
+    h, hd, rd = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    q = dense(p["wq_b"], rmsnorm(p["qnorm"], dense(p["wq_a"], x),
+                                 cfg.norm_eps))
+    q = q.reshape(B, S, h, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, cfg, x, positions):
+    kvr, rd = cfg.kv_lora_rank, cfg.rope_head_dim
+    kv = dense(p["wkv_a"], x)                       # (B, S, kvr + rd)
+    c_kv = rmsnorm(p["kvnorm"], kv[..., :kvr], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., kvr:][:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _mla_expand(p, cfg, c_kv):
+    """Latent → per-head K(nope)/V. (B, S, kvr) → (B, S, H, hd)+(B, S, H, vd)."""
+    B, S, _ = c_kv.shape
+    h, hd, vd = cfg.num_heads, cfg.head_dim, cfg.v_head_dim
+    kvb = dense(p["wkv_b"], c_kv).reshape(B, S, h, hd + vd)
+    return kvb[..., :hd], kvb[..., hd:]
+
+
+def _mla_attend(cfg, q_nope, q_rope, k_nope, k_rope, v):
+    """Chunked MLA attention via effective concat heads.
+
+    q_eff = [q_nope; q_rope], k_eff = [k_nope; k_rope⊗heads]; v is padded to
+    the same head_dim so the shared _sdpa path applies (padding columns of v
+    contribute zeros and are sliced off).
+    """
+    B, Sq, H, hd = q_nope.shape
+    vd = v.shape[-1]
+    rd = q_rope.shape[-1]
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, k_rope.shape[1], H, rd))
+    q_eff = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_eff = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    D_eff = hd + rd
+    if vd < D_eff:
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, D_eff - vd)))
+    else:
+        v_pad = v
+    out = _sdpa(q_eff, k_eff, v_pad, causal=True)
+    return out[..., :vd]
+
+
+def mla_train(p, cfg: ModelConfig, x):
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_latent(p, cfg, x, positions)
+    k_nope, v = _mla_expand(p, cfg, c_kv)
+    out = _mla_attend(cfg, q_nope, q_rope, k_nope, k_rope, v)
+    out = out.reshape(B, S, cfg.num_heads * cfg.v_head_dim)
+    return dense(p["wo"], out)
+
+
+def mla_prefill(p, cfg: ModelConfig, x):
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_latent(p, cfg, x, positions)
+    k_nope, v = _mla_expand(p, cfg, c_kv)
+    out = _mla_attend(cfg, q_nope, q_rope, k_nope, k_rope, v)
+    out = out.reshape(B, S, cfg.num_heads * cfg.v_head_dim)
+    return dense(p["wo"], out), {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(p, cfg: ModelConfig, x, cache, index, *, absorbed: bool = True):
+    """MLA decode against the latent cache.
+
+    absorbed=True folds W_uk into the query (score = (q W_uk) · c_kv) and
+    attends in latent space, so per-step cost is O(S·kvr) instead of
+    O(S·H·hd) for latent expansion — the beyond-paper §Perf optimization.
+    """
+    B = x.shape[0]
+    h, hd, vd, kvr = cfg.num_heads, cfg.head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    positions = jnp.full((B, 1), index, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)          # (B,1,H,hd/rd)
+    c_new, kr_new = _mla_latent(p, cfg, x, positions)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, index, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, index, 0))
+    c_kv = wlc(c_kv, ("batch", "cache_seq", None))
+    S_max = c_kv.shape[1]
+    scale = 1.0 / math.sqrt(hd + cfg.rope_head_dim)
+
+    wkv_b = p["wkv_b"]["w"].astype(x.dtype).reshape(kvr, h, hd + vd)
+    w_uk = wkv_b[..., :hd]                                  # (kvr, H, hd)
+    w_uv = wkv_b[..., hd:]                                  # (kvr, H, vd)
+    if absorbed:
+        q_lat = jnp.einsum("bqhd,chd->bqhc", q_nope, w_uk)  # (B,1,H,kvr)
+        s = (jnp.einsum("bqhc,bsc->bhqs", q_lat, c_kv.astype(x.dtype)) +
+             jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope.astype(x.dtype)))
+    else:
+        kvb = dense(p["wkv_b"], c_kv.astype(x.dtype)).reshape(
+            B, S_max, h, hd + vd)
+        s = (jnp.einsum("bqhd,bshd->bhqs", q_nope, kvb[..., :hd]) +
+             jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope.astype(x.dtype)))
+    s = s * scale
+    valid = jnp.arange(S_max)[None, None, None, :] <= index
+    s = jnp.where(valid, s, -jnp.inf)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    if absorbed:
+        o_lat = jnp.einsum("bhqs,bsc->bqhc", w, c_kv.astype(x.dtype))
+        out = jnp.einsum("bqhc,chd->bqhd", o_lat, w_uv)      # (B,1,H,vd)
+    else:
+        out = jnp.einsum("bhqs,bshd->bqhd", w, kvb[..., hd:])
+    out = out.reshape(B, 1, h * vd)
+    return dense(p["wo"], out), {"c_kv": c_kv, "k_rope": k_rope}

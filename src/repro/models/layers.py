@@ -1,0 +1,120 @@
+"""Shared layers: param init helpers, norms, embeddings, RoPE, MLPs.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every init
+function returns ``(params, axes)`` where ``axes`` mirrors the params tree
+with tuples of *logical* axis names — the dry-run builds PartitionSpecs from
+them via :mod:`repro.sharding.axis_rules`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import with_logical_constraint as wlc
+
+Params = Dict[str, Any]
+
+
+def dense_init(key, in_dim: int, out_dim: int, in_axis: Optional[str],
+               out_axis: Optional[str], dtype, bias: bool = False,
+               fsdp_axis: Optional[str] = "fsdp", scale: float = 1.0):
+    """Linear layer params.  Weight logical axes: (in_axis|fsdp, out_axis).
+
+    FSDP: whichever of the two dims is not TP-sharded carries the `fsdp`
+    logical axis so ZeRO-3 parameter sharding composes with tensor
+    parallelism (XLA inserts the per-layer all-gathers).
+    """
+    std = scale / math.sqrt(in_dim)
+    w = jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32) * std
+    axes_in = in_axis if in_axis is not None else fsdp_axis
+    axes_out = out_axis if out_axis is not None else (
+        fsdp_axis if in_axis is not None else None)
+    p = {"w": w.astype(dtype)}
+    a = {"w": (axes_in, axes_out)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype=dtype)
+        a["b"] = (out_axis,)
+    return p, a
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(dim: int, dtype):
+    return {"scale": jnp.ones((dim,), dtype=dtype)}, {"scale": (None,)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"].astype(x.dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    e = jax.random.normal(key, (vocab, dim), dtype=jnp.float32) * 0.02
+    return {"embedding": e.astype(dtype)}, {"embedding": ("vocab", "fsdp")}
+
+
+def embed(p: Params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return p["embedding"].astype(dtype)[tokens]
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["embedding"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)                  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    y1 = x1 * cos.astype(x.dtype) - x2 * sin.astype(x.dtype)
+    y2 = x2 * cos.astype(x.dtype) + x1 * sin.astype(x.dtype)
+    return jnp.concatenate([y1, y2], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        wi, ai = dense_init(ks[0], d_model, d_ff, None, "ffn", dtype)
+        wg, ag = dense_init(ks[1], d_model, d_ff, None, "ffn", dtype)
+        wo, ao = dense_init(ks[2], d_ff, d_model, "ffn", None, dtype)
+        return ({"wi": wi, "wg": wg, "wo": wo},
+                {"wi": ai, "wg": ag, "wo": ao})
+    wi, ai = dense_init(ks[0], d_model, d_ff, None, "ffn", dtype)
+    wo, ao = dense_init(ks[2], d_ff, d_model, "ffn", None, dtype)
+    return {"wi": wi, "wo": wo}, {"wi": ai, "wo": ao}
+
+
+def mlp(p: Params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x)
+    else:
+        h = jax.nn.gelu(dense(p["wi"], x))
+    h = wlc(h, ("batch", None, "ffn"))
+    return dense(p["wo"], h)

@@ -1,0 +1,130 @@
+"""RWKV-6 (Finch) token mixer: token shift + data-dependent decay WKV.
+
+Per head (size N), with receptance r, key k, value v, decay w ∈ (0,1), bonus u:
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t vᵀ_t)
+    S_t = diag(w_t) S_{t-1} + k_t vᵀ_t
+
+The decay is *data-dependent* (the Finch contribution): w_t = exp(-exp(
+w0 + LoRA(lerp(x_t, x_{t-1})))).  Token shift mixes each projection's input
+with the previous token.  Decode carries (x_prev_att, x_prev_ffn, S).
+
+The recurrence is evaluated with a lax.scan (the chunked/parallel form is a
+§Perf candidate); channel-mix is the RWKV squared-ReLU FFN and lives in the
+stack's MLP slot so RWKV layers reuse the standard block plumbing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Params, dense, dense_init, rmsnorm_init, rmsnorm
+
+LORA_R = 64
+HEAD = 64  # rwkv6 head size
+
+
+def _dims(cfg: ModelConfig):
+    H = cfg.d_model // HEAD
+    return H, HEAD
+
+
+def rwkv6_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H, N = _dims(cfg)
+    ks = jax.random.split(key, 12)
+    p: Params = {}
+    a: Params = {}
+    for i, name in enumerate(("wr", "wk", "wv", "wg", "wo")):
+        in_ax, out_ax = ("heads", None) if name == "wo" else (None, "heads")
+        p[name], a[name] = dense_init(ks[i], d, d, in_ax, out_ax, dtype)
+    # static token-shift lerp weights per projection
+    for i, name in enumerate(("mu_r", "mu_k", "mu_v", "mu_g", "mu_w")):
+        p[name] = jnp.full((d,), 0.5, dtype)
+        a[name] = (None,)
+    # data-dependent decay LoRA
+    p["w0"] = jnp.full((d,), -0.6, jnp.float32)
+    a["w0"] = (None,)
+    p["w_lora_a"], a["w_lora_a"] = dense_init(ks[6], d, LORA_R, None, None,
+                                              dtype)
+    p["w_lora_b"], a["w_lora_b"] = dense_init(ks[7], LORA_R, d, None, None,
+                                              dtype)
+    p["u"] = jnp.zeros((H, N), jnp.float32)
+    a["u"] = ("heads", None)
+    p["ln_x"], a["ln_x"] = rmsnorm_init(d, dtype)
+    return p, a
+
+
+def _shift(x: jnp.ndarray, x_prev: jnp.ndarray) -> jnp.ndarray:
+    """Previous-token tensor: (B,S,d) with x_prev (B,1,d) as position -1."""
+    return jnp.concatenate([x_prev, x[:, :-1, :]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """r,k,v,w: (B,S,H,N); u: (H,N); state: (B,H,N,N) → (y, state)."""
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                           # (B,H,N)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)         # (B,H,N,N)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state                   # (B,S,H,N)
+
+
+def _projections(p, cfg, x, x_shift):
+    B, S, d = x.shape
+    H, N = _dims(cfg)
+
+    def lerp(mu):
+        m = p[mu].astype(x.dtype)[None, None, :]
+        return x * (1 - m) + x_shift * m
+
+    r = dense(p["wr"], lerp("mu_r")).reshape(B, S, H, N)
+    k = dense(p["wk"], lerp("mu_k")).reshape(B, S, H, N)
+    v = dense(p["wv"], lerp("mu_v")).reshape(B, S, H, N)
+    g = jax.nn.silu(dense(p["wg"], lerp("mu_g")))
+    w_in = lerp("mu_w")
+    w_raw = p["w0"][None, None, :] + dense(
+        p["w_lora_b"], jnp.tanh(dense(p["w_lora_a"], w_in))).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_raw)).reshape(B, S, H, N)       # data-dependent decay
+    return (r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w, g)
+
+
+def rwkv6_train(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    B, S, d = x.shape
+    H, N = _dims(cfg)
+    x_shift = _shift(x, jnp.zeros((B, 1, d), x.dtype))
+    r, k, v, w, g = _projections(p, cfg, x, x_shift)
+    state = jnp.zeros((B, H, N, N), jnp.float32)
+    y, _ = _wkv_scan(r, k, v, w, p["u"], state)
+    y = rmsnorm(p["ln_x"], y.reshape(B, S, d).astype(x.dtype), cfg.norm_eps)
+    return dense(p["wo"], y * g)
+
+
+def rwkv6_prefill(p: Params, cfg: ModelConfig, x: jnp.ndarray):
+    B, S, d = x.shape
+    H, N = _dims(cfg)
+    x_shift = _shift(x, jnp.zeros((B, 1, d), x.dtype))
+    r, k, v, w, g = _projections(p, cfg, x, x_shift)
+    state = jnp.zeros((B, H, N, N), jnp.float32)
+    y, state = _wkv_scan(r, k, v, w, p["u"], state)
+    y = rmsnorm(p["ln_x"], y.reshape(B, S, d).astype(x.dtype), cfg.norm_eps)
+    return dense(p["wo"], y * g), {"x_prev": x[:, -1:, :], "state": state}
+
+
+def rwkv6_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray, cache, index):
+    B, _, d = x.shape
+    H, N = _dims(cfg)
+    x_shift = cache["x_prev"]
+    r, k, v, w, g = _projections(p, cfg, x, x_shift)
+    y, state = _wkv_scan(r, k, v, w, p["u"], cache["state"])
+    y = rmsnorm(p["ln_x"], y.reshape(B, 1, d).astype(x.dtype), cfg.norm_eps)
+    return dense(p["wo"], y * g), {"x_prev": x, "state": state}

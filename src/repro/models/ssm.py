@@ -1,0 +1,221 @@
+"""Mamba2 (SSD — state space duality) token mixer.
+
+Implements the chunked SSD algorithm of Mamba2: within a chunk the recurrence
+is computed with a (Q, Q) lower-triangular decay matrix (MXU work); chunk
+boundary states propagate with a lax.scan.  Exactly equivalent to the
+per-token recurrence (tested against ``ssd_reference``).
+
+Recurrence (per head; p = head dim, n = state dim):
+
+    h_t = exp(a_t) h_{t-1} + dt_t · (B_t ⊗ x_t)        a_t = -exp(A_log)·dt_t
+    y_t = C_t · h_t + D ⊙ x_t
+
+Decode carries ``(conv_cache (B, conv-1, d_conv_in), state (B, H, p, n))``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import with_logical_constraint as wlc
+from .config import ModelConfig
+from .layers import Params, dense, dense_init, rmsnorm, rmsnorm_init
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = s.num_heads or d_in // s.head_dim
+    return d_in, nheads, s.head_dim, s.state_dim
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, P, N = _dims(cfg)
+    conv_dim = d_in + 2 * N
+    ks = jax.random.split(key, 6)
+    p: Params = {}
+    a: Params = {}
+    # in_proj → [z (d_in), xBC (d_in + 2N), dt (H)]
+    p["in_proj"], a["in_proj"] = dense_init(
+        ks[0], d, 2 * d_in + 2 * N + H, None, "heads", dtype)
+    p["conv_w"] = (jax.random.normal(ks[1], (s.conv_width, conv_dim),
+                                     jnp.float32) / s.conv_width).astype(dtype)
+    a["conv_w"] = ("conv", "heads")
+    p["conv_b"] = jnp.zeros((conv_dim,), dtype)
+    a["conv_b"] = ("heads",)
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32)
+    a["A_log"] = ("heads",)
+    p["D"] = jnp.ones((H,), jnp.float32)
+    a["D"] = ("heads",)
+    p["dt_bias"] = jnp.zeros((H,), jnp.float32)
+    a["dt_bias"] = ("heads",)
+    p["norm"], a["norm"] = rmsnorm_init(d_in, dtype)
+    p["out_proj"], a["out_proj"] = dense_init(ks[2], d_in, d, "heads", None,
+                                              dtype)
+    return p, a
+
+
+def _split_proj(cfg, proj):
+    d_in, H, P, N = _dims(cfg)
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in:2 * d_in + 2 * N]
+    dt = proj[..., 2 * d_in + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(cfg, xBC, conv_w, conv_b, cache=None):
+    """Depthwise causal conv (width K) via explicit shifts.
+
+    xBC (B, S, Cd); cache (B, K-1, Cd) holds the previous K-1 inputs.
+    Returns (out, new_cache).
+    """
+    K = cfg.ssm.conv_width
+    B, S, Cd = xBC.shape
+    if cache is None:
+        cache = jnp.zeros((B, K - 1, Cd), xBC.dtype)
+    ext = jnp.concatenate([cache, xBC], axis=1)          # (B, S+K-1, Cd)
+    out = jnp.zeros_like(xBC)
+    for i in range(K):  # static unroll; K = 4
+        out = out + ext[:, i:i + S, :] * conv_w[i][None, None, :]
+    out = jax.nn.silu(out + conv_b[None, None, :])
+    new_cache = ext[:, -(K - 1):, :]   # last K-1 raw inputs
+    return out, new_cache
+
+
+def ssd_reference(cfg: ModelConfig, xh, dt, Bm, Cm, A_log, D, state=None):
+    """Per-token recurrence oracle (slow; tests only).
+
+    xh (B,S,H,P) | dt (B,S,H) | Bm,Cm (B,S,N) | state (B,H,P,N)
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    A = -jnp.exp(A_log)                                   # (H,)
+    if state is None:
+        state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(A[None, :] * dt_t)                # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", x_t * dt_t[..., None], b_t)
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0), jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xh.astype(jnp.float32) * D[None, None, :, None]
+    return y, state
+
+
+def ssd_chunked(cfg: ModelConfig, xh, dt, Bm, Cm, A_log, D, state=None):
+    """Chunked SSD — same I/O contract as :func:`ssd_reference`."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = cfg.ssm.chunk
+    if S % Q != 0:
+        Q = S  # degenerate single chunk (smoke tests with tiny seq)
+    nC = S // Q
+    A = -jnp.exp(A_log)
+
+    xh = xh.astype(jnp.float32).reshape(B, nC, Q, H, P)
+    dtc = dt.reshape(B, nC, Q, H)
+    Bc = Bm.astype(jnp.float32).reshape(B, nC, Q, N)
+    Cc = Cm.astype(jnp.float32).reshape(B, nC, Q, N)
+
+    a = A[None, None, None, :] * dtc                       # (B,nC,Q,H) ≤ 0
+    cum = jnp.cumsum(a, axis=2)                            # inclusive
+    # intra-chunk: M[t,s] = C_t·B_s · exp(cum_t - cum_s) · dt_s   (s ≤ t)
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)             # (B,nC,Q,Q)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nC,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: diff > 0 above the diagonal would overflow and poison
+    # the gradient of the untaken where-branch (NaN via inf·0)
+    diff = jnp.where(tri[None, None, :, :, None], diff, -jnp.inf)
+    decay = jnp.exp(diff)
+    M = cb[..., None] * decay * dtc[:, :, None, :, :]      # (B,nC,Q,Q,H)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", M, xh)
+
+    # chunk summary state: S_c = Σ_s exp(cum_Q - cum_s) dt_s B_s ⊗ x_s
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                # (B,nC,Q,H)
+    Ssum = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                      tail * dtc, Bc, xh)                  # (B,nC,H,P,N)
+    chunk_decay = jnp.exp(jnp.sum(a, axis=2))              # (B,nC,H)
+
+    if state is None:
+        state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def boundary(h, inp):
+        s_c, dec = inp                                     # (B,H,P,N), (B,H)
+        h_next = h * dec[..., None, None] + s_c
+        return h_next, h                                   # emit state BEFORE chunk
+
+    final_state, hs = jax.lax.scan(
+        boundary, state,
+        (jnp.moveaxis(Ssum, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(hs, 0, 1)                        # (B,nC,H,P,N)
+
+    # inter-chunk: y_t += C_t · (exp(cum_t) h_prev)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Cc, jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + xh.reshape(B, S, H, P) * D[None, None, :, None]
+    return y, final_state
+
+
+def mamba2_train(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    d_in, H, P, N = _dims(cfg)
+    proj = dense(p["in_proj"], x)
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC, _ = _causal_conv(cfg, xBC, p["conv_w"].astype(x.dtype),
+                          p["conv_b"].astype(x.dtype))
+    xh = xBC[..., :d_in].reshape(*x.shape[:2], H, P)
+    Bm = xBC[..., d_in:d_in + N]
+    Cm = xBC[..., d_in + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    y, _ = ssd_chunked(cfg, xh, dt, Bm, Cm, p["A_log"], p["D"])
+    y = y.reshape(*x.shape[:2], d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(p["out_proj"], y)
+
+
+def mamba2_prefill(p: Params, cfg: ModelConfig, x: jnp.ndarray):
+    d_in, H, P, N = _dims(cfg)
+    proj = dense(p["in_proj"], x)
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC_c, conv_cache = _causal_conv(cfg, xBC, p["conv_w"].astype(x.dtype),
+                                     p["conv_b"].astype(x.dtype))
+    xh = xBC_c[..., :d_in].reshape(*x.shape[:2], H, P)
+    Bm = xBC_c[..., d_in:d_in + N]
+    Cm = xBC_c[..., d_in + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    y, state = ssd_chunked(cfg, xh, dt, Bm, Cm, p["A_log"], p["D"])
+    y = y.reshape(*x.shape[:2], d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(p["out_proj"], y), {"conv": conv_cache, "state": state}
+
+
+def mamba2_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray, cache, index):
+    """Single-token state update.  x: (B, 1, d)."""
+    d_in, H, P, N = _dims(cfg)
+    B = x.shape[0]
+    proj = dense(p["in_proj"], x)
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC, conv_cache = _causal_conv(cfg, xBC, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype),
+                                   cache=cache["conv"])
+    xh = xBC[..., :d_in].reshape(B, 1, H, P)
+    Bm = xBC[..., d_in:d_in + N]
+    Cm = xBC[..., d_in + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    y, state = ssd_reference(cfg, xh, dt, Bm, Cm, p["A_log"], p["D"],
+                             state=cache["state"])
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(p["out_proj"], y), {"conv": conv_cache, "state": state}

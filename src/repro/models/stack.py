@@ -1,0 +1,458 @@
+"""The composable decoder (and encoder-decoder) stack.
+
+One code path serves all ten assigned architectures, driven by ModelConfig:
+layers are grouped into *segments* of identical (mixer kind, is_moe) so each
+segment scans over stacked parameters (compile-time O(#segments), not
+O(#layers)); Zamba2's shared attention block has a single parameter set
+invoked at many depths; Whisper adds a bidirectional encoder + cross
+attention; stub frontends prepend precomputed embeddings.
+
+Public API:
+    init_params(cfg, key)                       -> (params, axes)
+    forward_train(params, cfg, batch)           -> (logits, aux_loss)
+    prefill(params, cfg, batch)                 -> (logits, caches)
+    decode_step(params, cfg, token, caches, i)  -> (logits, caches)
+    input_specs(cfg, shape)                     -> ShapeDtypeStructs (launch/)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import with_logical_constraint as wlc
+from . import attention as attn
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .config import ATTN, MAMBA2, RWKV6, SHARED_ATTN, ModelConfig
+from .layers import (Params, dense, dense_init, embed, embed_init, mlp,
+                     mlp_init, rmsnorm, rmsnorm_init, unembed)
+
+
+# ---------------------------------------------------------------------------
+# axes helpers (axes trees mirror params trees; leaves are tuples of names)
+# ---------------------------------------------------------------------------
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def prefix_axes(axes, prefix=None):
+    """Prepend a logical axis (the stacked-layer dim) to every axes leaf."""
+    if _is_axes_leaf(axes):
+        return (prefix,) + axes
+    if isinstance(axes, dict):
+        return {k: prefix_axes(v, prefix) for k, v in axes.items()}
+    if isinstance(axes, (list, tuple)):
+        return type(axes)(prefix_axes(v, prefix) for v in axes)
+    raise TypeError(f"bad axes node {axes!r}")
+
+
+# ---------------------------------------------------------------------------
+# per-layer block
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ModelConfig, kind: str, is_moe: bool, dtype,
+                cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p: Params = {}
+    a: Params = {}
+    p["ln1"], a["ln1"] = rmsnorm_init(cfg.d_model, dtype)
+    if kind in (ATTN, SHARED_ATTN):
+        if cfg.attention == "mla":
+            p["mixer"], a["mixer"] = attn.mla_init(ks[0], cfg, dtype)
+        else:
+            p["mixer"], a["mixer"] = attn.gqa_init(ks[0], cfg, dtype)
+    elif kind == MAMBA2:
+        p["mixer"], a["mixer"] = ssm_mod.mamba2_init(ks[0], cfg, dtype)
+    elif kind == RWKV6:
+        p["mixer"], a["mixer"] = rwkv_mod.rwkv6_init(ks[0], cfg, dtype)
+    if cross:
+        p["ln_cross"], a["ln_cross"] = rmsnorm_init(cfg.d_model, dtype)
+        p["cross"], a["cross"] = attn.gqa_init(ks[1], cfg, dtype)
+    # MLP slot: attention blocks get a dense MLP or MoE; mamba blocks are
+    # mixer-only; rwkv blocks use the squared-relu channel mix.
+    if kind in (ATTN, SHARED_ATTN):
+        p["ln2"], a["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        if is_moe:
+            p["moe"], a["moe"] = moe_mod.moe_init(ks[2], cfg, dtype)
+        else:
+            p["mlp"], a["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff,
+                                          cfg.mlp, dtype)
+    elif kind == RWKV6:
+        p["ln2"], a["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["cmix_k"], a["cmix_k"] = dense_init(ks[3], cfg.d_model, cfg.d_ff,
+                                              None, "ffn", dtype)
+        p["cmix_v"], a["cmix_v"] = dense_init(ks[4], cfg.d_ff, cfg.d_model,
+                                              "ffn", None, dtype)
+        p["cmix_r"], a["cmix_r"] = dense_init(ks[5], cfg.d_model, cfg.d_model,
+                                              None, None, dtype)
+        p["mu_ck"] = jnp.full((cfg.d_model,), 0.5, dtype)
+        a["mu_ck"] = (None,)
+        p["mu_cr"] = jnp.full((cfg.d_model,), 0.5, dtype)
+        a["mu_cr"] = (None,)
+    return p, a
+
+
+def _channel_mix(p, cfg, x, x_prev):
+    """RWKV squared-relu channel mix with token shift."""
+    shifted = rwkv_mod._shift(x, x_prev)
+    mk = p["mu_ck"].astype(x.dtype)[None, None, :]
+    mr = p["mu_cr"].astype(x.dtype)[None, None, :]
+    xk = x * (1 - mk) + shifted * mk
+    xr = x * (1 - mr) + shifted * mr
+    k = jnp.square(jax.nn.relu(dense(p["cmix_k"], xk)))
+    return jax.nn.sigmoid(dense(p["cmix_r"], xr)) * dense(p["cmix_v"], k)
+
+
+def _block_train(p, cfg: ModelConfig, kind: str, is_moe: bool, x,
+                 enc_out=None, causal: bool = True):
+    """Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in (ATTN, SHARED_ATTN):
+        if cfg.attention == "mla":
+            mix = attn.mla_train(p["mixer"], cfg, h)
+        else:
+            mix = attn.gqa_train(p["mixer"], cfg, h, causal=causal)
+    elif kind == MAMBA2:
+        mix = ssm_mod.mamba2_train(p["mixer"], cfg, h)
+    elif kind == RWKV6:
+        mix = rwkv_mod.rwkv6_train(p["mixer"], cfg, h)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    if "cross" in p and enc_out is not None:
+        h = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        enc_kv = attn.cross_kv(p["cross"], cfg, enc_out)
+        x = x + attn.gqa_cross(p["cross"], cfg, h, enc_kv)
+    if "moe" in p:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        y, aux = moe_mod.moe_apply(p["moe"], cfg, h)
+        x = x + y
+    elif "mlp" in p:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h, cfg.mlp)
+    elif kind == RWKV6:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        B, _, d = x.shape
+        x = x + _channel_mix(p, cfg, h, jnp.zeros((B, 1, d), x.dtype))
+    x = wlc(x, ("batch", "seq", "d_model"))
+    return x, aux
+
+
+def _block_prefill(p, cfg, kind, is_moe, x, enc_out=None):
+    """Returns (x, aux, cache)."""
+    cache: Dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in (ATTN, SHARED_ATTN):
+        if cfg.attention == "mla":
+            mix, c = attn.mla_prefill(p["mixer"], cfg, h)
+        else:
+            mix, c = attn.gqa_prefill(p["mixer"], cfg, h)
+        cache["mixer"] = c
+    elif kind == MAMBA2:
+        mix, c = ssm_mod.mamba2_prefill(p["mixer"], cfg, h)
+        cache["mixer"] = c
+    elif kind == RWKV6:
+        mix, c = rwkv_mod.rwkv6_prefill(p["mixer"], cfg, h)
+        cache["mixer"] = c
+    x = x + mix
+    if "cross" in p and enc_out is not None:
+        h = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        enc_kv = attn.cross_kv(p["cross"], cfg, enc_out)
+        cache["cross_kv"] = enc_kv
+        x = x + attn.gqa_cross(p["cross"], cfg, h, enc_kv)
+    if "moe" in p:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        y, aux = moe_mod.moe_apply(p["moe"], cfg, h)
+        x = x + y
+    elif "mlp" in p:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h, cfg.mlp)
+    elif kind == RWKV6:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        B, _, d = x.shape
+        x = x + _channel_mix(p, cfg, h, jnp.zeros((B, 1, d), x.dtype))
+        cache["cmix_x_prev"] = h[:, -1:, :]
+    return x, aux, cache
+
+
+def _block_decode(p, cfg, kind, is_moe, x, cache, index):
+    """x: (B, 1, d).  Returns (x, cache)."""
+    new_cache = dict(cache)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in (ATTN, SHARED_ATTN):
+        if cfg.attention == "mla":
+            mix, c = attn.mla_decode(p["mixer"], cfg, h, cache["mixer"], index)
+        else:
+            mix, c = attn.gqa_decode(p["mixer"], cfg, h, cache["mixer"], index)
+        new_cache["mixer"] = c
+    elif kind == MAMBA2:
+        mix, c = ssm_mod.mamba2_decode(p["mixer"], cfg, h, cache["mixer"],
+                                       index)
+        new_cache["mixer"] = c
+    elif kind == RWKV6:
+        mix, c = rwkv_mod.rwkv6_decode(p["mixer"], cfg, h, cache["mixer"],
+                                       index)
+        new_cache["mixer"] = c
+    x = x + mix
+    if "cross" in p and "cross_kv" in cache:
+        h = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attn.gqa_cross(p["cross"], cfg, h, cache["cross_kv"])
+    if "moe" in p:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        y, _ = moe_mod.moe_apply(p["moe"], cfg, h)
+        x = x + y
+    elif "mlp" in p:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h, cfg.mlp)
+    elif kind == RWKV6:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + _channel_mix(p, cfg, h, cache["cmix_x_prev"])
+        new_cache["cmix_x_prev"] = h
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stack init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 16)
+    p: Params = {}
+    a: Params = {}
+    p["embed"], a["embed"] = embed_init(keys[0], cfg.padded_vocab,
+                                        cfg.d_model, dtype)
+    segs = cfg.segments()
+    seg_params: List[Any] = []
+    seg_axes: List[Any] = []
+    seg_keys = jax.random.split(keys[1], len(segs))
+    for si, (kind, is_moe, count) in enumerate(segs):
+        if kind == SHARED_ATTN:
+            seg_params.append({})   # weights live in p["shared_block"]
+            seg_axes.append({})
+            continue
+        lkeys = jax.random.split(seg_keys[si], count)
+        _, ax = _block_init(lkeys[0], cfg, kind, is_moe, dtype,
+                            cross=cfg.cross_attention)
+        stacked = jax.vmap(
+            lambda k: _block_init(k, cfg, kind, is_moe, dtype,
+                                  cross=cfg.cross_attention)[0])(lkeys)
+        seg_params.append(stacked)
+        seg_axes.append(prefix_axes(ax, None))
+    p["segments"] = seg_params
+    a["segments"] = seg_axes
+    if cfg.shared_attn_every:
+        p["shared_block"], a["shared_block"] = _block_init(
+            keys[2], cfg, SHARED_ATTN, False, dtype)
+    p["final_norm"], a["final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"], a["lm_head"] = dense_init(
+            keys[3], cfg.d_model, cfg.padded_vocab, None, "vocab", dtype)
+    if cfg.encoder_layers:
+        ek = jax.random.split(keys[4], cfg.encoder_layers)
+        _, ax = _block_init(ek[0], cfg, ATTN, False, dtype)
+        stacked = jax.vmap(
+            lambda k: _block_init(k, cfg, ATTN, False, dtype)[0])(ek)
+        p["encoder"] = {"blocks": stacked}
+        a["encoder"] = {"blocks": prefix_axes(ax, None)}
+        p["encoder"]["final_norm"], a["encoder"]["final_norm"] = \
+            rmsnorm_init(cfg.d_model, dtype)
+    if cfg.frontend == "vision_stub":
+        p["frontend_proj"], a["frontend_proj"] = dense_init(
+            keys[5], cfg.frontend_dim, cfg.d_model, None, None, dtype)
+    if cfg.mtp_depth:
+        p["mtp"] = {}
+        a["mtp"] = {}
+        p["mtp"]["proj"], a["mtp"]["proj"] = dense_init(
+            keys[6], 2 * cfg.d_model, cfg.d_model, None, None, dtype)
+        p["mtp"]["block"], a["mtp"]["block"] = _block_init(
+            keys[7], cfg, ATTN, False, dtype)
+        p["mtp"]["norm"], a["mtp"]["norm"] = rmsnorm_init(cfg.d_model, dtype)
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _layer_slice(stacked_params, i: int):
+    return jax.tree.map(lambda x: x[i], stacked_params)
+
+
+def _scan_segment(fn, x, stacked_params, remat: bool, count: int,
+                  scan: bool = True):
+    """Scan a homogeneous segment; fn(params_i, x) -> (x, aux).
+
+    ``scan=False`` unrolls (used by the cost model: XLA's cost_analysis
+    counts a while-loop body once, so the roofline extrapolates from small
+    unrolled variants — launch/costmodel.py).
+    """
+    body = jax.checkpoint(fn) if remat else fn
+
+    if not scan:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(count):
+            x, a = body(_layer_slice(stacked_params, i), x)
+            aux = aux + a
+        return x, aux
+
+    def step(carry, lp):
+        x, aux = carry
+        x, a = body(lp, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                               stacked_params)
+    return x, aux
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    dtype = cfg.activation_dtype
+    x = embed(params["embed"], batch["tokens"], dtype)
+    if cfg.frontend == "vision_stub":
+        vis = dense(params["frontend_proj"], batch["patches"].astype(dtype))
+        x = jnp.concatenate([vis, x], axis=1)
+    x = wlc(x, ("batch", "seq", "d_model"))
+    return x
+
+
+def _run_encoder(params, cfg: ModelConfig, frames) -> jnp.ndarray:
+    x = frames.astype(cfg.activation_dtype)
+
+    def f(lp, h):
+        return _block_train(lp, cfg, ATTN, False, h, causal=False)
+
+    x, _ = _scan_segment(f, x, params["encoder"]["blocks"], cfg.remat,
+                         cfg.encoder_layers, scan=cfg.scan_layers)
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _logits(params, cfg: ModelConfig, x) -> jnp.ndarray:
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["lm_head"], x)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask pad columns so softmax/argmax semantics are unchanged while
+        # the logits stay shardable over `model`
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col[None, None, :] < cfg.vocab_size, logits,
+                           jnp.asarray(-1e9, logits.dtype))
+    return wlc(logits, ("batch", "seq", "vocab"))
+
+
+def forward_train(params, cfg: ModelConfig, batch
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """batch: {tokens (B,S), [patches|frames]} → (logits (B,S*,V), aux)."""
+    x = _embed_inputs(params, cfg, batch)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _run_encoder(params, cfg, batch["frames"])
+    aux_total = jnp.zeros((), jnp.float32)
+    segs = cfg.segments()
+    for sp, (kind, is_moe, count) in zip(params["segments"], segs):
+        if kind == SHARED_ATTN:
+            x, aux = _block_train(params["shared_block"], cfg, SHARED_ATTN,
+                                  False, x, enc_out=enc_out)
+        else:
+            def f(lp, h, _kind=kind, _moe=is_moe):
+                return _block_train(lp, cfg, _kind, _moe, h, enc_out=enc_out)
+            x, aux = _scan_segment(f, x, sp, cfg.remat, count,
+                                   scan=cfg.scan_layers)
+        aux_total = aux_total + aux
+    logits = _logits(params, cfg, x)
+
+    if cfg.mtp_depth and "mtp" in params:
+        # multi-token prediction: combine h_t with emb(token_{t+1}) and run
+        # one extra block to predict token_{t+2} (dsv3 §MTP, depth 1).
+        emb_next = embed(params["embed"], batch["tokens"], x.dtype)
+        emb_next = jnp.roll(emb_next, -1, axis=1)
+        if cfg.frontend == "vision_stub":
+            pad = x.shape[1] - emb_next.shape[1]
+            emb_next = jnp.pad(emb_next, ((0, 0), (pad, 0), (0, 0)))
+        h = dense(params["mtp"]["proj"],
+                  jnp.concatenate([x, emb_next], axis=-1))
+        h, _ = _block_train(params["mtp"]["block"], cfg, ATTN, False, h)
+        h = rmsnorm(params["mtp"]["norm"], h, cfg.norm_eps)
+        mtp_logits = _logits(params, cfg, h)
+        return logits, aux_total, mtp_logits
+    return logits, aux_total, None
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    """Full-prefix forward building decode caches.
+
+    Returns (logits (B, S, V), caches).
+    """
+    x = _embed_inputs(params, cfg, batch)
+    enc_out = None
+    caches: Dict[str, Any] = {"index": x.shape[1], "segments": []}
+    if cfg.encoder_layers:
+        enc_out = _run_encoder(params, cfg, batch["frames"])
+    segs = cfg.segments()
+    aux = jnp.zeros((), jnp.float32)
+    for sp, (kind, is_moe, count) in zip(params["segments"], segs):
+        if kind == SHARED_ATTN:
+            x, _, c = _block_prefill(params["shared_block"], cfg, SHARED_ATTN,
+                                     False, x, enc_out=enc_out)
+            caches["segments"].append(c)
+        else:
+            def f(h, lp, _kind=kind, _moe=is_moe):
+                h, a, c = _block_prefill(lp, cfg, _kind, _moe, h,
+                                         enc_out=enc_out)
+                return h, c
+            if cfg.scan_layers:
+                x, cs = jax.lax.scan(f, x, sp)
+            else:
+                outs = []
+                for i in range(count):
+                    x, c = f(x, _layer_slice(sp, i))
+                    outs.append(c)
+                cs = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+            caches["segments"].append(cs)
+    return _logits(params, cfg, x), caches
+
+
+def decode_step(params, cfg: ModelConfig, token: jnp.ndarray, caches,
+                index) -> Tuple[jnp.ndarray, Any]:
+    """token (B, 1) int32; index: scalar current position. → (logits, caches)."""
+    dtype = cfg.activation_dtype
+    x = embed(params["embed"], token, dtype)
+    segs = cfg.segments()
+    new_caches = {"index": index + 1, "segments": []}
+    for sp, c, (kind, is_moe, count) in zip(params["segments"],
+                                            caches["segments"], segs):
+        if kind == SHARED_ATTN:
+            x, nc = _block_decode(params["shared_block"], cfg, SHARED_ATTN,
+                                  False, x, c, index)
+            new_caches["segments"].append(nc)
+        else:
+            def f(h, xs, _kind=kind, _moe=is_moe):
+                lp, lc = xs
+                h, nc = _block_decode(lp, cfg, _kind, _moe, h, lc, index)
+                return h, nc
+            if cfg.scan_layers:
+                x, ncs = jax.lax.scan(f, x, (sp, c))
+            else:
+                outs = []
+                for i in range(count):
+                    x, nc = f(x, (_layer_slice(sp, i), _layer_slice(c, i)))
+                    outs.append(nc)
+                ncs = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+            new_caches["segments"].append(ncs)
+    logits = _logits(params, cfg, x)
+    return logits[:, 0, :], new_caches

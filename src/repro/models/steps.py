@@ -1,0 +1,192 @@
+"""train_step / serve_step — the functions the launcher lowers and compiles.
+
+``train_step`` is a full AdamW step (fwd + bwd + clip + update) with optional
+int8 gradient compression on the DP all-reduce path.  ``serve_step`` is one
+decode step against a KV/state cache (``decode_*``/``long_*`` shapes lower
+this, not train_step).  ``prefill_step`` builds the cache for a prompt.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import (AdamWConfig, adamw_init, adamw_update,
+                     compress_gradients, decompress_gradients)
+from ..sharding import with_logical_constraint as wlc
+from .config import ModelConfig
+from .stack import decode_step as _decode
+from .stack import forward_train, init_params, prefill
+
+MTP_WEIGHT = 0.1
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.mean(ll)
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux, mtp_logits = forward_train(params, cfg, batch)
+    tokens = batch["tokens"]
+    S_tok = tokens.shape[1]
+    # frontends prepend a prefix; loss applies to the token region only
+    logits_tok = logits[:, -S_tok:, :]
+    loss = cross_entropy(logits_tok[:, :-1], tokens[:, 1:])
+    metrics = {"ce": loss, "aux": aux}
+    loss = loss + aux
+    if mtp_logits is not None:
+        mtp_tok = mtp_logits[:, -S_tok:, :]
+        # MTP depth-1 predicts token t+2 from position t
+        mtp_loss = cross_entropy(mtp_tok[:, :-2], tokens[:, 2:])
+        metrics["mtp"] = mtp_loss
+        loss = loss + MTP_WEIGHT * mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    compress: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", "err"?}.  Gradient compression (int8 + error
+    feedback) applies between backward and the optimizer; under pjit the DP
+    all-reduce then moves int8 wire data (8× collective-term reduction).
+    """
+
+    def train_step(state, batch):
+        params = state["params"]
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+        if compress:
+            compressed, err = compress_gradients(grads, state.get("err"))
+            grads = decompress_gradients(compressed)
+            state = dict(state, err=err)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], opt_cfg)
+        metrics.update(opt_metrics)
+        return dict(state, params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key,
+                     compress: bool = False) -> Tuple[Dict, Dict]:
+    """Returns (state, axes) — axes mirror state for sharding-spec building."""
+    params, axes = init_params(cfg, key)
+    state = {"params": params, "opt": adamw_init(params, opt_cfg)}
+    state_axes = {"params": axes,
+                  "opt": {"mu": axes, "nu": axes, "step": ()}}
+    if compress:
+        state["err"] = jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+        state_axes["err"] = axes
+    return state, state_axes
+
+
+def make_serve_step(cfg: ModelConfig):
+    """Returns serve_step(params, token, caches, index) -> (logits, caches)."""
+
+    def serve_step(params, token, caches, index):
+        return _decode(params, cfg, token, caches, index)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# decode-cache specs (for the dry-run: allocate caches at target length)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int,
+                       dtype=None) -> Tuple[Any, Any]:
+    """Build zeroed caches (and their logical axes) for decode at seq_len."""
+    dtype = dtype or cfg.activation_dtype
+    segs = cfg.segments()
+    caches = {"index": jnp.zeros((), jnp.int32), "segments": []}
+    axes = {"index": (), "segments": []}
+
+    def attn_cache(stacked: Optional[int]):
+        lead = (stacked,) if stacked else ()
+        lax = (None,) if stacked else ()
+        if cfg.attention == "mla":
+            c = {"c_kv": jnp.zeros(lead + (batch, seq_len, cfg.kv_lora_rank),
+                                   dtype),
+                 "k_rope": jnp.zeros(lead + (batch, seq_len,
+                                             cfg.rope_head_dim), dtype)}
+            a = {"c_kv": lax + ("batch", "cache_seq", None),
+                 "k_rope": lax + ("batch", "cache_seq", None)}
+        else:
+            kv, hd = cfg.num_kv_heads, cfg.head_dim
+            c = {"k": jnp.zeros(lead + (batch, seq_len, kv, hd), dtype),
+                 "v": jnp.zeros(lead + (batch, seq_len, kv, hd), dtype)}
+            a = {"k": lax + ("batch", "cache_seq", "kv_heads", "head_dim"),
+                 "v": lax + ("batch", "cache_seq", "kv_heads", "head_dim")}
+        return c, a
+
+    def mamba_cache(stacked: Optional[int]):
+        from .ssm import _dims
+        d_in, H, P, N = _dims(cfg)
+        K = cfg.ssm.conv_width
+        lead = (stacked,) if stacked else ()
+        lax = (None,) if stacked else ()
+        c = {"conv": jnp.zeros(lead + (batch, K - 1, d_in + 2 * N), dtype),
+             "state": jnp.zeros(lead + (batch, H, P, N), jnp.float32)}
+        a = {"conv": lax + ("batch", None, "heads"),
+             "state": lax + ("batch", "heads", None, "states")}
+        return c, a
+
+    def rwkv_cache(stacked: Optional[int]):
+        H, N = cfg.d_model // 64, 64
+        lead = (stacked,) if stacked else ()
+        lax = (None,) if stacked else ()
+        c = {"mixer": {"x_prev": jnp.zeros(lead + (batch, 1, cfg.d_model),
+                                           dtype),
+                       "state": jnp.zeros(lead + (batch, H, N, N),
+                                          jnp.float32)},
+             "cmix_x_prev": jnp.zeros(lead + (batch, 1, cfg.d_model), dtype)}
+        a = {"mixer": {"x_prev": lax + ("batch", None, None),
+                       "state": lax + ("batch", "heads", None, "states")},
+             "cmix_x_prev": lax + ("batch", None, None)}
+        return c, a
+
+    for kind, is_moe, count in segs:
+        stacked = None if kind == "shared_attn" else count
+        if kind in ("attn", "shared_attn"):
+            c, a = attn_cache(stacked)
+            entry, entry_ax = {"mixer": c}, {"mixer": a}
+            if cfg.cross_attention:
+                kvh = {"k": jnp.zeros(
+                    ((stacked,) if stacked else ()) +
+                    (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim),
+                    dtype)}
+                kvh["v"] = kvh["k"]
+                entry["cross_kv"] = kvh
+                lax = (None,) if stacked else ()
+                entry_ax["cross_kv"] = {
+                    "k": lax + ("batch", None, "kv_heads", "head_dim"),
+                    "v": lax + ("batch", None, "kv_heads", "head_dim")}
+        elif kind == "mamba2":
+            c, a = mamba_cache(stacked)
+            entry, entry_ax = {"mixer": c}, {"mixer": a}
+        elif kind == "rwkv6":
+            entry, entry_ax = rwkv_cache(stacked)
+        else:
+            raise ValueError(kind)
+        caches["segments"].append(entry)
+        axes["segments"].append(entry_ax)
+    return caches, axes

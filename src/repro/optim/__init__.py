@@ -1,0 +1,6 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update, cosine_schedule,
+                    global_norm)
+from .compression import compress_gradients, decompress_gradients
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "compress_gradients", "decompress_gradients"]

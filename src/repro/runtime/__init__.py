@@ -1,0 +1,6 @@
+from .fault_tolerance import (HeartbeatMonitor, RetryPolicy, StepTimer,
+                              run_with_retries)
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["HeartbeatMonitor", "RetryPolicy", "StepTimer", "run_with_retries",
+           "Trainer", "TrainerConfig"]

@@ -1,0 +1,111 @@
+"""Fault-tolerant training loop (crash-only design).
+
+The Trainer wires together: deterministic data pipeline (resume = replay by
+step index), checkpoint manager (atomic/async/elastic), retry policy
+(transient failures retried, persistent ones restore-from-checkpoint),
+heartbeat watchdog and straggler timing.  The same loop drives the CPU
+integration tests and the real launcher (`repro.launch.train`).
+
+A CER hook can be attached: per-step scalar metrics are emitted as events
+into a CORE engine, so CEQL queries run as *training monitors* (e.g. detect
+"3 consecutive loss spikes within 100 steps" — the paper's technique applied
+to the training plane; see examples/monitored_training.py).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..core.events import Event
+from .fault_tolerance import (HeartbeatMonitor, RetryPolicy, StepTimer,
+                              run_with_retries)
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+    heartbeat_timeout_s: float = 600.0
+    max_restores: int = 2
+
+
+class Trainer:
+    def __init__(self, step_fn: Callable, state: Any, data: Any,
+                 cfg: TrainerConfig,
+                 monitors: Optional[List] = None,
+                 retry: Optional[RetryPolicy] = None):
+        self.step_fn = step_fn
+        self.state = state
+        self.data = data
+        self.cfg = cfg
+        self.ckpt = CheckpointManager(cfg.checkpoint_dir,
+                                      keep=cfg.keep_checkpoints)
+        self.retry = retry or RetryPolicy()
+        self.timer = StepTimer()
+        self.monitors = monitors or []   # CER executors over metric events
+        self.metrics_log: List[Dict] = []
+        self.matches: List = []
+        self.restores = 0
+
+    # ------------------------------------------------------------------
+    def _emit_metrics_event(self, step: int, metrics: Dict) -> None:
+        ev = Event("STEP", {k: float(v) for k, v in metrics.items()},
+                   position=step, timestamp=float(step))
+        for mon in self.monitors:
+            for ce in mon.process(ev):
+                self.matches.append((step, ce))
+
+    def _restore(self, start_step: int) -> int:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return start_step
+        self.state, extra = self.ckpt.restore(self.state)
+        return int(extra.get("next_step", latest + 1))
+
+    # ------------------------------------------------------------------
+    def run(self, start_step: int = 0, resume: bool = False) -> Dict:
+        step = self._restore(start_step) if resume else start_step
+        hb = HeartbeatMonitor(timeout_s=self.cfg.heartbeat_timeout_s).start()
+        try:
+            while step < self.cfg.total_steps:
+                batch = self.data.batch_at(step)
+                try:
+                    with self.timer:
+                        self.state, metrics = run_with_retries(
+                            self.step_fn, self.retry, self.state, batch)
+                except self.retry.retryable:
+                    # persistent failure: crash-only restart from checkpoint
+                    if self.restores >= self.cfg.max_restores:
+                        raise
+                    self.restores += 1
+                    step = self._restore(step)
+                    continue
+                metrics = {k: np.asarray(v) for k, v in metrics.items()}
+                self.metrics_log.append({"step": step, **{
+                    k: float(v) for k, v in metrics.items()}})
+                self._emit_metrics_event(step, metrics)
+                hb.beat()
+                step += 1
+                if step % self.cfg.checkpoint_every == 0:
+                    self.ckpt.save(step, self.state,
+                                   blocking=not self.cfg.async_checkpoint,
+                                   extra={"next_step": step})
+            self.ckpt.save(self.cfg.total_steps, self.state, blocking=True,
+                           extra={"next_step": self.cfg.total_steps})
+        finally:
+            hb.stop()
+            self.ckpt.wait()
+        return {"final_step": step,
+                "median_step_time": self.timer.median,
+                "stragglers": list(self.timer.stragglers),
+                "restores": self.restores,
+                "monitor_matches": len(self.matches)}

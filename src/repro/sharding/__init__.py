@@ -1,0 +1,7 @@
+from .axis_rules import (DECODE_RULES, LONG_DECODE_RULES, TRAIN_RULES,
+                         AxisRules, current_rules, logical_spec, set_rules,
+                         with_logical_constraint)
+
+__all__ = ["AxisRules", "current_rules", "logical_spec", "set_rules",
+           "with_logical_constraint", "TRAIN_RULES", "DECODE_RULES",
+           "LONG_DECODE_RULES"]

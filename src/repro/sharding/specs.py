@@ -1,0 +1,49 @@
+"""Build parameter/state PartitionSpec trees from logical-axes trees."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .axis_rules import AxisRules, divisible_spec
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def spec_tree(axes_tree: Any, rules: AxisRules) -> Any:
+    """axes tree (tuples of logical names) → PartitionSpec tree."""
+    if _is_axes_leaf(axes_tree):
+        return rules.spec(axes_tree)
+    if isinstance(axes_tree, dict):
+        return {k: spec_tree(v, rules) for k, v in axes_tree.items()}
+    if isinstance(axes_tree, (list, tuple)):
+        return type(axes_tree)(spec_tree(v, rules) for v in axes_tree)
+    raise TypeError(f"bad axes node {axes_tree!r}")
+
+
+def sharding_tree(params: Any, axes_tree: Any, rules: AxisRules, mesh: Mesh
+                  ) -> Any:
+    """Matched (params, axes) trees → NamedSharding tree with divisibility
+    checks against concrete shapes (drops non-dividing axes per dim)."""
+    sizes = {a: int(s) for a, s in zip(mesh.axis_names,
+                                       np.shape(mesh.devices))}
+
+    def go(p, a):
+        if _is_axes_leaf(a):
+            spec = rules.spec(a)
+            shape = tuple(getattr(p, 'shape', np.shape(p)))
+            spec = divisible_spec(spec, shape, sizes)
+            return NamedSharding(mesh, spec)
+        if isinstance(a, dict):
+            return {k: go(p[k], a[k]) for k in a}
+        if isinstance(a, (list, tuple)):
+            return type(a)(go(pp, aa) for pp, aa in zip(p, a))
+        raise TypeError(f"bad axes node {a!r}")
+
+    return go(params, axes_tree)

@@ -1,0 +1,7 @@
+"""Device (TPU-native) CER engine: symbolic tables + semiring scan."""
+from .encoder import EventEncoder
+from .engine import VectorEngine, VectorQueryTables
+from .symbolic import SymbolicCEA, compile_symbolic
+
+__all__ = ["EventEncoder", "VectorEngine", "VectorQueryTables",
+           "SymbolicCEA", "compile_symbolic"]

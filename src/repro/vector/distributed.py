@@ -1,0 +1,97 @@
+"""Distributed CER: partition-by sharded across the device mesh.
+
+The paper leaves parallel/distributed execution as future work (§7); this
+module provides it.  Two pieces:
+
+* :func:`sharded_cea_scan` — the windowed counting scan with the stream/batch
+  axis sharded over every mesh axis (partitions are independent, so the scan
+  itself needs **no** collectives — the ideal scaling case the partition-by
+  operator exposes).
+* :func:`route_by_partition` — the event router: incoming event blocks carry a
+  partition hash; an ``all_to_all`` moves each event to the shard that owns
+  its partition.  This is the one collective of the distributed engine and is
+  exercised by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..kernels import ops
+
+
+def stream_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All mesh axes — CER shards streams over the full device grid."""
+    return tuple(mesh.axis_names)
+
+
+def sharded_cea_scan(mesh: Mesh, class_ids, m_all, finals, c0, *,
+                     epsilon: int, start_pos: int = 0,
+                     use_pallas: bool = False):
+    """Shard the B axis of the scan over every mesh axis via shard_map.
+
+    class_ids (T, B) | m_all, finals replicated | c0 (B, W, S) sharded on B.
+    """
+    axes = stream_axes(mesh)
+
+    def local_scan(ids, m, f, c):
+        return ops.cea_scan(ids, m, f, c, epsilon=epsilon,
+                            start_pos=start_pos, use_pallas=use_pallas)
+
+    return jax.shard_map(
+        local_scan, mesh=mesh,
+        in_specs=(P(None, axes), P(), P(), P(axes)),
+        out_specs=(P(None, axes), P(axes)),
+        check_vma=False,
+    )(class_ids, m_all, finals, c0)
+
+
+def route_by_partition(mesh: Mesh, events: jnp.ndarray, keys: jnp.ndarray,
+                       lanes_per_shard: int):
+    """Route event rows to the shard owning their partition (hash routing).
+
+    events: (N, A) f32 event block, N % num_shards == 0
+    keys:   (N,)  int32 partition hashes
+    Returns (N, A) events re-ordered so that shard s holds the events with
+    ``hash % num_shards == s`` (padded round-robin within shards).
+
+    The dense formulation: each shard bucket-sorts its local events by
+    destination shard, then a single ``all_to_all`` exchanges equal-size
+    buckets.  Overflowing buckets spill to a host retry queue (returned mask)
+    — the classic bounded-capacity routing used by MoE dispatch, reused here
+    for CER partition routing.
+    """
+    axes = stream_axes(mesh)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def local_route(ev, ks):
+        # ev: (n_local, A), ks: (n_local,)
+        n_local, A = ev.shape
+        cap = n_local // n_shards
+        dest = (ks % n_shards).astype(jnp.int32)              # (n_local,)
+        # position of each event within its destination bucket
+        onehot = jax.nn.one_hot(dest, n_shards, dtype=jnp.int32)
+        rank = jnp.cumsum(onehot, axis=0) - 1                 # (n_local, S)
+        my_rank = jnp.take_along_axis(rank, dest[:, None], axis=1)[:, 0]
+        keep = my_rank < cap                                  # capacity mask
+        # scatter into (n_shards, cap, A) buckets
+        flat_idx = dest * cap + jnp.minimum(my_rank, cap - 1)
+        buckets = jnp.zeros((n_shards * cap, A), ev.dtype)
+        buckets = buckets.at[flat_idx].add(ev * keep[:, None])
+        buckets = buckets.reshape(n_shards, cap, A)
+        routed = jax.lax.all_to_all(buckets, axes, split_axis=0,
+                                    concat_axis=0, tiled=False)
+        return routed.reshape(n_shards * cap, A), keep
+
+    return jax.shard_map(
+        local_route, mesh=mesh,
+        in_specs=(P(axes), P(axes)),
+        out_specs=(P(axes), P(axes)),
+        check_vma=False,
+    )(events, keys)

@@ -1,0 +1,75 @@
+"""Host-side event encoding for the device engine.
+
+Events carry typed attributes (strings, ints, floats); the device works on a
+dense ``(B, A)`` f32 matrix.  The encoder derives, from the query's atom
+registry, (1) the ordered list of referenced attributes and (2) per-attribute
+categorical vocabularies for string constants, and produces both the numeric
+predicate specs for the bit-vector kernel and the event matrices.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from ..core.events import Event
+from ..core.predicates import AtomRegistry
+from ..kernels.ref import OP_EQ, OP_GE, OP_GT, OP_LE, OP_LT, OP_NE
+
+_OP_CODE = {"==": OP_EQ, "!=": OP_NE, "<": OP_LT, "<=": OP_LE,
+            ">": OP_GT, ">=": OP_GE}
+
+UNSEEN = -1.0  # categorical code for values never mentioned by the query
+
+
+@dataclass
+class EventEncoder:
+    attrs: Tuple[str, ...]
+    attr_index: Dict[str, int]
+    vocab: Dict[str, Dict[str, float]]           # attr -> {string: code}
+    specs: Tuple[Tuple[int, int, float], ...]    # (col, op, threshold)
+
+    @staticmethod
+    def from_registry(registry: AtomRegistry) -> "EventEncoder":
+        attrs: List[str] = []
+        attr_index: Dict[str, int] = {}
+        vocab: Dict[str, Dict[str, float]] = {}
+        specs: List[Tuple[int, int, float]] = []
+        for a in registry.atoms:
+            if a.attr not in attr_index:
+                attr_index[a.attr] = len(attrs)
+                attrs.append(a.attr)
+            col = attr_index[a.attr]
+            if isinstance(a.value, str):
+                codes = vocab.setdefault(a.attr, {})
+                if a.value not in codes:
+                    codes[a.value] = float(len(codes))
+                thr = codes[a.value]
+            else:
+                thr = float(a.value)
+            specs.append((col, _OP_CODE[a.op], thr))
+        return EventEncoder(tuple(attrs), attr_index, vocab, tuple(specs))
+
+    def encode_event(self, t: Event) -> np.ndarray:
+        row = np.zeros(len(self.attrs), dtype=np.float32)
+        for a, i in self.attr_index.items():
+            v = t.get(a)
+            if isinstance(v, str):
+                row[i] = self.vocab.get(a, {}).get(v, UNSEEN)
+            elif v is None:
+                row[i] = np.nan  # NULL: fails every comparison
+            else:
+                row[i] = float(v)
+        return row
+
+    def encode_streams(self, streams: Sequence[Sequence[Event]]) -> np.ndarray:
+        """B streams × T events → (T, B, A) f32 (streams must be equal length)."""
+        B = len(streams)
+        T = len(streams[0])
+        out = np.zeros((T, B, len(self.attrs)), dtype=np.float32)
+        for b, s in enumerate(streams):
+            assert len(s) == T, "streams must be equal length per batch"
+            for t, ev in enumerate(s):
+                out[t, b] = self.encode_event(ev)
+        return out

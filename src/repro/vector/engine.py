@@ -1,0 +1,105 @@
+"""Device (TPU-native) CER engine — recognition + counting on accelerator.
+
+The vector engine runs the *recognition* projection of Algorithm 1 on device
+(DESIGN.md §3, deviation D1): per stream position it computes the exact number
+of complex events closing there (``|⟦A⟧ε_j(S)|``) plus a hit bitmap, using the
+windowed counting-semiring scan.  Enumeration of the actual complex events
+stays on the host tECS engine, invoked only at hit positions.
+
+Batching = partition-by: the B axis carries independent substreams.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.cea import CEA
+from ..core.events import Event
+from ..core.query import CompiledQuery, compile_query
+from ..kernels import ops
+from .encoder import EventEncoder
+from .symbolic import SymbolicCEA, compile_symbolic
+
+
+@dataclass
+class VectorQueryTables:
+    """Device-resident tables for one compiled query."""
+
+    m_all: jnp.ndarray       # (C, S, S) f32
+    finals: jnp.ndarray      # (S,) f32
+    class_of: jnp.ndarray    # (2^k,) int32
+    num_states: int
+    num_classes: int
+    num_bits: int
+
+
+class VectorEngine:
+    """End-to-end device evaluation of a windowed CEQL query over B streams."""
+
+    def __init__(self, query: str | CompiledQuery, epsilon: int,
+                 use_pallas: bool = True, b_tile: int = 8):
+        compiled = compile_query(query) if isinstance(query, str) else query
+        self.compiled = compiled
+        self.symbolic: SymbolicCEA = compile_symbolic(compiled.cea)
+        self.encoder = EventEncoder.from_registry(compiled.cea.registry)
+        self.epsilon = int(epsilon)
+        self.ring = ops.ring_size(self.epsilon)
+        self.use_pallas = use_pallas
+        self.b_tile = b_tile
+        self.tables = VectorQueryTables(
+            m_all=jnp.asarray(self.symbolic.transition_matrices()),
+            finals=jnp.asarray(self.symbolic.finals, dtype=jnp.float32),
+            class_of=jnp.asarray(self.symbolic.class_of),
+            num_states=self.symbolic.num_states,
+            num_classes=self.symbolic.num_classes,
+            num_bits=self.symbolic.num_bits,
+        )
+
+    # ------------------------------------------------------------------
+    def init_state(self, batch: int) -> jnp.ndarray:
+        return jnp.zeros((batch, self.ring, self.tables.num_states),
+                         dtype=jnp.float32)
+
+    def encode(self, streams: Sequence[Sequence[Event]]) -> jnp.ndarray:
+        """B streams of T events → (T, B, A) f32 attribute tensor."""
+        return jnp.asarray(self.encoder.encode_streams(streams))
+
+    # ------------------------------------------------------------------
+    def classify(self, attrs: jnp.ndarray) -> jnp.ndarray:
+        """(T, B, A) attributes → (T, B) int32 symbol-class ids."""
+        T, B, A = attrs.shape
+        flat = attrs.reshape(T * B, A)
+        bits = ops.bitvector(flat, self.encoder.specs,
+                             use_pallas=self.use_pallas)
+        return self.tables.class_of[bits].reshape(T, B)
+
+    def scan(self, class_ids: jnp.ndarray, state: jnp.ndarray,
+             start_pos: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(T, B) class ids × (B, W, S) state → (matches (T, B), state')."""
+        return ops.cea_scan(class_ids, self.tables.m_all, self.tables.finals,
+                            state, epsilon=self.epsilon, start_pos=start_pos,
+                            use_pallas=self.use_pallas, b_tile=self.b_tile)
+
+    def run(self, streams: Sequence[Sequence[Event]],
+            state: Optional[jnp.ndarray] = None, start_pos: int = 0
+            ) -> Tuple[np.ndarray, jnp.ndarray]:
+        """Convenience host→device→host path.
+
+        Returns (match counts (T, B) int64, final device state).
+        """
+        attrs = self.encode(streams)
+        ids = self.classify(attrs)
+        if state is None:
+            state = self.init_state(attrs.shape[1])
+        matches, state = self.scan(ids, state, start_pos=start_pos)
+        return np.asarray(matches).astype(np.int64), state
+
+    # ------------------------------------------------------------------
+    def hit_positions(self, matches: np.ndarray) -> List[Tuple[int, int]]:
+        """(t, b) positions with ≥1 match — where host enumeration is needed."""
+        t_idx, b_idx = np.nonzero(matches)
+        return list(zip(t_idx.tolist(), b_idx.tolist()))

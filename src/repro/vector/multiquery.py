@@ -1,0 +1,137 @@
+"""Multi-query packed evaluation (beyond-paper optimization, §Perf #3).
+
+The MXU consumes 128×128 tiles; a small automaton (S ≈ 8–32 det states)
+wastes most lanes after padding.  Production CER deployments run *many*
+queries over the same stream (the paper benchmarks them one at a time).
+We pack q queries into one scan:
+
+* all queries share one AtomRegistry → one bit-vector per event → one
+  *combined* symbol-class table (classes = distinct joint behaviour);
+* the packed transition matrix is block-diagonal,
+  ``M̂[c] = diag(M₁[c], …, M_q[c])`` with Ŝ = Σ S_i ≤ 128 per pack;
+* one (B, W, Ŝ)·(Ŝ, Ŝ) scan evaluates every query; per-query match counts
+  come from per-query final-state masks.
+
+Runs/counts are exact per query (blocks don't interact).  Speed-up ≈ the
+lane-fill ratio: q queries of S=16 in one 128-wide pack ≈ 8× fewer MXU ops
+than q padded scans — measured in benchmarks/perf_cer.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.cea import compile_cel
+from ..core.predicates import AtomRegistry
+from ..core.query import CompiledQuery, compile_query
+from ..kernels import ops
+from .encoder import EventEncoder
+from .symbolic import SymbolicCEA, compile_symbolic
+
+
+@dataclass
+class PackedTables:
+    m_all: jnp.ndarray          # (C, Ŝ, Ŝ)
+    finals: jnp.ndarray         # (Q, Ŝ) one mask row per query
+    class_of: jnp.ndarray       # (2^k,)
+    init_mask: jnp.ndarray      # (Ŝ,) 1.0 at each query's initial state
+    offsets: List[int]          # block start per query
+    sizes: List[int]
+
+
+class MultiQueryEngine:
+    """Evaluate several CEQL queries over the same streams in one scan."""
+
+    def __init__(self, queries: Sequence[str], epsilon: int,
+                 use_pallas: bool = True, b_tile: int = 8):
+        registry = AtomRegistry()   # SHARED across queries
+        self.compiled: List[CompiledQuery] = [
+            compile_query(q, registry) for q in queries]
+        self.encoder = EventEncoder.from_registry(registry)
+        self.symbolics: List[SymbolicCEA] = [
+            compile_symbolic(c.cea) for c in self.compiled]
+        self.epsilon = int(epsilon)
+        self.ring = ops.ring_size(self.epsilon)
+        self.use_pallas = use_pallas
+        self.b_tile = b_tile
+        self.tables = self._pack()
+
+    # ------------------------------------------------------------------
+    def _pack(self) -> PackedTables:
+        # NOTE: every symbolic shares num_bits (shared registry), but each
+        # computed its own class partition; combine into joint classes.
+        k = self.symbolics[0].num_bits
+        n_vec = 1 << k
+        joint = np.stack([s.class_of for s in self.symbolics])   # (Q, 2^k)
+        _, class_of = np.unique(joint, axis=1, return_inverse=True)
+        n_classes = int(class_of.max()) + 1
+        # representative bitvec per joint class
+        reps = np.zeros(n_classes, dtype=np.int64)
+        for v in range(n_vec - 1, -1, -1):
+            reps[class_of[v]] = v
+
+        sizes = [s.num_states for s in self.symbolics]
+        S_hat = sum(sizes)
+        offsets = list(np.cumsum([0] + sizes[:-1]))
+        m_all = np.zeros((n_classes, S_hat, S_hat), np.float32)
+        finals = np.zeros((len(sizes), S_hat), np.float32)
+        init_mask = np.zeros((S_hat,), np.float32)
+        for qi, sym in enumerate(self.symbolics):
+            off = offsets[qi]
+            Mq = sym.transition_matrices()                       # (Cq, S, S)
+            for c in range(n_classes):
+                cq = sym.class_of[reps[c]]
+                m_all[c, off:off + sizes[qi], off:off + sizes[qi]] = Mq[cq]
+            finals[qi, off:off + sizes[qi]] = sym.finals.astype(np.float32)
+            init_mask[off + sym.initial] = 1.0
+        return PackedTables(
+            m_all=jnp.asarray(m_all), finals=jnp.asarray(finals),
+            class_of=jnp.asarray(class_of.astype(np.int32)),
+            init_mask=jnp.asarray(init_mask), offsets=offsets, sizes=sizes)
+
+    # ------------------------------------------------------------------
+    @property
+    def packed_states(self) -> int:
+        return int(self.tables.m_all.shape[1])
+
+    def init_state(self, batch: int) -> jnp.ndarray:
+        return jnp.zeros((batch, self.ring, self.packed_states), jnp.float32)
+
+    def classify(self, attrs: jnp.ndarray) -> jnp.ndarray:
+        T, B, A = attrs.shape
+        bits = ops.bitvector(attrs.reshape(T * B, A), self.encoder.specs,
+                             use_pallas=self.use_pallas)
+        return self.tables.class_of[bits].reshape(T, B)
+
+    def scan(self, class_ids: jnp.ndarray, state: jnp.ndarray,
+             start_pos: int = 0):
+        """→ (matches (T, B, Q), state').
+
+        The packed scan seeds ALL queries' initial states each step (the
+        kernel seeds one index; we pass a multi-hot init via state injection:
+        cea_scan's init seeding uses a single init_state index, so we run it
+        with the joint trick: block-diag M with a virtual shared start is not
+        expressible — instead we seed by index per query via the generalized
+        path below).
+        """
+        # generalized multi-hot seeding: fold the per-query inits into the
+        # scan by replacing the kernel's one-hot seed with init_mask — the
+        # XLA path supports it directly; the Pallas kernel is invoked with
+        # init_state=-1 and an extra mask (see kernels/ops.cea_scan_multi).
+        return ops.cea_scan_multi(
+            class_ids, self.tables.m_all, self.tables.finals,
+            state, init_mask=self.tables.init_mask, epsilon=self.epsilon,
+            start_pos=start_pos, use_pallas=self.use_pallas,
+            b_tile=self.b_tile)
+
+    def run(self, streams, state=None, start_pos: int = 0):
+        attrs = jnp.asarray(self.encoder.encode_streams(streams))
+        ids = self.classify(attrs)
+        if state is None:
+            state = self.init_state(attrs.shape[1])
+        matches, state = self.scan(ids, state, start_pos=start_pos)
+        return np.asarray(matches).astype(np.int64), state

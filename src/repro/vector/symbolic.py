@@ -1,0 +1,149 @@
+"""Symbolic compilation of a CEA into dense device tables (DESIGN.md §3).
+
+The device engine needs the I/O-deterministic automaton as *arrays*:
+
+* ``bitvec → symbol class``: transitions test boolean formulas over the k
+  predicate bits, so the 2^k bit-vector space partitions into far fewer
+  behavioural *symbol classes* (identical truth assignment on every transition
+  predicate).  ``class_of[2^k] → c`` maps packed bit-vectors to class ids.
+* ``delta_mark[S, C] / delta_unmark[S, C] → S``: the subset-construction
+  determinization, fully materialized by BFS (the host engine determinizes
+  on-the-fly; the device engine ahead-of-time — queries with k ≤ MAX_BITS and
+  bounded det-state count, which covers every workload in the paper).
+  State 0 is the dead state; state 1 the initial det state.
+* ``M_all[C, S, S]`` (f32): counting-semiring transition matrices,
+  ``M_all[c, s, t] = [δ•(s,c) = t] + [δ◦(s,c) = t]``.  Because the CEA is
+  I/O-deterministic, runs of the determinized automaton are in bijection with
+  complex events, so integer matrix products count *matches*, never double-
+  counting (the same argument the paper uses for duplicate-freeness, Thm 3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.cea import CEA
+from ..core.predicates import AtomRegistry
+
+MAX_BITS = 14          # 2^14 = 16384 bit-vectors enumerated at compile time
+MAX_DET_STATES = 512   # guard against subset-construction blow-up
+
+
+@dataclass
+class SymbolicCEA:
+    """Dense-table view of an I/O-determinized CEA."""
+
+    num_states: int                # S (incl. dead=0; initial=1)
+    num_classes: int               # C
+    num_bits: int                  # k
+    class_of: np.ndarray           # (2^k,) int32: bitvec -> class
+    delta_mark: np.ndarray         # (S, C) int32, 0 = dead
+    delta_unmark: np.ndarray       # (S, C) int32, 0 = dead
+    finals: np.ndarray             # (S,) bool
+    registry: AtomRegistry
+
+    @property
+    def initial(self) -> int:
+        return 1
+
+    def transition_matrices(self, dtype=np.float32) -> np.ndarray:
+        """``M_all[C, S, S]`` counting-semiring matrices (dead state excluded
+        as a *source* so dead runs don't propagate; dead as a *target* simply
+        drops the run, matching run death in the NFA)."""
+        S, C = self.num_states, self.num_classes
+        M = np.zeros((C, S, S), dtype=dtype)
+        for s in range(1, S):
+            for c in range(C):
+                t1 = self.delta_mark[s, c]
+                if t1 != 0:
+                    M[c, s, t1] += 1
+                t2 = self.delta_unmark[s, c]
+                if t2 != 0:
+                    M[c, s, t2] += 1
+        return M
+
+
+def compile_symbolic(cea: CEA) -> SymbolicCEA:
+    k = cea.registry.num_bits
+    if k > MAX_BITS:
+        raise ValueError(
+            f"query has {k} atomic predicates > MAX_BITS={MAX_BITS}; "
+            "use the host engine (on-the-fly determinization) instead")
+    n_vec = 1 << k
+
+    # --- symbol classes: signature = truth of every transition predicate ----
+    preds = [t.pred for t in cea.transitions]
+    sig_to_class: Dict[Tuple[bool, ...], int] = {}
+    class_of = np.zeros(n_vec, dtype=np.int32)
+    truth: List[np.ndarray] = []  # per predicate: (n_vec,) bool — reused below
+    for p in preds:
+        truth.append(np.fromiter((p.evaluate(v) for v in range(n_vec)),
+                                 dtype=bool, count=n_vec))
+    reps: List[int] = []  # one representative bit-vector per class
+    for v in range(n_vec):
+        sig = tuple(bool(t[v]) for t in truth)
+        c = sig_to_class.get(sig)
+        if c is None:
+            c = len(sig_to_class)
+            sig_to_class[sig] = c
+            reps.append(v)
+        class_of[v] = c
+    num_classes = len(sig_to_class)
+
+    # --- subset construction over classes -----------------------------------
+    interned: Dict[FrozenSet[int], int] = {frozenset(): 0,
+                                           frozenset({cea.q0}): 1}
+    sets: List[FrozenSet[int]] = [frozenset(), frozenset({cea.q0})]
+    dm_rows: List[List[int]] = [[0] * num_classes, [0] * num_classes]
+    du_rows: List[List[int]] = [[0] * num_classes, [0] * num_classes]
+
+    def intern(states: FrozenSet[int]) -> int:
+        sid = interned.get(states)
+        if sid is None:
+            sid = len(sets)
+            if sid > MAX_DET_STATES:
+                raise ValueError("determinization exceeded MAX_DET_STATES; "
+                                 "use the host engine for this query")
+            interned[states] = sid
+            sets.append(states)
+            dm_rows.append([0] * num_classes)
+            du_rows.append([0] * num_classes)
+            frontier.append(sid)
+        return sid
+
+    # per-transition truth over class representatives (transitions are aligned
+    # with `preds`/`truth` by construction)
+    tr_truth = {id(t): truth[i] for i, t in enumerate(cea.transitions)}
+
+    frontier: List[int] = [1]
+    done = 0
+    while done < len(frontier):
+        sid = frontier[done]
+        done += 1
+        states = sets[sid]
+        for c, rep in enumerate(reps):
+            marked, unmarked = set(), set()
+            for p in states:
+                for t in cea.out(p):
+                    if tr_truth[id(t)][rep]:
+                        (marked if t.mark else unmarked).add(t.dst)
+            dm_rows[sid][c] = intern(frozenset(marked)) if marked else 0
+            du_rows[sid][c] = intern(frozenset(unmarked)) if unmarked else 0
+
+    S = len(sets)
+    finals = np.zeros(S, dtype=bool)
+    for sid, states in enumerate(sets):
+        finals[sid] = bool(states & cea.finals)
+
+    return SymbolicCEA(
+        num_states=S,
+        num_classes=num_classes,
+        num_bits=k,
+        class_of=class_of,
+        delta_mark=np.asarray(dm_rows, dtype=np.int32),
+        delta_unmark=np.asarray(du_rows, dtype=np.int32),
+        finals=finals,
+        registry=cea.registry,
+    )

@@ -1,0 +1,120 @@
+"""CEQL parser tests, incl. every query that appears in the paper."""
+import pytest
+
+from repro.core import ceql
+from repro.core import cel as C
+from repro.core.predicates import PAtom
+
+EX1 = """
+SELECT * FROM Stock
+WHERE (SELL as ms; (BUY OR SELL) as or_; (BUY OR SELL) as cs; SELL as am)
+FILTER ms[name = 'MSFT'] AND ms[price > 26.0]
+AND or_[name = 'ORCL'] AND or_[price < 11.14]
+AND cs[name = 'CSCO'] AND am[name = 'AMZN'] AND am[price >= 18.97]
+WITHIN 30 minutes
+"""
+
+Q1 = "SELECT * FROM Stock WHERE SELL as msft; SELL as intel; SELL as amzn " \
+     "FILTER msft[name = 'MSFT'] AND msft[price > 100] AND intel[name = 'INTC'] " \
+     "AND amzn[name = 'AMZN'] AND amzn[price < 2000]"
+
+Q2 = "SELECT b FROM Stock WHERE SELL as s; BUY as b " \
+     "PARTITION BY [name], [volume] WITHIN 1 minute"
+
+Q3 = """SELECT MAX * FROM Stock
+WHERE SELL as low; SELL+ as s1; SELL as high; SELL+ as s2; SELL as end_
+FILTER low[price < 100] AND s1[price >= 100] AND s1[price <= 2000]
+AND high[price > 2000] AND s2[price >= 100] AND s2[price <= 2000]
+AND end_[price < 100]
+PARTITION BY [name]"""
+
+STOCK_Q3 = """SELECT * FROM S
+WHERE (SELL as msft; BUY as oracle; BUY as csco; SELL as amat)
+FILTER msft[name = 'MSFT'] AND oracle[name = 'ORCL'] AND
+csco[name = 'CSCO'] AND amat[name = 'AMAT']
+PARTITION BY [volume]
+WITHIN 30000 [stock_time]
+CONSUME BY ANY"""
+
+
+def test_example1_parses():
+    q = ceql.parse(EX1)
+    assert q.select is None and q.strategy == "ALL"
+    assert q.streams == ("Stock",)
+    assert q.window.kind == "time" and q.window.size == 30 * 60
+    # WHERE folds 7 FILTERs around a 4-step sequence
+    f = q.where
+    n_filters = 0
+    while isinstance(f, C.Filter):
+        n_filters += 1
+        f = f.child
+    assert n_filters == 7
+    assert isinstance(f, C.Seq)
+
+
+def test_q2_partition_and_select():
+    q = ceql.parse(Q2)
+    assert q.select == ("b",)
+    assert q.partition_by == ("name", "volume")
+    assert q.window.kind == "time" and q.window.size == 60.0
+    phi = q.formula()
+    assert isinstance(phi, C.Proj) and phi.keep == frozenset({"b"})
+
+
+def test_q3_max_strategy_and_kleene():
+    q = ceql.parse(Q3)
+    assert q.strategy == "MAX" and q.select is None
+    assert q.partition_by == ("name",)
+    plus_count = 0
+    stack = [q.where]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, C.Plus):
+            plus_count += 1
+        for attr in ("child", "left", "right"):
+            c = getattr(n, attr, None)
+            if isinstance(c, C.CEL):
+                stack.append(c)
+    assert plus_count == 2
+
+
+def test_stock_query_time_attribute_window():
+    q = ceql.parse(STOCK_Q3)
+    assert q.window.kind == "time"
+    assert q.window.size == 30000
+    assert q.window.time_attr == "stock_time"
+    assert q.consume_on_match is True
+    assert q.partition_by == ("volume",)
+
+
+def test_events_window():
+    q = ceql.parse("SELECT * FROM S WHERE A ; B WITHIN 100 events")
+    assert q.window.kind == "events" and q.window.size == 100
+
+
+def test_or_filter_shorthand():
+    q = ceql.parse("SELECT * FROM S WHERE A as x FILTER x[v > 8] OR x[v < 1]")
+    assert isinstance(q.where, C.Or)
+    assert isinstance(q.where.left, C.Filter) and isinstance(q.where.right, C.Filter)
+
+
+def test_and_inside_brackets():
+    q = ceql.parse("SELECT * FROM S WHERE A as x FILTER x[v >= 2 AND v <= 7]")
+    assert isinstance(q.where, C.Filter)
+
+
+def test_strategy_vs_variable_disambiguation():
+    # `SELECT last FROM ...` must treat `last` as a variable name
+    q = ceql.parse("SELECT last FROM S WHERE A as last")
+    assert q.strategy == "ALL" and q.select == ("last",)
+    q2 = ceql.parse("SELECT LAST * FROM S WHERE A as x")
+    assert q2.strategy == "LAST" and q2.select is None
+
+
+def test_syntax_errors():
+    with pytest.raises(SyntaxError):
+        ceql.parse("SELECT * WHERE A")
+    with pytest.raises(SyntaxError):
+        ceql.parse("SELECT * FROM S WHERE A ; WITHIN 5")
+    with pytest.raises(SyntaxError):
+        ceql.parse("SELECT * FROM S WHERE A FILTER x[v !! 3]")

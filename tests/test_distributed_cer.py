@@ -1,0 +1,55 @@
+"""Distributed CER pieces on the host mesh (compile + semantics)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.mesh import make_host_mesh
+from repro.vector.distributed import route_by_partition, sharded_cea_scan
+from repro.kernels import ops, ref
+
+
+def tiny_tables():
+    rng = np.random.default_rng(3)
+    S, C = 5, 4
+    M = np.zeros((C, S, S), np.float32)
+    for s in range(1, S):
+        for c in range(C):
+            M[c, s, rng.integers(1, S)] += 1
+    finals = np.zeros(S, np.float32)
+    finals[S - 1] = 1
+    return jnp.asarray(M), jnp.asarray(finals)
+
+
+def test_sharded_scan_matches_local():
+    mesh = make_host_mesh()
+    M, finals = tiny_tables()
+    T, B, eps = 20, 4, 5
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, 4, (T, B)), jnp.int32)
+    c0 = jnp.zeros((B, ops.ring_size(eps), 5), jnp.float32)
+    with jax.set_mesh(mesh):
+        m_sh, c_sh = sharded_cea_scan(mesh, ids, M, finals, c0, epsilon=eps)
+    m_loc, c_loc = ops.cea_scan(ids, M, finals, c0, epsilon=eps,
+                                use_pallas=False)
+    np.testing.assert_allclose(np.asarray(m_sh), np.asarray(m_loc))
+    np.testing.assert_allclose(np.asarray(c_sh), np.asarray(c_loc))
+
+
+def test_router_single_shard_identity_up_to_capacity():
+    """On one shard the router is a bucket-compaction: every kept event lands
+    in a slot of its own hash bucket."""
+    mesh = make_host_mesh()
+    N, A = 16, 3
+    rng = np.random.default_rng(1)
+    events = jnp.asarray(rng.normal(size=(N, A)), jnp.float32)
+    keys = jnp.asarray(rng.integers(0, 100, (N,)), jnp.int32)
+    with jax.set_mesh(mesh):
+        routed, keep = route_by_partition(mesh, events, keys,
+                                          lanes_per_shard=N)
+    routed, keep = np.asarray(routed), np.asarray(keep)
+    assert keep.all()  # single shard, capacity N ≥ all events
+    # every original event row appears exactly once among routed rows
+    ev = np.asarray(events)
+    for i in range(N):
+        assert any(np.allclose(ev[i], routed[j]) for j in range(N))

@@ -1,0 +1,146 @@
+"""Validate the paper's claims on our implementation (EXPERIMENTS.md anchors).
+
+The paper's §6 headline results, asserted as *trends* (constants differ —
+CPython vs the paper's Java — but the asymptotics are the contribution):
+
+1. throughput is NOT affected by window size (Fig. 8 left);
+2. throughput degrades at most linearly in sequence-query length n (Fig. 7,
+   vs SASE's exponential);
+3. memory (tECS nodes) grows linearly in events processed, independent of the
+   number of partial matches;
+4. enumeration has output-linear delay;
+5. host engine and device engine agree on every workload's match counts.
+"""
+import random
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Event, compile_query
+from repro.core.engine import Engine, WindowSpec
+from repro.data.streams import StreamSpec, random_stream, stock_stream
+from repro.vector import VectorEngine
+
+from benchmarks.cer_paper import (STOCK_QUERIES, fig8_window_sweep,
+                                  sequence_query)
+
+
+def throughput(qtext, stream, window, max_enumerate=10):
+    q = compile_query(qtext)
+    eng = Engine(q.cea, window=window, max_enumerate=max_enumerate,
+                 consume_on_match=True)
+    t0 = time.perf_counter()
+    for ev in stream:
+        eng.process(ev)
+    return len(stream) / (time.perf_counter() - t0)
+
+
+def test_claim_window_independence():
+    """Fig. 8: CORE is stable in the window size; competitors degrade
+    exponentially.  We assert < 2x spread across a 64x window range."""
+    qtext = "SELECT * FROM S WHERE A1 ; A2 ; A3"
+    stream = random_stream(StreamSpec(["A1", "A2"], seed=3), 12000)
+    tps = [throughput(qtext, stream, WindowSpec.events(w))
+           for w in (50, 200, 800, 3200)]
+    assert max(tps) / min(tps) < 2.0, tps
+
+
+def test_claim_query_length_at_most_linear():
+    """Fig. 7: cost grows at most linearly in n.
+
+    Linear cost predicts cost(9)/cost(3) ≈ 3 (and the paper measures ~2.3×
+    for CORE); SASE's exponential blowup is ≥100×.  Assert the ratio stays
+    far below exponential, with median-of-3 timing to tolerate a noisy
+    1-core CI box.
+    """
+    def cost(n):
+        types = [f"A{i}" for i in range(1, n + 1)]
+        stream = random_stream(StreamSpec(types, seed=7), 8000)
+        samples = [1.0 / throughput(sequence_query(n), stream,
+                                    WindowSpec.events(100))
+                   for _ in range(3)]
+        return sorted(samples)[1]
+
+    ratio = cost(9) / cost(3)
+    assert ratio < 8.0, ratio   # linear ≈ 3; exponential ≥ 100
+
+
+def test_claim_memory_linear_in_events():
+    """tECS size is linear in events seen — NOT in partial matches.  A+ has
+    exponentially many partial matches; node count must still be linear."""
+    q = compile_query("SELECT * FROM S WHERE A+ WITHIN 64 events")
+    eng = Engine(q.cea, window=WindowSpec.events(64), max_enumerate=0)
+    nodes = []
+    for i in range(1024):
+        eng.process(Event("A"))
+        if (i + 1) % 256 == 0:
+            nodes.append(eng.tecs.nodes_created)
+    deltas = [b - a for a, b in zip(nodes, nodes[1:])]
+    assert max(deltas) <= 1.2 * min(deltas) + 8, nodes
+
+
+def test_claim_output_linear_delay():
+    """Enumerating k matches takes O(total output size) — delay per match is
+    flat whether we enumerate 10 or 1000."""
+    q = compile_query("SELECT * FROM S WHERE A ; B WITHIN 2048 events")
+    eng = Engine(q.cea, window=WindowSpec.events(2048))
+    for _ in range(2000):
+        eng.process(Event("A"))
+    t0 = time.perf_counter()
+    out = eng.process(Event("B"))
+    dt = time.perf_counter() - t0
+    assert len(out) == 2000
+    per = dt / len(out)
+    # compare against enumerating only 10: per-item cost must be similar
+    q2 = compile_query("SELECT * FROM S WHERE A ; B WITHIN 2048 events")
+    eng2 = Engine(q2.cea, window=WindowSpec.events(2048), max_enumerate=10)
+    for _ in range(2000):
+        eng2.process(Event("A"))
+    t0 = time.perf_counter()
+    out2 = eng2.process(Event("B"))
+    dt2 = time.perf_counter() - t0
+    per2 = dt2 / max(len(out2), 1)
+    assert per < 50 * per2 + 1e-4, (per, per2)
+
+
+def test_claim_stock_queries_produce_matches():
+    """The seven stock queries parse, run, and Q1⊆Q4 (disjunction superset).
+
+    Full enumeration needs a low event rate (fewer events per 30 s window);
+    Q7's Kleene closure has exponentially many matches, so it runs with the
+    paper's own cap of 10 results per position.
+    """
+    stream = stock_stream(700, seed=13, events_per_sec=900.0)
+    results = {}
+    for name, qtext in STOCK_QUERIES.items():
+        q = compile_query(qtext)
+        cap = 10 if name == "Q7" else None
+        ex = q.make_executor(max_enumerate=cap)
+        matches = set()
+        for ev in stream:
+            for ce in ex.process(ev):
+                matches.add((ce.start, ce.end, ce.data))
+        results[name] = matches
+    # Q4 relaxes Q1's BUY to (BUY OR SELL): strictly more matches
+    assert results["Q1"] <= results["Q4"]
+    # filters only remove matches
+    assert results["Q2"] <= results["Q1"]
+    assert results["Q5"] <= results["Q4"]
+    assert len(results["Q4"]) > 0
+
+
+def test_claim_device_engine_agrees_on_stock_like_filters():
+    rng = random.Random(0)
+    qtext = ("SELECT * FROM S WHERE SELL AS a ; BUY AS b "
+             "FILTER a[price > 25.0] AND b[price < 10.0]")
+    streams = [[Event(rng.choice(("BUY", "SELL")),
+                      {"price": round(rng.uniform(0, 50), 2)})
+                for _ in range(64)] for _ in range(4)]
+    ve = VectorEngine(qtext, epsilon=15)
+    matches, _ = ve.run(streams)
+    for b, s in enumerate(streams):
+        q = compile_query(qtext)
+        eng = Engine(q.cea, window=WindowSpec.events(15))
+        want = [len(eng.process(e)) for e in s]
+        assert matches[:, b].tolist() == want

@@ -1,0 +1,54 @@
+"""Selection strategies (paper §2/§6): semantics of MAX / LAST / NXT / ALL."""
+import pytest
+
+from repro.core import Event, compile_query
+
+
+def run(qtext, types):
+    q = compile_query(qtext)
+    return sorted((ce.start, ce.end, ce.data)
+                  for _, ce in q.run([Event(t) for t in types]))
+
+
+def test_max_keeps_maximal_sequences():
+    """Q3 use-case: A+ under MAX yields only the maximal run per (start,end)."""
+    all_m = run("SELECT * FROM S WHERE A ; B+ ; C", "ABBC")
+    max_m = run("SELECT MAX * FROM S WHERE A ; B+ ; C", "ABBC")
+    # ALL: B-subsets {1},{2},{1,2} → 3 matches; MAX keeps only {1,2} per
+    # interval, plus the non-dominated (0,{1},?)... strictly: every kept match
+    # must not be a strict subset of another kept/same-start match
+    assert (0, 3, (0, 1, 2, 3)) in max_m
+    assert len(max_m) < len(all_m)
+    for m in max_m:
+        dominated = any(m2 != m and m2[0] == m[0] and
+                        set(m[2]) < set(m2[2]) for m2 in all_m)
+        assert not dominated
+
+
+def test_last_keeps_latest_start():
+    all_m = run("SELECT * FROM S WHERE A ; B", "AAB")
+    last_m = run("SELECT LAST * FROM S WHERE A ; B", "AAB")
+    assert (0, 2, (0, 2)) in all_m and (1, 2, (1, 2)) in all_m
+    assert last_m == [(1, 2, (1, 2))]
+
+
+def test_nxt_earliest_per_start():
+    nxt_m = run("SELECT NEXT * FROM S WHERE A ; B+ ; C", "ABBC")
+    # per start, the lexicographically earliest data set
+    starts = [m[0] for m in nxt_m]
+    assert len(starts) == len(set(starts))
+
+
+def test_all_is_default_and_identity():
+    assert run("SELECT * FROM S WHERE A ; B", "AAB") == \
+        run("SELECT ALL * FROM S WHERE A ; B", "AAB")
+
+
+def test_strategies_subset_of_all():
+    """Every strategy returns a subset of ALL's matches (the definition of a
+    selection strategy per [31])."""
+    base = set(run("SELECT * FROM S WHERE A ; (B OR C)+ ; A", "ABCBA"))
+    for strat in ("MAX", "LAST", "NEXT"):
+        got = set(run(f"SELECT {strat} * FROM S WHERE A ; (B OR C)+ ; A",
+                      "ABCBA"))
+        assert got <= base and got

@@ -1,0 +1,78 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Drives the full public path: CEQL text → compile → (host engine with
+enumeration | device engine with counts) over a realistic stock stream, plus
+a partitioned segmentation query (the paper's Q3 use-case).
+"""
+import numpy as np
+import pytest
+
+from repro.core import compile_query
+from repro.core.engine import Engine, WindowSpec
+from repro.core.events import Event
+from repro.data.streams import stock_stream
+from repro.vector import VectorEngine
+
+EX1 = """
+SELECT * FROM Stock
+WHERE SELL AS ms ; (BUY OR SELL) AS orcl ; (BUY OR SELL) AS cs ; SELL AS am
+FILTER ms[name = 'MSFT'] AND ms[price > 26.0]
+  AND orcl[name = 'ORCL'] AND orcl[price < 11.14]
+  AND cs[name = 'CSCO'] AND am[name = 'AMZN'] AND am[price >= 18.97]
+WITHIN 30000 [stock_time]
+"""
+
+
+def test_example1_end_to_end():
+    """The paper's Example 1 compiles and runs over a stock stream; every
+    reported complex event satisfies the query's filters and ordering."""
+    stream = stock_stream(20000, seed=1)
+    q = compile_query(EX1)
+    matches = list(q.run(iter(stream), max_enumerate=10))
+    assert matches, "Example 1 should fire on a 20k-event stream"
+    for pos, ce in matches:
+        assert ce.end == pos
+        events = [stream[p] for p in ce.data]
+        assert len(events) == 4
+        ms, orcl, cs, am = events
+        assert ms.type == "SELL" and ms.get("name") == "MSFT"
+        assert ms.get("price") > 26.0
+        assert orcl.get("name") == "ORCL" and orcl.get("price") < 11.14
+        assert cs.get("name") == "CSCO"
+        assert am.type == "SELL" and am.get("name") == "AMZN"
+        assert am.get("price") >= 18.97
+        assert list(ce.data) == sorted(ce.data)
+        # WITHIN 30000 [stock_time]
+        dt = (stream[ce.end].get("stock_time")
+              - stream[ce.start].get("stock_time"))
+        assert dt <= 30000
+
+
+def test_host_and_device_engines_agree_end_to_end():
+    qtext = ("SELECT * FROM S WHERE SELL AS a ; BUY AS b ; SELL AS c "
+             "FILTER a[name = 'MSFT'] AND c[price > 40.0]")
+    streams = [stock_stream(512, seed=s) for s in (3, 4)]
+    ve = VectorEngine(qtext, epsilon=50)
+    counts, _ = ve.run(streams)
+    for b, s in enumerate(streams):
+        q = compile_query(qtext)
+        eng = Engine(q.cea, window=WindowSpec.events(50))
+        want = [len(eng.process(e)) for e in s]
+        assert counts[:, b].tolist() == want
+
+
+def test_partitioned_segmentation_query():
+    """Q3-style MAX segmentation with partition-by runs end to end."""
+    q = compile_query("""
+        SELECT MAX * FROM S
+        WHERE SELL AS low ; SELL+ AS s1 ; SELL AS high
+        FILTER low[price < 10] AND s1[price >= 10] AND s1[price <= 40]
+        AND high[price > 40]
+        PARTITION BY [name]
+        WITHIN 40 events
+    """)
+    stream = stock_stream(3000, seed=7)
+    hits = list(q.run(iter(stream), max_enumerate=5))
+    for pos, ce in hits:
+        names = {stream[p].get("name") for p in ce.data}
+        assert len(names) == 1  # partition-by: single stock per match

@@ -1,0 +1,103 @@
+"""Device engine ⇔ host engine equivalence (match counts per position)."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import Event, compile_query
+from repro.core.engine import Engine, WindowSpec
+from repro.vector import VectorEngine, compile_symbolic
+
+
+def host_counts(qtext, stream, eps):
+    q = compile_query(qtext)
+    eng = Engine(q.cea, window=WindowSpec.events(eps))
+    return [len(eng.process(e)) for e in stream]
+
+
+def make_streams(seed, B, T, alphabet, attr=False):
+    rng = random.Random(seed)
+    return [[Event(rng.choice(alphabet),
+                   {"v": rng.randint(0, 9)} if attr else {})
+             for _ in range(T)] for _ in range(B)]
+
+
+CASES = [
+    ("SELECT * FROM S WHERE A ; B ; C", 6, "ABCX", False),
+    ("SELECT * FROM S WHERE A ; B+ ; C", 5, "ABCX", False),
+    ("SELECT * FROM S WHERE A ; (B OR C) ; A", 7, "ABCX", False),
+    ("SELECT * FROM S WHERE A ; (B OR C)+ ; A", 6, "ABCX", False),
+    ("SELECT * FROM S WHERE A AS x ; B AS y FILTER x[v > 5] AND y[v <= 3]",
+     9, "AB", True),
+]
+
+
+@pytest.mark.parametrize("qtext,eps,alpha,attr", CASES)
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("seed", [1, 2])
+def test_vector_matches_host_counts(qtext, eps, alpha, attr, use_pallas, seed):
+    B, T = 3, 40
+    streams = make_streams(seed, B, T, alpha, attr)
+    ve = VectorEngine(qtext, epsilon=eps, use_pallas=use_pallas)
+    matches, _ = ve.run(streams)
+    for b in range(B):
+        assert matches[:, b].tolist() == host_counts(qtext, streams[b], eps)
+
+
+def test_chunked_streaming_equals_one_shot():
+    qtext, eps = "SELECT * FROM S WHERE A ; B+ ; C", 6
+    streams = make_streams(3, 2, 48, "ABCX")
+    ve = VectorEngine(qtext, epsilon=eps)
+    full, _ = ve.run(streams)
+    state = None
+    parts = []
+    for lo in range(0, 48, 16):
+        chunk = [s[lo:lo + 16] for s in streams]
+        m, state = ve.run(chunk, state=state, start_pos=lo)
+        parts.append(m)
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_hit_positions_guide_host_enumeration():
+    """Device bitmap tells the host exactly where to enumerate (D1 split)."""
+    qtext, eps = "SELECT * FROM S WHERE A ; B", 5
+    streams = make_streams(5, 2, 30, "ABX")
+    ve = VectorEngine(qtext, epsilon=eps)
+    matches, _ = ve.run(streams)
+    for b in range(2):
+        want_positions = [t for t, c in
+                          enumerate(host_counts(qtext, streams[b], eps)) if c]
+        got_positions = [t for (t, bb) in ve.hit_positions(matches) if bb == b]
+        assert got_positions == want_positions
+
+
+def test_symbol_classes_compress_bitvector_space():
+    q = compile_query("SELECT * FROM S WHERE A ; B ; C ; D ; E")
+    sym = compile_symbolic(q.cea)
+    # 5 type predicates = 2^5 bit-vectors but ≤ 7 behavioural classes
+    # (types are mutually exclusive in any real stream, but even the full
+    # space collapses: only which-single-bit-is-set matters + none/multi)
+    assert sym.num_bits == 5
+    assert sym.num_classes <= 2 ** 5
+    assert sym.class_of.shape == (32,)
+
+
+def test_io_determinism_no_double_count():
+    """Counting must not double-count when ◦ and • reach distinct states but
+    a later merge makes runs re-converge (Thm 3's duplicate-freeness)."""
+    qtext, eps = "SELECT * FROM S WHERE (A OR B)+ ; C", 6
+    streams = [[Event(t) for t in "ABABAC"]]
+    ve = VectorEngine(qtext, epsilon=eps)
+    matches, _ = ve.run(streams)
+    want = host_counts(qtext, streams[0], eps)
+    assert matches[:, 0].tolist() == want
+
+
+def test_det_state_guard():
+    from repro.vector.symbolic import MAX_BITS
+    with pytest.raises(ValueError):
+        # 15+ distinct predicates exceeds MAX_BITS
+        n = MAX_BITS + 1
+        qtext = ("SELECT * FROM S WHERE " +
+                 " ; ".join(f"T{i}" for i in range(n)))
+        VectorEngine(qtext, epsilon=4)
