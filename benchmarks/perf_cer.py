@@ -4,8 +4,15 @@ Hillclimb cell #3 (most representative of the paper's technique).  Measured
 on the actual runtime (CPU XLA here; kernels additionally validated in
 interpret mode) — this is the one §Perf track with real wall-clock numbers.
 
-Baseline  : q single-query scans (each padded to the 128-lane MXU tile).
-Optimized : 1 packed block-diagonal scan (vector/multiquery.py).
+Three cells:
+
+* :func:`compare_fused` — fused single-dispatch pipeline vs the seed's
+  three-dispatch path (eager bit-vector → class gather → jitted scan).
+* :func:`streaming_throughput` — StreamingVectorEngine events/sec vs chunk
+  size; asserts the step compiles exactly once across all chunks (dynamic
+  ``start_pos`` + shape-stable chunks, DESIGN.md §5).
+* :func:`compare` — q single-query scans vs 1 packed block-diagonal scan
+  (vector/multiquery.py).
 
 Napkin math (TPU target): q queries of S≈16 states pad to 128 lanes each →
 q·(W×128)×(128×128) MACs vs one (W×128)×(128×128) for the pack → ideal q×.
@@ -18,11 +25,12 @@ import time
 from typing import Dict, List
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.events import Event
 from repro.data.streams import StreamSpec, random_stream
-from repro.vector import VectorEngine
+from repro.vector import StreamingVectorEngine, VectorEngine
 from repro.vector.multiquery import MultiQueryEngine
 
 QUERIES = [
@@ -45,6 +53,111 @@ def _time(fn, reps=3):
         out = fn()
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps
+
+
+FUSED_QUERY = "SELECT * FROM S WHERE A1 ; A2+ ; A3"
+
+
+def compare_fused(num_events: int = 4096, batch: int = 16, epsilon: int = 95,
+                  use_pallas: bool = False) -> Dict:
+    """Fused single-dispatch pipeline vs the seed three-dispatch path.
+
+    Baseline mirrors the seed VectorEngine.run: eager bit-vector evaluation,
+    eager class gather, then the jitted scan — three dispatches and two
+    (T·B)-sized intermediates.  Optimized is ONE jitted call of
+    ops.cer_pipeline(impl="fused").
+    """
+    types = ["A1", "A2", "A3"]
+    streams = [random_stream(StreamSpec(types, seed=70 + b), num_events)
+               for b in range(batch)]
+    ve = VectorEngine(FUSED_QUERY, epsilon=epsilon, use_pallas=use_pallas,
+                      impl="fused" if use_pallas else None)
+    attrs = ve.encode(streams)
+    state = ve.init_state(batch)
+
+    # baseline: seed's chunk step = classify (eager) + jitted scan
+    scan = jax.jit(lambda i, s, sp: ve.scan(i, s, start_pos=sp))
+
+    def run_unfused():
+        ids = ve.classify(attrs)
+        return scan(ids, state, jnp.asarray(0, jnp.int32))[0]
+
+    t_unfused = _time(run_unfused)
+
+    # optimized: one fused dispatch (raw attrs in, match counts out)
+    fused = jax.jit(lambda a, s, sp: ve.pipeline(a, s, start_pos=sp))
+    t_fused = _time(lambda: fused(attrs, state, jnp.asarray(0, jnp.int32))[0])
+
+    m_f = np.asarray(fused(attrs, state, jnp.asarray(0, jnp.int32))[0])
+    m_u = np.asarray(run_unfused())
+    np.testing.assert_array_equal(m_f, m_u)
+
+    ev_total = num_events * batch
+    return {
+        "events": ev_total,
+        "unfused_s": t_unfused,
+        "fused_s": t_fused,
+        "speedup": t_unfused / t_fused,
+        "unfused_eps": ev_total / t_unfused,
+        "fused_eps": ev_total / t_fused,
+    }
+
+
+def streaming_throughput(total_events: int = 8192, batch: int = 16,
+                         epsilon: int = 95,
+                         chunk_sizes: tuple = (64, 256, 1024),
+                         use_pallas: bool = False) -> List[Dict]:
+    """StreamingVectorEngine events/sec vs chunk size (compile count == 1).
+
+    Also times the seed-style chunked alternative (per-chunk eager pipeline,
+    no state donation, no compile caching across offsets) as the baseline.
+    """
+    types = ["A1", "A2", "A3"]
+    streams = [random_stream(StreamSpec(types, seed=90 + b), total_events)
+               for b in range(batch)]
+    ve = VectorEngine(FUSED_QUERY, epsilon=epsilon, use_pallas=use_pallas,
+                      impl="fused" if use_pallas else None)
+    all_attrs = ve.encode(streams)
+    whole, _ = ve.run(streams)
+
+    out = []
+    for chunk in chunk_sizes:
+        n_chunks = total_events // chunk
+        if n_chunks == 0:
+            continue  # stream shorter than the chunk: nothing to measure
+        se = StreamingVectorEngine(ve, chunk_len=chunk, batch=batch)
+        chunks = [all_attrs[lo:lo + chunk]
+                  for lo in range(0, n_chunks * chunk, chunk)]
+        parts = [se.feed_attrs(c)[0] for c in chunks]  # warm + correctness
+        np.testing.assert_array_equal(
+            np.concatenate(parts), whole[:n_chunks * chunk])
+        assert se.compile_count == 1, (chunk, se.compile_count)
+
+        se.reset()
+        t0 = time.perf_counter()
+        for c in chunks:
+            se.feed_attrs(c)
+        dt = time.perf_counter() - t0
+        assert se.compile_count == 1, (chunk, se.compile_count)
+
+        # seed-style baseline: eager per-chunk pipeline, state re-fed by hand
+        state = ve.init_state(batch)
+        t0 = time.perf_counter()
+        for i, c in enumerate(chunks):
+            m, state = ve.pipeline(c, state, start_pos=i * chunk)
+            jax.block_until_ready(m)
+        dt_seed = time.perf_counter() - t0
+
+        ev = n_chunks * chunk * batch
+        out.append({
+            "chunk": chunk,
+            "chunks": n_chunks,
+            "compile_count": se.compile_count,
+            "streaming_eps": ev / dt,
+            "eager_chunked_eps": ev / dt_seed,
+            "speedup": dt_seed / dt,
+        })
+    return out
 
 
 def compare(num_events: int = 4096, batch: int = 16, epsilon: int = 95,
@@ -96,6 +209,15 @@ def compare(num_events: int = 4096, batch: int = 16, epsilon: int = 95,
 
 
 def main() -> None:
+    r = compare_fused()
+    print(f"fused pipeline: 3-dispatch {r['unfused_s']*1e3:.1f} ms → "
+          f"fused {r['fused_s']*1e3:.1f} ms "
+          f"({r['speedup']:.2f}×, {r['fused_eps']:.0f} events/s)")
+    for row in streaming_throughput():
+        print(f"streaming chunk={row['chunk']}: "
+              f"{row['streaming_eps']:.0f} events/s "
+              f"(eager chunked {row['eager_chunked_eps']:.0f}, "
+              f"{row['speedup']:.2f}×, compiles={row['compile_count']})")
     for nq in (2, 4, 8):
         r = compare(n_queries=nq)
         print(f"q={nq}: packed Ŝ={r['packed_states']} "

@@ -5,8 +5,13 @@ input event for CER benchmarks; derived = the figure's headline metric,
 events/second).
 
     PYTHONPATH=src python -m benchmarks.run [--events N] [--quick]
+
+``--cer-json PATH`` runs ONLY the CER perf trajectory (fused vs unfused vs
+packed multi-query, events/sec + compile counts) and writes a JSON record so
+future PRs can diff perf against this one — see scripts/check.sh.
 """
 import argparse
+import json
 import sys
 
 
@@ -18,11 +23,50 @@ def _emit(rows, metric="throughput"):
         sys.stdout.flush()
 
 
+def cer_trajectory(quick: bool = True, events: int = None) -> dict:
+    """CER perf record: fused vs unfused vs packed, streaming compile counts."""
+    from benchmarks import perf_cer
+
+    n = events if events else (2048 if quick else 8192)
+    batch = 8 if quick else 16
+    fused = perf_cer.compare_fused(num_events=n, batch=batch)
+    streaming = perf_cer.streaming_throughput(
+        total_events=n, batch=batch,
+        chunk_sizes=(64, 256) if quick else (64, 256, 1024))
+    packed = perf_cer.compare(num_events=n, batch=batch, n_queries=4)
+    return {
+        "bench": "cer_perf",
+        "events": n,
+        "batch": batch,
+        "fused_vs_unfused": fused,
+        "streaming": streaming,
+        "packed_multiquery": {k: v for k, v in packed.items()
+                              if k != "single_states"},
+        "compile_counts": {f"chunk_{row['chunk']}": row["compile_count"]
+                           for row in streaming},
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--events", type=int, default=None)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--cer-json", type=str, default=None, metavar="PATH",
+                    help="write the CER perf trajectory record to PATH and "
+                         "skip the paper-figure sweeps")
     args = ap.parse_args()
+
+    if args.cer_json:
+        rec = cer_trajectory(quick=args.quick, events=args.events)
+        with open(args.cer_json, "w") as f:
+            json.dump(rec, f, indent=2)
+        f2f = rec["fused_vs_unfused"]
+        stream = (f"{rec['streaming'][-1]['streaming_eps']:.0f} ev/s"
+                  if rec["streaming"] else "n/a (stream < chunk)")
+        print(f"# wrote {args.cer_json}: fused {f2f['fused_eps']:.0f} ev/s "
+              f"({f2f['speedup']:.2f}× over 3-dispatch), streaming "
+              f"{stream}, compiles={rec['compile_counts']}")
+        return
 
     from benchmarks import cer_paper
 

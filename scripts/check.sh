@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 verification + CER benchmark smoke.
+#
+#   scripts/check.sh            # full tier-1 + quick bench, writes BENCH_cer.json
+#   scripts/check.sh --no-bench # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# run the full suite (no -x) so the benchmark smoke still executes and the
+# report shows every failure; the script's exit code is the test status.
+status=0
+python -m pytest -q || status=$?
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    python -m benchmarks.run --quick --cer-json BENCH_cer.json
+fi
+exit "$status"

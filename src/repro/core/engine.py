@@ -10,8 +10,8 @@ window size, and number of partial matches.  At every position ``j`` the set
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 from .cea import CEA, DetCEA
 from .events import ComplexEvent, Event

@@ -23,7 +23,7 @@ threshold — yielding output-linear delay (Theorem 2).
 """
 from __future__ import annotations
 
-from typing import Callable, Iterator, List, Optional, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 from .events import ComplexEvent
 

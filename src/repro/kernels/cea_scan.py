@@ -19,6 +19,11 @@ Layout / schedule
 * Blocks are padded by ``ops.py`` so that S is a multiple of 128 (MXU lane
   width) and W a multiple of 8 (f32 sublane) — see EXPERIMENTS.md §Perf for
   the small-S trade-off study.
+* ``start_pos`` is a *dynamic* SMEM scalar (DESIGN.md §5): the ring slots it
+  derives are computed per step from ``start_ref[0] + t``, so one compiled
+  executable serves every chunk of a stream — chunked/streaming callers never
+  recompile.  (It used to be a ``functools.partial``-baked static, which
+  forced a fresh compile per chunk offset.)
 
 VMEM budget per tile: C-scratch ``B_tile·W·S·4`` + ``M_all C·S·S·4`` +
 blocks; ops.py checks it against ~16 MB before launching.
@@ -30,13 +35,33 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _cea_scan_kernel(ids_ref, m_all_ref, finals_ref, c_in_ref,  # inputs
-                     matches_ref, c_out_ref,                    # outputs
-                     c_scratch,                                 # VMEM scratch
+def _vmem_scratch(shape):
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _ring_masks(j, W: int, epsilon: int):
+    """Per-step ring-buffer masks for position ``j`` (traced int32 scalar).
+
+    Seed a fresh run at slot ``j mod W`` and evict the start that just left
+    the window, ``(j - ε - 1) mod W``.  ``%`` follows Python sign semantics,
+    so early negative expire indices wrap to live-but-empty padded slots.
+    Returns ``(seed_mask, clear)`` — both (W,) f32 0/1 masks.
+    """
+    arange_w = jax.lax.iota(jnp.int32, W)
+    seed_mask = (arange_w == j % W).astype(jnp.float32)          # (W,)
+    expire = (arange_w == (j - epsilon - 1) % W).astype(jnp.float32)
+    return seed_mask, jnp.maximum(seed_mask, expire)
+
+
+def _cea_scan_kernel(start_ref,                                  # SMEM scalar
+                     ids_ref, m_all_ref, finals_ref, c_in_ref,   # inputs
+                     matches_ref, c_out_ref,                     # outputs
+                     c_scratch,                                  # VMEM scratch
                      *, W: int, S: int, NC: int, B_tile: int, T: int,
-                     epsilon: int, start_pos: int, init_state: int):
+                     epsilon: int, init_state: int):
     t = pl.program_id(1)
 
     # load the stream tile's state into VMEM scratch on the first event
@@ -54,13 +79,8 @@ def _cea_scan_kernel(ids_ref, m_all_ref, finals_ref, c_in_ref,  # inputs
 
     # ring-buffer update: evict the start that just left the window
     # (j - ε - 1) and seed a fresh run (start = j) at init_state
-    j = start_pos + t
-    seed_slot = j % W
-    expire_slot = (j - epsilon - 1) % W
-    arange_w = jax.lax.iota(jnp.int32, W)
-    clear = ((arange_w == seed_slot) | (arange_w == expire_slot)
-             ).astype(jnp.float32)                             # (W,)
-    seed_mask = (arange_w == seed_slot).astype(jnp.float32)    # (W,)
+    j = start_ref[0] + t
+    seed_mask, clear = _ring_masks(j, W, epsilon)
     init_oh = (jax.lax.iota(jnp.int32, S) == init_state
                ).astype(jnp.float32)                           # (S,)
     C = c_scratch[...]                                         # (B_tile, W, S)
@@ -85,7 +105,8 @@ def _cea_scan_kernel(ids_ref, m_all_ref, finals_ref, c_in_ref,  # inputs
 
 def cea_scan_pallas(class_ids: jnp.ndarray, m_all: jnp.ndarray,
                     finals: jnp.ndarray, c0: jnp.ndarray,
-                    *, epsilon: int, start_pos: int = 0, init_state: int = 1,
+                    start_pos: jnp.ndarray,
+                    *, epsilon: int, init_state: int = 1,
                     b_tile: int = 8, interpret: bool = False):
     """Raw pallas_call; use :func:`repro.kernels.ops.cea_scan` instead.
 
@@ -93,6 +114,7 @@ def cea_scan_pallas(class_ids: jnp.ndarray, m_all: jnp.ndarray,
     m_all:     (C, S, S) f32
     finals:    (1, S) f32
     c0:        (B, W, S) f32, W ≥ epsilon + 1
+    start_pos: (1,) int32 — dynamic stream offset of the chunk's first event
     returns    (matches (B, T) f32, c_final (B, W, S) f32)
     """
     B, T = class_ids.shape
@@ -104,12 +126,13 @@ def cea_scan_pallas(class_ids: jnp.ndarray, m_all: jnp.ndarray,
 
     kernel = functools.partial(
         _cea_scan_kernel, W=W, S=S, NC=NC, B_tile=b_tile, T=T,
-        epsilon=epsilon, start_pos=start_pos, init_state=init_state)
+        epsilon=epsilon, init_state=init_state)
 
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                # start_pos
             pl.BlockSpec((b_tile, 1), lambda b, t: (b, t)),       # ids
             pl.BlockSpec((NC, S, S), lambda b, t: (0, 0, 0)),     # M_all
             pl.BlockSpec((1, S), lambda b, t: (0, 0)),            # finals
@@ -125,18 +148,13 @@ def cea_scan_pallas(class_ids: jnp.ndarray, m_all: jnp.ndarray,
         ],
         scratch_shapes=[_vmem_scratch((b_tile, W, S))],
         interpret=interpret,
-    )(class_ids, m_all, finals, c0)
+    )(start_pos, class_ids, m_all, finals, c0)
 
 
-def _vmem_scratch(shape):
-    from jax.experimental.pallas import tpu as pltpu
-    return pltpu.VMEM(shape, jnp.float32)
-
-
-def _cea_scan_multi_kernel(ids_ref, m_all_ref, finals_ref, init_ref,
+def _cea_scan_multi_kernel(start_ref, ids_ref, m_all_ref, finals_ref, init_ref,
                            c_in_ref, matches_ref, c_out_ref, c_scratch,
                            *, W: int, S: int, NC: int, NQ: int, B_tile: int,
-                           T: int, epsilon: int, start_pos: int):
+                           T: int, epsilon: int):
     """Packed multi-query variant: multi-hot seeding + per-query finals."""
     t = pl.program_id(1)
 
@@ -151,13 +169,8 @@ def _cea_scan_multi_kernel(ids_ref, m_all_ref, finals_ref, init_ref,
     M = jnp.dot(onehot, m_flat,
                 preferred_element_type=jnp.float32).reshape(B_tile, S, S)
 
-    j = start_pos + t
-    seed_slot = j % W
-    expire_slot = (j - epsilon - 1) % W
-    arange_w = jax.lax.iota(jnp.int32, W)
-    clear = ((arange_w == seed_slot) | (arange_w == expire_slot)
-             ).astype(jnp.float32)
-    seed_mask = (arange_w == seed_slot).astype(jnp.float32)
+    j = start_ref[0] + t
+    seed_mask, clear = _ring_masks(j, W, epsilon)
     init = init_ref[0, :]                                      # (S,) multi-hot
     C = c_scratch[...]
     C = C * (1.0 - clear)[None, :, None] \
@@ -178,11 +191,11 @@ def _cea_scan_multi_kernel(ids_ref, m_all_ref, finals_ref, init_ref,
         c_out_ref[...] = c_scratch[...]
 
 
-def cea_scan_multi_pallas(class_ids, m_all, finals_q, init_mask, c0, *,
-                          epsilon: int, start_pos: int = 0, b_tile: int = 8,
+def cea_scan_multi_pallas(class_ids, m_all, finals_q, init_mask, c0,
+                          start_pos, *, epsilon: int, b_tile: int = 8,
                           interpret: bool = False):
     """class_ids (B, T) | m_all (C, S, S) | finals_q (Q, S) | init (1, S)
-    | c0 (B, W, S) → (matches (B, T, Q), c_final)."""
+    | c0 (B, W, S) | start_pos (1,) int32 → (matches (B, T, Q), c_final)."""
     B, T = class_ids.shape
     NC, S, _ = m_all.shape
     NQ = finals_q.shape[0]
@@ -191,11 +204,12 @@ def cea_scan_multi_pallas(class_ids, m_all, finals_q, init_mask, c0, *,
     grid = (B // b_tile, T)
     kernel = functools.partial(
         _cea_scan_multi_kernel, W=W, S=S, NC=NC, NQ=NQ, B_tile=b_tile, T=T,
-        epsilon=epsilon, start_pos=start_pos)
+        epsilon=epsilon)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                # start_pos
             pl.BlockSpec((b_tile, 1), lambda b, t: (b, t)),
             pl.BlockSpec((NC, S, S), lambda b, t: (0, 0, 0)),
             pl.BlockSpec((NQ, S), lambda b, t: (0, 0)),
@@ -212,4 +226,4 @@ def cea_scan_multi_pallas(class_ids, m_all, finals_q, init_mask, c0, *,
         ],
         scratch_shapes=[_vmem_scratch((b_tile, W, S))],
         interpret=interpret,
-    )(class_ids, m_all, finals_q, init_mask, c0)
+    )(start_pos, class_ids, m_all, finals_q, init_mask, c0)

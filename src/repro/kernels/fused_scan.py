@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: fused single-pass CER pipeline (DESIGN.md §3, §5).
+
+The unfused device path is three dispatches per chunk —
+
+    bitvector (predicate bits)  →  class_of gather  →  counting CEA scan
+
+— with two ``(T·B)``-sized intermediates (``bits``, ``class_ids``) bouncing
+through HBM between launches.  This kernel fuses the whole pipeline into ONE
+``pallas_call``: per event step it evaluates the k predicates on the raw
+attribute block, folds the packed bit-vector into a symbol class, gathers the
+transition matrix, and advances the windowed run-count ring — all in VMEM.
+The only per-step HBM traffic is the ``(B_tile, A)`` attribute block in and
+the ``(B_tile, NQ)`` match counts out; the ``(B, W, S)`` state never leaves
+VMEM between events.
+
+Class folding without dynamic gathers
+-------------------------------------
+``class_of`` is a ``(2^k,)`` lookup table; TPU kernels want matmuls, not
+gathers.  ops.py pre-expands it into a one-hot *indicator* ``(2^k, C)`` with
+``ind[v, c] = [class_of[v] = c]``; the kernel then computes
+
+    M  =  onehot(bits over 2^k) @ ind @ M_all.reshape(C, S·S)
+
+as two MXU matmuls.  For paper workloads k ≤ 14 and C ≪ 2^k, so the
+indicator is tiny next to ``M_all``.
+
+The kernel is NQ-generalized: ``finals`` is ``(NQ, S)`` and the seed vector
+``init`` is multi-hot, so the same kernel serves the single-query engine
+(NQ = 1, one-hot init) and the packed multi-query engine (block-diagonal
+``M_all``, one initial state per query block).
+
+``start_pos`` is a dynamic SMEM scalar — one compiled executable serves
+every chunk of an unbounded stream (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .bitvector import _CMP
+from .cea_scan import _ring_masks
+
+
+def _fused_scan_kernel(start_ref,                                # SMEM scalar
+                       attrs_ref, ind_ref, m_all_ref, finals_ref, init_ref,
+                       c_in_ref,                                 # inputs
+                       matches_ref, c_out_ref,                   # outputs
+                       c_scratch,                                # VMEM scratch
+                       *, specs: Tuple[Tuple[int, int, float], ...],
+                       V: int, W: int, S: int, NC: int, NQ: int,
+                       B_tile: int, T: int, epsilon: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        c_scratch[...] = c_in_ref[...]
+
+    # --- stage 1 (was: bitvector kernel): predicate bits, static unroll ----
+    attrs = attrs_ref[:, 0, :]                                 # (B_tile, A)
+    bits = jnp.zeros((B_tile,), dtype=jnp.int32)
+    for i, (col, op, thr) in enumerate(specs):
+        bit = _CMP[op](attrs[:, col], jnp.float32(thr))
+        bits = bits | (bit.astype(jnp.int32) << i)
+
+    # --- stage 2 (was: class_of gather): fold bits → class via indicator ---
+    onehot_v = (bits[:, None] == jax.lax.iota(jnp.int32, V)[None, :]
+                ).astype(jnp.float32)                          # (B_tile, 2^k)
+    cls = jnp.dot(onehot_v, ind_ref[...],
+                  preferred_element_type=jnp.float32)          # (B_tile, C)
+    m_flat = m_all_ref[...].reshape(NC, S * S)
+    M = jnp.dot(cls, m_flat,
+                preferred_element_type=jnp.float32).reshape(B_tile, S, S)
+
+    # --- stage 3 (was: cea_scan kernel): windowed counting-semiring step ---
+    j = start_ref[0] + t
+    seed_mask, clear = _ring_masks(j, W, epsilon)
+    init = init_ref[0, :]                                      # (S,) multi-hot
+    C = c_scratch[...]                                         # (B_tile, W, S)
+    C = C * (1.0 - clear)[None, :, None] \
+        + seed_mask[None, :, None] * init[None, None, :]
+    C = jax.lax.dot_general(
+        C, M, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    c_scratch[...] = C
+
+    finals = finals_ref[...]                                   # (NQ, S)
+    per_q = jax.lax.dot_general(
+        C.reshape(B_tile * W, S), finals.T, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(B_tile, W, NQ)
+    matches_ref[:, 0, :] = jnp.sum(per_q, axis=1)
+
+    @pl.when(t == T - 1)
+    def _flush():
+        c_out_ref[...] = c_scratch[...]
+
+
+def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
+                      m_all: jnp.ndarray, finals_q: jnp.ndarray,
+                      init_mask: jnp.ndarray, c0: jnp.ndarray,
+                      start_pos: jnp.ndarray,
+                      *, specs: Sequence[Tuple[int, int, float]],
+                      epsilon: int, b_tile: int = 8,
+                      interpret: bool = False):
+    """Raw pallas_call; use :func:`repro.kernels.ops.cer_pipeline` instead.
+
+    attrs:     (B, T, A) f32 — raw encoded event attributes
+    class_ind: (2^k, C) f32 — one-hot class indicator (padded rows are zero)
+    m_all:     (C, S, S) f32
+    finals_q:  (NQ, S) f32
+    init_mask: (1, S) f32 multi-hot seed vector
+    c0:        (B, W, S) f32, W ≥ epsilon + 1
+    start_pos: (1,) int32 dynamic chunk offset
+    returns    (matches (B, T, NQ) f32, c_final (B, W, S) f32)
+    """
+    B, T, A = attrs.shape
+    NC, S, _ = m_all.shape
+    V = class_ind.shape[0]
+    NQ = finals_q.shape[0]
+    W = c0.shape[1]
+    assert B % b_tile == 0, (B, b_tile)
+    assert W >= epsilon + 1, (W, epsilon)
+    grid = (B // b_tile, T)
+
+    kernel = functools.partial(
+        _fused_scan_kernel, specs=tuple(specs), V=V, W=W, S=S, NC=NC,
+        NQ=NQ, B_tile=b_tile, T=T, epsilon=epsilon)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # start_pos
+            pl.BlockSpec((b_tile, 1, A), lambda b, t: (b, t, 0)),  # attrs
+            pl.BlockSpec((V, NC), lambda b, t: (0, 0)),            # indicator
+            pl.BlockSpec((NC, S, S), lambda b, t: (0, 0, 0)),      # M_all
+            pl.BlockSpec((NQ, S), lambda b, t: (0, 0)),            # finals
+            pl.BlockSpec((1, S), lambda b, t: (0, 0)),             # init
+            pl.BlockSpec((b_tile, W, S), lambda b, t: (b, 0, 0)),  # C0
+        ],
+        out_specs=[
+            pl.BlockSpec((b_tile, 1, NQ), lambda b, t: (b, t, 0)),  # matches
+            pl.BlockSpec((b_tile, W, S), lambda b, t: (b, 0, 0)),   # C_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, NQ), jnp.float32),
+            jax.ShapeDtypeStruct((B, W, S), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((b_tile, W, S), jnp.float32)],
+        interpret=interpret,
+    )(start_pos, attrs, class_ind, m_all, finals_q, init_mask, c0)

@@ -5,11 +5,25 @@ B → ×b_tile), interpret-mode fallback off-TPU, VMEM budget checks, and
 re-slicing outputs back to logical shapes.  The pure-jnp oracles live in
 :mod:`repro.kernels.ref`; tests assert allclose between the two on shape /
 dtype sweeps.
+
+Pipeline routing (DESIGN.md §3/§5): :func:`cer_pipeline` is the single entry
+point for the device CER pipeline and routes between
+
+* ``impl="fused"``   — ONE dispatch: the fused Pallas kernel
+  (:mod:`repro.kernels.fused_scan`), or, when Pallas is unavailable /
+  misaligned, one fused XLA computation (callers jit it as a unit, so the
+  ``bits``/``class_ids`` intermediates never round-trip through host or
+  dispatch boundaries).
+* ``impl="unfused"`` — the legacy three-dispatch path (bit-vector kernel →
+  class gather → CEA scan kernel), kept as a perf baseline and oracle.
+* ``impl="ref"``     — pure-jnp oracles end to end.
+
+``start_pos`` is dynamic everywhere: pass a Python int *or* a traced int32
+scalar; one compiled executable serves every chunk offset.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -17,9 +31,12 @@ import numpy as np
 
 from . import ref
 from .bitvector import bitvector_pallas
-from .cea_scan import cea_scan_pallas
+from .cea_scan import cea_scan_multi_pallas, cea_scan_pallas
+from .fused_scan import fused_scan_pallas
 
 VMEM_BYTES = 16 * 1024 * 1024  # v5e VMEM per core (we budget ~16 MB)
+
+IMPLS = ("fused", "unfused", "ref")
 
 
 def _on_tpu() -> bool:
@@ -33,6 +50,26 @@ def _pad_to(x: int, m: int) -> int:
 def ring_size(epsilon: int) -> int:
     """Ring-buffer slots for window ε, aligned to the f32 sublane width."""
     return _pad_to(epsilon + 1, 8)
+
+
+def _start_arr(start_pos: Union[int, jnp.ndarray]) -> jnp.ndarray:
+    """Dynamic start position → (1,) int32 SMEM operand (never a static)."""
+    return jnp.reshape(jnp.asarray(start_pos, jnp.int32), (1,))
+
+
+def class_indicator(class_of: np.ndarray, num_classes: int) -> jnp.ndarray:
+    """``(2^k,)`` class lookup → ``(2^k, C)`` one-hot indicator.
+
+    The fused kernel folds bit-vectors into classes with an MXU matmul
+    against this table instead of a dynamic gather.  Rows are padded to the
+    f32 sublane width with all-zero rows (never selected: bits < 2^k);
+    column padding to the aligned class count happens in cer_pipeline.
+    """
+    class_of = np.asarray(class_of)
+    V = class_of.shape[0]
+    ind = np.zeros((_pad_to(max(V, 1), 8), num_classes), dtype=np.float32)
+    ind[np.arange(V), class_of] = 1.0
+    return jnp.asarray(ind)
 
 
 # ---------------------------------------------------------------------------
@@ -65,7 +102,8 @@ def bitvector(attrs: jnp.ndarray, specs: Sequence[Tuple[int, int, float]],
 
 
 def cea_scan(class_ids: jnp.ndarray, m_all: jnp.ndarray, finals: jnp.ndarray,
-             c0: jnp.ndarray, *, epsilon: int, start_pos: int = 0,
+             c0: jnp.ndarray, *, epsilon: int,
+             start_pos: Union[int, jnp.ndarray] = 0,
              init_state: int = 1, use_pallas: bool = True,
              interpret: Optional[bool] = None, b_tile: int = 8
              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -73,6 +111,10 @@ def cea_scan(class_ids: jnp.ndarray, m_all: jnp.ndarray, finals: jnp.ndarray,
 
     class_ids (T, B) int32 | m_all (C, S, S) f32 | finals (S,) | c0 (B, W, S)
     with W ≥ epsilon+1 → (matches (T, B) f32, c_final (B, W, S) f32).
+
+    ``start_pos`` may be a Python int or a traced int32 scalar — it reaches
+    the kernel as a dynamic SMEM operand, so chunked callers reuse one
+    compiled executable across chunks (DESIGN.md §5).
 
     Ring arithmetic is exact under padding: the kernel evicts start j-ε-1
     and seeds start j each step, so any ring size W ≥ ε+1 gives identical
@@ -107,8 +149,8 @@ def cea_scan(class_ids: jnp.ndarray, m_all: jnp.ndarray, finals: jnp.ndarray,
                          f"(W={W}, S={Sp}, C={NCp}, b_tile={b_tile})")
 
     matches, c_fin = cea_scan_pallas(
-        ids_pad, m_pad, f_pad, c_pad,
-        epsilon=epsilon, start_pos=start_pos, init_state=init_state,
+        ids_pad, m_pad, f_pad, c_pad, _start_arr(start_pos),
+        epsilon=epsilon, init_state=init_state,
         b_tile=b_tile, interpret=interpret)
     return matches[:B].T, c_fin[:B, :W, :S]
 
@@ -123,7 +165,8 @@ def _scan_xla(class_ids, m_all, finals, c0, epsilon, start_pos, init_state):
 def cea_scan_multi(class_ids: jnp.ndarray, m_all: jnp.ndarray,
                    finals_q: jnp.ndarray, c0: jnp.ndarray,
                    *, init_mask: jnp.ndarray, epsilon: int,
-                   start_pos: int = 0, use_pallas: bool = True,
+                   start_pos: Union[int, jnp.ndarray] = 0,
+                   use_pallas: bool = True,
                    interpret: Optional[bool] = None, b_tile: int = 8
                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Packed multi-query scan (vector/multiquery.py).
@@ -131,8 +174,6 @@ def cea_scan_multi(class_ids: jnp.ndarray, m_all: jnp.ndarray,
     class_ids (T, B) | m_all (C, S, S) | finals_q (Q, S) | c0 (B, W, S)
     → (matches (T, B, Q), c_final).
     """
-    from .cea_scan import cea_scan_multi_pallas
-
     T, B = class_ids.shape
     NC, S, _ = m_all.shape
     NQ = finals_q.shape[0]
@@ -154,6 +195,105 @@ def cea_scan_multi(class_ids: jnp.ndarray, m_all: jnp.ndarray,
     c_pad = jnp.pad(c0, ((0, Bp - B), (0, 0), (0, Sp - S)))
     ids_pad = jnp.pad(class_ids.T, ((0, Bp - B), (0, 0)))
     matches, c_fin = cea_scan_multi_pallas(
-        ids_pad, m_pad, f_pad, i_pad, c_pad, epsilon=epsilon,
-        start_pos=start_pos, b_tile=b_tile, interpret=interpret)
+        ids_pad, m_pad, f_pad, i_pad, c_pad, _start_arr(start_pos),
+        epsilon=epsilon, b_tile=b_tile, interpret=interpret)
     return jnp.moveaxis(matches[:B, :, :NQ], 0, 1), c_fin[:B, :, :S]
+
+
+# ---------------------------------------------------------------------------
+# fused single-pass pipeline
+# ---------------------------------------------------------------------------
+
+
+def cer_pipeline(attrs: jnp.ndarray,
+                 specs: Sequence[Tuple[int, int, float]],
+                 class_of: jnp.ndarray, class_ind: jnp.ndarray,
+                 m_all: jnp.ndarray, finals_q: jnp.ndarray,
+                 c0: jnp.ndarray, *, init_mask: jnp.ndarray, epsilon: int,
+                 start_pos: Union[int, jnp.ndarray] = 0,
+                 impl: str = "fused", use_pallas: bool = True,
+                 interpret: Optional[bool] = None, b_tile: int = 8
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full device CER pipeline: raw attributes → per-position match counts.
+
+    attrs (T, B, A) f32 | class_of (2^k,) int32 | class_ind (≥2^k, C) f32
+    | m_all (C, S, S) | finals_q (Q, S) | init_mask (S,) | c0 (B, W, S)
+    → (matches (T, B, Q) f32, c_final (B, W, S) f32).
+
+    ``impl`` routes fused / unfused / ref (module docstring).  The fused
+    Pallas path needs W ≡ 0 (mod 8) and the VMEM budget to hold the
+    indicator + tables + state tile; otherwise it degrades to the fused XLA
+    computation (still one dispatch under the caller's jit).
+    """
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    T, B, A = attrs.shape
+    NC, S, _ = m_all.shape
+    W = c0.shape[1]
+
+    if impl == "ref" or (impl == "fused" and not use_pallas):
+        return _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0,
+                             init_mask, epsilon, start_pos)
+
+    if impl == "unfused":
+        # legacy 3-dispatch path: bits kernel → gather → scan kernel
+        bits = bitvector(attrs.reshape(T * B, A), specs,
+                         use_pallas=use_pallas, interpret=interpret)
+        class_ids = class_of[bits].reshape(T, B)
+        return cea_scan_multi(class_ids, m_all, finals_q, c0,
+                              init_mask=init_mask, epsilon=epsilon,
+                              start_pos=start_pos, use_pallas=use_pallas,
+                              interpret=interpret, b_tile=b_tile)
+
+    # --- impl == "fused" ----------------------------------------------------
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    NQ = finals_q.shape[0]
+    V = class_ind.shape[0]
+    Sp = _pad_to(S, 128)
+    NCp = _pad_to(NC, 8)
+    NQp = _pad_to(NQ, 8)
+    vmem = 4 * (3 * b_tile * W * Sp            # c_in + c_out + scratch
+                + V * NCp + V * b_tile         # indicator + one-hot temp
+                + NCp * Sp * Sp + NQp * Sp     # tables
+                + b_tile * Sp * Sp             # gathered-M temp
+                + b_tile * W * NQp             # per_q temp
+                + b_tile * A + b_tile * NQp)   # attrs block + matches block
+    if W % 8 != 0 or vmem > VMEM_BYTES:
+        return _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0,
+                             init_mask, epsilon, start_pos)
+
+    Bp = _pad_to(B, b_tile)
+    a_pad = jnp.pad(jnp.moveaxis(attrs, 0, 1),
+                    ((0, Bp - B), (0, 0), (0, 0)))            # (Bp, T, A)
+    ind_pad = jnp.pad(class_ind, ((0, 0), (0, NCp - NC)))
+    m_pad = jnp.pad(m_all, ((0, NCp - NC), (0, Sp - S), (0, Sp - S)))
+    f_pad = jnp.pad(finals_q.astype(jnp.float32),
+                    ((0, NQp - NQ), (0, Sp - S)))
+    i_pad = jnp.pad(init_mask.astype(jnp.float32), (0, Sp - S))[None, :]
+    c_pad = jnp.pad(c0, ((0, Bp - B), (0, 0), (0, Sp - S)))
+
+    matches, c_fin = fused_scan_pallas(
+        a_pad, ind_pad, m_pad, f_pad, i_pad, c_pad, _start_arr(start_pos),
+        specs=tuple(specs), epsilon=epsilon, b_tile=b_tile,
+        interpret=interpret)
+    return jnp.moveaxis(matches[:B, :, :NQ], 0, 1), c_fin[:B, :, :S]
+
+
+def _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0, init_mask,
+                  epsilon, start_pos):
+    """Fused pipeline as one XLA computation (also the ``ref`` oracle).
+
+    Same dataflow as the fused kernel: under a single jit the ``bits`` /
+    ``class_ids`` intermediates live only inside the compiled computation —
+    no extra dispatches, no host round trips between stages.
+    """
+    T, B, A = attrs.shape
+    idx = jnp.asarray([s[0] for s in specs], dtype=jnp.int32)
+    ops_ = jnp.asarray([s[1] for s in specs], dtype=jnp.int32)
+    thr = jnp.asarray([s[2] for s in specs], dtype=jnp.float32)
+    bits = ref.bitvector_ref(attrs.reshape(T * B, A), idx, ops_, thr)
+    class_ids = class_of[bits].reshape(T, B)
+    c_fin, matches = ref.cea_scan_multi_ref(c0, m_all, class_ids, finals_q,
+                                            init_mask, epsilon,
+                                            start_pos=start_pos)
+    return matches, c_fin

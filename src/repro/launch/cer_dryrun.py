@@ -25,7 +25,7 @@ from ..vector.symbolic import compile_symbolic
 from ..vector.distributed import route_by_partition, sharded_cea_scan
 from ..kernels import ops
 from .dryrun import collective_bytes
-from .mesh import make_production_mesh
+from .mesh import make_production_mesh, use_mesh
 
 QUERY = ("SELECT * FROM S WHERE SELL AS a ; BUY AS b ; SELL AS c "
          "FILTER a[price > 25.0] AND c[price < 10.0]")
@@ -51,7 +51,7 @@ def main() -> None:
     finals = jax.ShapeDtypeStruct((S,), jnp.float32)
     c0 = jax.ShapeDtypeStruct((B, W, S), jnp.float32)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(
             lambda i, m, f, c: sharded_cea_scan(
                 mesh, i, m, f, c, epsilon=args.epsilon)

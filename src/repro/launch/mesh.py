@@ -6,7 +6,29 @@ XLA_FLAGS before any JAX initialization.
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+
+def _make_mesh(shape, axes, devices):
+    """jax.make_mesh across versions (axis_types only where supported)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def use_mesh(mesh):
+    """Context manager: jax.set_mesh where available, else a no-op.
+
+    shard_map receives the mesh explicitly, so on older jax the ambient-mesh
+    context is unnecessary — entering it is still harmless either way.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return contextlib.nullcontext(mesh)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,13 +43,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     n = 1
     for s in shape:
         n *= s
-    return jax.make_mesh(
-        shape, axes, devices=jax.devices()[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, devices=jax.devices()[:n])
 
 
 def make_host_mesh():
     """Single-device mesh for CPU tests (same axis names as production)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"), devices=None)

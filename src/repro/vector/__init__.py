@@ -1,7 +1,8 @@
 """Device (TPU-native) CER engine: symbolic tables + semiring scan."""
 from .encoder import EventEncoder
 from .engine import VectorEngine, VectorQueryTables
+from .streaming import StreamingVectorEngine
 from .symbolic import SymbolicCEA, compile_symbolic
 
 __all__ = ["EventEncoder", "VectorEngine", "VectorQueryTables",
-           "SymbolicCEA", "compile_symbolic"]
+           "StreamingVectorEngine", "SymbolicCEA", "compile_symbolic"]

@@ -1,12 +1,17 @@
 """Distributed CER: partition-by sharded across the device mesh.
 
 The paper leaves parallel/distributed execution as future work (§7); this
-module provides it.  Two pieces:
+module provides it.  Three pieces:
 
 * :func:`sharded_cea_scan` — the windowed counting scan with the stream/batch
   axis sharded over every mesh axis (partitions are independent, so the scan
   itself needs **no** collectives — the ideal scaling case the partition-by
   operator exposes).
+* :func:`sharded_cer_pipeline` — the fused single-pass pipeline
+  (attrs → bits → class → scan, :func:`repro.kernels.ops.cer_pipeline`)
+  sharded the same way: tables replicated, streams sharded, still zero
+  collectives, and ``start_pos`` stays a dynamic operand so chunked /
+  streaming callers reuse one executable per mesh.
 * :func:`route_by_partition` — the event router: incoming event blocks carry a
   partition hash; an ``all_to_all`` moves each event to the shard that owns
   its partition.  This is the one collective of the distributed engine and is
@@ -14,16 +19,25 @@ module provides it.  Two pieces:
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from ..kernels import ops
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (older: jax.experimental)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
 
 
 def stream_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -32,24 +46,51 @@ def stream_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 
 def sharded_cea_scan(mesh: Mesh, class_ids, m_all, finals, c0, *,
-                     epsilon: int, start_pos: int = 0,
+                     epsilon: int, start_pos: Union[int, jnp.ndarray] = 0,
                      use_pallas: bool = False):
     """Shard the B axis of the scan over every mesh axis via shard_map.
 
     class_ids (T, B) | m_all, finals replicated | c0 (B, W, S) sharded on B.
+    ``start_pos`` is a replicated dynamic operand (chunk offset).
     """
     axes = stream_axes(mesh)
 
-    def local_scan(ids, m, f, c):
+    def local_scan(ids, m, f, c, sp):
         return ops.cea_scan(ids, m, f, c, epsilon=epsilon,
-                            start_pos=start_pos, use_pallas=use_pallas)
+                            start_pos=sp[0], use_pallas=use_pallas)
 
-    return jax.shard_map(
-        local_scan, mesh=mesh,
-        in_specs=(P(None, axes), P(), P(), P(axes)),
-        out_specs=(P(None, axes), P(axes)),
-        check_vma=False,
-    )(class_ids, m_all, finals, c0)
+    return _shard_map(
+        local_scan, mesh,
+        (P(None, axes), P(), P(), P(axes), P()),
+        (P(None, axes), P(axes)),
+    )(class_ids, m_all, finals, c0, ops._start_arr(start_pos))
+
+
+def sharded_cer_pipeline(mesh: Mesh, attrs, specs, class_of, class_ind,
+                         m_all, finals_q, c0, *, init_mask, epsilon: int,
+                         start_pos: Union[int, jnp.ndarray] = 0,
+                         impl: str = "fused", use_pallas: bool = False,
+                         b_tile: int = 8):
+    """Fused single-pass pipeline with streams sharded over the mesh.
+
+    attrs (T, B, A) sharded on B | tables replicated | c0 (B, W, S) sharded.
+    Returns (matches (T, B, Q), c_final) with the same shardings.  Zero
+    collectives: every shard runs the fused pipeline on its own substreams.
+    """
+    axes = stream_axes(mesh)
+    specs = tuple(specs)
+
+    def local_pipeline(a, co, ci, m, fq, c, im, sp):
+        return ops.cer_pipeline(a, specs, co, ci, m, fq, c, init_mask=im,
+                                epsilon=epsilon, start_pos=sp[0], impl=impl,
+                                use_pallas=use_pallas, b_tile=b_tile)
+
+    return _shard_map(
+        local_pipeline, mesh,
+        (P(None, axes, None), P(), P(), P(), P(), P(axes), P(), P()),
+        (P(None, axes, None), P(axes)),
+    )(attrs, class_of, class_ind, m_all, finals_q, c0, init_mask,
+      ops._start_arr(start_pos))
 
 
 def route_by_partition(mesh: Mesh, events: jnp.ndarray, keys: jnp.ndarray,
@@ -89,9 +130,8 @@ def route_by_partition(mesh: Mesh, events: jnp.ndarray, keys: jnp.ndarray,
                                     concat_axis=0, tiled=False)
         return routed.reshape(n_shards * cap, A), keep
 
-    return jax.shard_map(
-        local_route, mesh=mesh,
-        in_specs=(P(axes), P(axes)),
-        out_specs=(P(axes), P(axes)),
-        check_vma=False,
+    return _shard_map(
+        local_route, mesh,
+        (P(axes), P(axes)),
+        (P(axes), P(axes)),
     )(events, keys)

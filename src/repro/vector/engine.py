@@ -6,18 +6,22 @@ of complex events closing there (``|⟦A⟧ε_j(S)|``) plus a hit bitmap, using 
 windowed counting-semiring scan.  Enumeration of the actual complex events
 stays on the host tECS engine, invoked only at hit positions.
 
+Execution is routed through :func:`repro.kernels.ops.cer_pipeline`
+(``impl`` ∈ fused / unfused / ref): the default fused path evaluates
+predicates, class folding, and the semiring scan in one dispatch.  For true
+streaming (fixed-size chunks, donated state, compile-once) use
+:class:`repro.vector.streaming.StreamingVectorEngine`.
+
 Batching = partition-by: the B axis carries independent substreams.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.cea import CEA
 from ..core.events import Event
 from ..core.query import CompiledQuery, compile_query
 from ..kernels import ops
@@ -32,6 +36,8 @@ class VectorQueryTables:
     m_all: jnp.ndarray       # (C, S, S) f32
     finals: jnp.ndarray      # (S,) f32
     class_of: jnp.ndarray    # (2^k,) int32
+    class_ind: jnp.ndarray   # (≥2^k, C) f32 one-hot indicator (fused path)
+    init_mask: jnp.ndarray   # (S,) f32 one-hot seed at the initial det state
     num_states: int
     num_classes: int
     num_bits: int
@@ -40,8 +46,9 @@ class VectorQueryTables:
 class VectorEngine:
     """End-to-end device evaluation of a windowed CEQL query over B streams."""
 
-    def __init__(self, query: str | CompiledQuery, epsilon: int,
-                 use_pallas: bool = True, b_tile: int = 8):
+    def __init__(self, query: Union[str, CompiledQuery], epsilon: int,
+                 use_pallas: bool = True, b_tile: int = 8,
+                 impl: Optional[str] = None):
         compiled = compile_query(query) if isinstance(query, str) else query
         self.compiled = compiled
         self.symbolic: SymbolicCEA = compile_symbolic(compiled.cea)
@@ -50,10 +57,18 @@ class VectorEngine:
         self.ring = ops.ring_size(self.epsilon)
         self.use_pallas = use_pallas
         self.b_tile = b_tile
+        # impl: None → fused when the device path is on, ref otherwise
+        self.impl = impl if impl is not None else (
+            "fused" if use_pallas else "ref")
+        init_mask = np.zeros(self.symbolic.num_states, np.float32)
+        init_mask[self.symbolic.initial] = 1.0
         self.tables = VectorQueryTables(
             m_all=jnp.asarray(self.symbolic.transition_matrices()),
             finals=jnp.asarray(self.symbolic.finals, dtype=jnp.float32),
             class_of=jnp.asarray(self.symbolic.class_of),
+            class_ind=ops.class_indicator(self.symbolic.class_of,
+                                          self.symbolic.num_classes),
+            init_mask=jnp.asarray(init_mask),
             num_states=self.symbolic.num_states,
             num_classes=self.symbolic.num_classes,
             num_bits=self.symbolic.num_bits,
@@ -78,24 +93,37 @@ class VectorEngine:
         return self.tables.class_of[bits].reshape(T, B)
 
     def scan(self, class_ids: jnp.ndarray, state: jnp.ndarray,
-             start_pos: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+             start_pos: Union[int, jnp.ndarray] = 0
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(T, B) class ids × (B, W, S) state → (matches (T, B), state')."""
         return ops.cea_scan(class_ids, self.tables.m_all, self.tables.finals,
                             state, epsilon=self.epsilon, start_pos=start_pos,
                             use_pallas=self.use_pallas, b_tile=self.b_tile)
 
+    def pipeline(self, attrs: jnp.ndarray, state: jnp.ndarray,
+                 start_pos: Union[int, jnp.ndarray] = 0
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Single-dispatch path: (T, B, A) attrs → (matches (T, B), state')."""
+        t = self.tables
+        matches, state = ops.cer_pipeline(
+            attrs, self.encoder.specs, t.class_of, t.class_ind, t.m_all,
+            t.finals[None, :], state, init_mask=t.init_mask,
+            epsilon=self.epsilon, start_pos=start_pos, impl=self.impl,
+            use_pallas=self.use_pallas, b_tile=self.b_tile)
+        return matches[:, :, 0], state
+
     def run(self, streams: Sequence[Sequence[Event]],
-            state: Optional[jnp.ndarray] = None, start_pos: int = 0
+            state: Optional[jnp.ndarray] = None,
+            start_pos: Union[int, jnp.ndarray] = 0
             ) -> Tuple[np.ndarray, jnp.ndarray]:
         """Convenience host→device→host path.
 
         Returns (match counts (T, B) int64, final device state).
         """
         attrs = self.encode(streams)
-        ids = self.classify(attrs)
         if state is None:
             state = self.init_state(attrs.shape[1])
-        matches, state = self.scan(ids, state, start_pos=start_pos)
+        matches, state = self.pipeline(attrs, state, start_pos=start_pos)
         return np.asarray(matches).astype(np.int64), state
 
     # ------------------------------------------------------------------

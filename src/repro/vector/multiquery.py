@@ -19,7 +19,7 @@ than q padded scans — measured in benchmarks/perf_cer.py.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -38,6 +38,7 @@ class PackedTables:
     m_all: jnp.ndarray          # (C, Ŝ, Ŝ)
     finals: jnp.ndarray         # (Q, Ŝ) one mask row per query
     class_of: jnp.ndarray       # (2^k,)
+    class_ind: jnp.ndarray      # (≥2^k, C) one-hot indicator (fused path)
     init_mask: jnp.ndarray      # (Ŝ,) 1.0 at each query's initial state
     offsets: List[int]          # block start per query
     sizes: List[int]
@@ -47,7 +48,8 @@ class MultiQueryEngine:
     """Evaluate several CEQL queries over the same streams in one scan."""
 
     def __init__(self, queries: Sequence[str], epsilon: int,
-                 use_pallas: bool = True, b_tile: int = 8):
+                 use_pallas: bool = True, b_tile: int = 8,
+                 impl: Optional[str] = None):
         registry = AtomRegistry()   # SHARED across queries
         self.compiled: List[CompiledQuery] = [
             compile_query(q, registry) for q in queries]
@@ -58,6 +60,8 @@ class MultiQueryEngine:
         self.ring = ops.ring_size(self.epsilon)
         self.use_pallas = use_pallas
         self.b_tile = b_tile
+        self.impl = impl if impl is not None else (
+            "fused" if use_pallas else "ref")
         self.tables = self._pack()
 
     # ------------------------------------------------------------------
@@ -91,6 +95,8 @@ class MultiQueryEngine:
         return PackedTables(
             m_all=jnp.asarray(m_all), finals=jnp.asarray(finals),
             class_of=jnp.asarray(class_of.astype(np.int32)),
+            class_ind=ops.class_indicator(class_of.astype(np.int32),
+                                          n_classes),
             init_mask=jnp.asarray(init_mask), offsets=offsets, sizes=sizes)
 
     # ------------------------------------------------------------------
@@ -128,10 +134,18 @@ class MultiQueryEngine:
             start_pos=start_pos, use_pallas=self.use_pallas,
             b_tile=self.b_tile)
 
+    def pipeline(self, attrs, state, start_pos=0):
+        """Single-dispatch fused path: (T, B, A) → (matches (T, B, Q), st')."""
+        t = self.tables
+        return ops.cer_pipeline(
+            attrs, self.encoder.specs, t.class_of, t.class_ind, t.m_all,
+            t.finals, state, init_mask=t.init_mask, epsilon=self.epsilon,
+            start_pos=start_pos, impl=self.impl, use_pallas=self.use_pallas,
+            b_tile=self.b_tile)
+
     def run(self, streams, state=None, start_pos: int = 0):
         attrs = jnp.asarray(self.encoder.encode_streams(streams))
-        ids = self.classify(attrs)
         if state is None:
             state = self.init_state(attrs.shape[1])
-        matches, state = self.scan(ids, state, start_pos=start_pos)
+        matches, state = self.pipeline(attrs, state, start_pos=start_pos)
         return np.asarray(matches).astype(np.int64), state

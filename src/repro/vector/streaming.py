@@ -1,0 +1,158 @@
+"""Streaming CER runtime: compile-once chunked evaluation (DESIGN.md §5).
+
+CORE's headline property is constant per-event cost on *unbounded* streams;
+:class:`StreamingVectorEngine` is the device-side operational mode for that
+claim:
+
+* **Shape-stable chunks** — events arrive in fixed-length ``(chunk_len, B)``
+  chunks, so the jitted step has exactly one input signature and compiles
+  exactly once, no matter how many chunks flow through.
+* **Dynamic** ``start_pos`` — the stream offset is a traced int32 operand
+  (not a static), carried across chunks by the engine; the ring-buffer
+  seed/expire slots are derived from it inside the kernel.
+* **Donated state ring** — the ``(B, W, S)`` run-count tensor is donated to
+  each step (``jit(..., donate_argnums=...)``), so steady-state streaming
+  performs zero fresh allocations for state on backends with donation
+  (donation is a no-op on CPU, where XLA ignores it with a warning we
+  silence).
+* **Host hand-off** — :meth:`feed` returns per-position match counts plus
+  the absolute ``(pos, stream)`` hit list the host tECS enumerator consumes
+  (deviation D1: recognition on device, enumeration on host).
+
+Works for both the single-query :class:`~repro.vector.engine.VectorEngine`
+and the packed :class:`~repro.vector.multiquery.MultiQueryEngine` (pass one
+as ``engine``; match counts then carry a trailing query axis).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.events import Event
+from ..kernels import ops
+
+class StreamingVectorEngine:
+    """Fixed-chunk streaming wrapper around the fused device pipeline."""
+
+    def __init__(self, engine, chunk_len: int, batch: int,
+                 impl: Optional[str] = None):
+        """``engine``: a constructed VectorEngine or MultiQueryEngine.
+
+        chunk_len: events per feed() call — fixed for shape-stable compiles.
+        batch:     number of parallel substreams (partition-by lanes).
+        """
+        if isinstance(engine, str):
+            raise TypeError("pass a constructed VectorEngine/MultiQueryEngine"
+                            " (a bare query string has no window ε)")
+        self.engine = engine
+        self.encoder = engine.encoder
+        self.epsilon = engine.epsilon
+        self.chunk_len = int(chunk_len)
+        self.batch = int(batch)
+        self.impl = impl if impl is not None else getattr(
+            engine, "impl", "fused")
+        t = engine.tables
+        # normalize single-query tables to the NQ-generalized pipeline form
+        finals = t.finals
+        self._finals_q = finals if finals.ndim == 2 else finals[None, :]
+        self._init_mask = t.init_mask
+        self._class_of = t.class_of
+        self._class_ind = t.class_ind
+        self._m_all = t.m_all
+        self._single_query = finals.ndim == 1
+        self._specs = self.encoder.specs
+        self._use_pallas = engine.use_pallas
+        self._b_tile = engine.b_tile
+
+        self._state = engine.init_state(batch)
+        self._pos = 0
+        self._trace_count = 0  # incremented per trace == per compile
+        # state ring donated: steady-state streaming allocates nothing new
+        self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def _step_impl(self, attrs: jnp.ndarray, state: jnp.ndarray,
+                   start_pos: jnp.ndarray):
+        self._trace_count += 1  # runs only while tracing (i.e. compiling)
+        return ops.cer_pipeline(
+            attrs, self._specs, self._class_of, self._class_ind, self._m_all,
+            self._finals_q, state, init_mask=self._init_mask,
+            epsilon=self.epsilon, start_pos=start_pos, impl=self.impl,
+            use_pallas=self._use_pallas, b_tile=self._b_tile)
+
+    # ------------------------------------------------------------------
+    @property
+    def position(self) -> int:
+        """Absolute stream position of the next event to arrive."""
+        return self._pos
+
+    @property
+    def state(self) -> jnp.ndarray:
+        """Current (B, W, S) run-count ring (device-resident).
+
+        The buffer is *donated* to the next :meth:`feed` — on backends with
+        donation (TPU/GPU) a held reference is invalidated by that call.
+        Copy (``jnp.array(se.state)``) before feeding if you need a snapshot.
+        """
+        return self._state
+
+    @property
+    def compile_count(self) -> int:
+        """How many distinct executables the step has compiled (goal: 1)."""
+        cache_size = getattr(self._step, "_cache_size", None)
+        if cache_size is not None:
+            try:
+                return int(cache_size())
+            except Exception:
+                pass
+        return self._trace_count
+
+    # ------------------------------------------------------------------
+    def feed(self, streams: Sequence[Sequence[Event]]
+             ) -> Tuple[np.ndarray, List[Tuple[int, int]]]:
+        """Feed one chunk of B streams × chunk_len events.
+
+        Returns ``(counts, hits)``: counts is ``(chunk_len, B)`` int64 match
+        counts per position (plus a trailing query axis for a multi-query
+        engine); hits is the list of absolute ``(position, stream)`` pairs
+        with ≥ 1 match, ready for the host tECS enumerator.
+        """
+        attrs = jnp.asarray(self.encoder.encode_streams(streams))
+        return self.feed_attrs(attrs)
+
+    def feed_attrs(self, attrs: jnp.ndarray
+                   ) -> Tuple[np.ndarray, List[Tuple[int, int]]]:
+        """Device-tensor entry point: attrs (chunk_len, B, A) f32."""
+        T, B = attrs.shape[0], attrs.shape[1]
+        if T != self.chunk_len or B != self.batch:
+            raise ValueError(
+                f"streaming chunk must be (chunk_len={self.chunk_len}, "
+                f"batch={self.batch}, A); got (T={T}, B={B}).  Pad the tail "
+                "chunk on the host or build a second engine for remainders — "
+                "odd shapes would trigger a recompile per shape.")
+        t0 = self._pos
+        with warnings.catch_warnings():
+            # XLA has no donation on CPU; semantics are unchanged (we always
+            # rebind the returned state), so the per-compile nag is noise.
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            counts_f, self._state = self._step(
+                attrs, self._state, jnp.asarray(self._pos, jnp.int32))
+        self._pos += T
+        if self._single_query:
+            counts_f = counts_f[:, :, 0]
+        counts = np.asarray(counts_f).astype(np.int64)
+        hit_dims = np.nonzero(counts.sum(axis=-1) if counts.ndim == 3
+                              else counts)
+        hits = [(t0 + int(t), int(b)) for t, b in zip(*hit_dims)]
+        return counts, hits
+
+    # ------------------------------------------------------------------
+    def reset(self) -> None:
+        """Drop all live runs and rewind the stream position."""
+        self._state = self.engine.init_state(self.batch)
+        self._pos = 0

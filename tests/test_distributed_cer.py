@@ -4,8 +4,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.mesh import make_host_mesh
-from repro.vector.distributed import route_by_partition, sharded_cea_scan
+from repro.launch.mesh import make_host_mesh, use_mesh
+from repro.vector.distributed import (route_by_partition, sharded_cea_scan,
+                                      sharded_cer_pipeline)
 from repro.kernels import ops, ref
 
 
@@ -28,10 +29,37 @@ def test_sharded_scan_matches_local():
     rng = np.random.default_rng(0)
     ids = jnp.asarray(rng.integers(0, 4, (T, B)), jnp.int32)
     c0 = jnp.zeros((B, ops.ring_size(eps), 5), jnp.float32)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         m_sh, c_sh = sharded_cea_scan(mesh, ids, M, finals, c0, epsilon=eps)
     m_loc, c_loc = ops.cea_scan(ids, M, finals, c0, epsilon=eps,
                                 use_pallas=False)
+    np.testing.assert_allclose(np.asarray(m_sh), np.asarray(m_loc))
+    np.testing.assert_allclose(np.asarray(c_sh), np.asarray(c_loc))
+
+
+def test_sharded_pipeline_matches_local_fused():
+    """Sharded fused pipeline == local pipeline (zero-collective scaling)."""
+    mesh = make_host_mesh()
+    rng = np.random.default_rng(7)
+    S, C, A, k = 5, 4, 3, 4
+    specs = tuple((int(rng.integers(0, A)), int(rng.integers(0, 6)),
+                   float(rng.normal())) for _ in range(k))
+    class_of = jnp.asarray(rng.integers(0, C, 1 << k).astype(np.int32))
+    class_ind = ops.class_indicator(np.asarray(class_of), C)
+    M, finals = tiny_tables()
+    finals_q = finals[None, :]
+    init_mask = jnp.zeros(S).at[1].set(1.0)
+    T, B, eps = 18, 4, 5
+    attrs = jnp.asarray(rng.normal(size=(T, B, A)), jnp.float32)
+    c0 = jnp.zeros((B, ops.ring_size(eps), S), jnp.float32)
+    with use_mesh(mesh):
+        m_sh, c_sh = sharded_cer_pipeline(
+            mesh, attrs, specs, class_of, class_ind, M, finals_q, c0,
+            init_mask=init_mask, epsilon=eps, start_pos=3, impl="fused",
+            use_pallas=True)
+    m_loc, c_loc = ops.cer_pipeline(
+        attrs, specs, class_of, class_ind, M, finals_q, c0,
+        init_mask=init_mask, epsilon=eps, start_pos=3, impl="ref")
     np.testing.assert_allclose(np.asarray(m_sh), np.asarray(m_loc))
     np.testing.assert_allclose(np.asarray(c_sh), np.asarray(c_loc))
 
@@ -44,7 +72,7 @@ def test_router_single_shard_identity_up_to_capacity():
     rng = np.random.default_rng(1)
     events = jnp.asarray(rng.normal(size=(N, A)), jnp.float32)
     keys = jnp.asarray(rng.integers(0, 100, (N,)), jnp.int32)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         routed, keep = route_by_partition(mesh, events, keys,
                                           lanes_per_shard=N)
     routed, keep = np.asarray(routed), np.asarray(keep)
