@@ -4,13 +4,16 @@ Hillclimb cell #3 (most representative of the paper's technique).  Measured
 on the actual runtime (CPU XLA here; kernels additionally validated in
 interpret mode) — this is the one §Perf track with real wall-clock numbers.
 
-Three cells:
+Four cells:
 
 * :func:`compare_fused` — fused single-dispatch pipeline vs the seed's
   three-dispatch path (eager bit-vector → class gather → jitted scan).
 * :func:`streaming_throughput` — StreamingVectorEngine events/sec vs chunk
   size; asserts the step compiles exactly once across all chunks (dynamic
   ``start_pos`` + shape-stable chunks, DESIGN.md §5).
+* :func:`partitioned_throughput` — device PARTITION BY streaming (hash
+  routing + all partitions concurrent, DESIGN.md §6) vs the paper's host
+  dict-of-engines, on one interleaved stream.
 * :func:`compare` — q single-query scans vs 1 packed block-diagonal scan
   (vector/multiquery.py).
 
@@ -21,6 +24,7 @@ arithmetic ratio  q·Ŝ_pad² / Ŝ_packed²  (less per-scan overheads).
 """
 from __future__ import annotations
 
+import random
 import time
 from typing import Dict, List
 
@@ -28,9 +32,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compile_query
+from repro.core.engine import Engine, WindowSpec
 from repro.core.events import Event
+from repro.core.partition import PartitionedEngine
 from repro.data.streams import StreamSpec, random_stream
-from repro.vector import StreamingVectorEngine, VectorEngine
+from repro.vector import (PartitionedStreamingEngine, StreamingVectorEngine,
+                          VectorEngine)
 from repro.vector.multiquery import MultiQueryEngine
 
 QUERIES = [
@@ -56,6 +64,7 @@ def _time(fn, reps=3):
 
 
 FUSED_QUERY = "SELECT * FROM S WHERE A1 ; A2+ ; A3"
+PARTITION_QUERY = "SELECT * FROM S WHERE A1 ; A2 ; A3"
 
 
 def compare_fused(num_events: int = 4096, batch: int = 16, epsilon: int = 95,
@@ -160,6 +169,84 @@ def streaming_throughput(total_events: int = 8192, batch: int = 16,
     return out
 
 
+def partitioned_throughput(num_events: int = 8192, num_keys: int = 32,
+                           num_lanes: int = 32, lane_cap: int = 64,
+                           epsilon: int = 50, chunk: int = 1024,
+                           use_pallas: bool = False) -> Dict:
+    """Device PARTITION BY streaming vs the host dict-of-engines path.
+
+    One *interleaved* stream (key attribute ``uid`` over ``num_keys``
+    partitions, ~2% NULL keys).  Baseline is the paper's §5.4
+    implementation: `core.partition.PartitionedEngine` over one Algorithm-1
+    host engine per partition.  Optimized is
+    `vector.partitioned.PartitionedStreamingEngine`: hash-routing + all
+    partitions advanced concurrently by the fused scan, one executable for
+    the whole stream (chunks pre-encoded, like the streaming cell).
+    Correctness gate: identical counts per global position.
+
+    The query is the sequence WITHOUT Kleene plus: the host baseline pays
+    for *enumeration* (its per-event cost is output-linear), and ``A2+``
+    under a wide window makes the output combinatorial — the device engine
+    handles that fine (it counts), but the baseline would never finish.
+    """
+    types = ["A1", "A2", "A3", "X1", "X2", "X3"]
+    rng = random.Random(123)
+    stream = [Event(rng.choice(types),
+                    {"uid": rng.randrange(num_keys)
+                     if rng.random() > 0.02 else None})
+              for _ in range(num_events)]
+    n_chunks = num_events // chunk
+    stream = stream[:n_chunks * chunk]
+
+    # host baseline: dict of Algorithm-1 engines, counts per position
+    q = compile_query(PARTITION_QUERY)
+    pe = PartitionedEngine(
+        lambda: Engine(q.cea, window=WindowSpec.events(epsilon)), ("uid",))
+    t0 = time.perf_counter()
+    host_counts = [len(pe.process(e)) for e in stream]
+    dt_host = time.perf_counter() - t0
+
+    ve = VectorEngine(PARTITION_QUERY, epsilon=epsilon,
+                      use_pallas=use_pallas,
+                      impl="fused" if use_pallas else None)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=chunk,
+                                     num_lanes=num_lanes, lane_cap=lane_cap)
+    enc = [ve.encoder.encode_stream_with_keys(stream[lo:lo + chunk],
+                                              ("uid",))
+           for lo in range(0, len(stream), chunk)]
+    enc = [(jnp.asarray(a), jnp.asarray(k)) for a, k in enc]
+
+    # warm + correctness: device == host, complex-event-count for count
+    parts = [pse.feed_keyed(a, k)[0] for a, k in enc]
+    dev_counts = np.concatenate(parts)
+    np.testing.assert_array_equal(dev_counts, np.asarray(host_counts))
+    assert pse.stats.spilled_capacity == 0 == pse.stats.spilled_table, \
+        pse.stats
+    assert pse.compile_count == 1, pse.compile_count
+
+    pse.reset()
+    t0 = time.perf_counter()
+    for a, k in enc:
+        pse.feed_keyed(a, k)
+    dt_dev = time.perf_counter() - t0
+    assert pse.compile_count == 1, pse.compile_count
+
+    ev = len(stream)
+    return {
+        "events": ev,
+        "partitions": pe.num_partitions,
+        "lanes": num_lanes,
+        "lane_cap": lane_cap,
+        "chunk": chunk,
+        "compile_count": pse.compile_count,
+        "host_s": dt_host,
+        "device_s": dt_dev,
+        "host_eps": ev / dt_host,
+        "device_eps": ev / dt_dev,
+        "speedup": dt_host / dt_dev,
+    }
+
+
 def compare(num_events: int = 4096, batch: int = 16, epsilon: int = 95,
             n_queries: int = 8, use_pallas: bool = False) -> Dict:
     queries = QUERIES[:n_queries]
@@ -218,6 +305,11 @@ def main() -> None:
               f"{row['streaming_eps']:.0f} events/s "
               f"(eager chunked {row['eager_chunked_eps']:.0f}, "
               f"{row['speedup']:.2f}×, compiles={row['compile_count']})")
+    r = partitioned_throughput()
+    print(f"partition-by ({r['partitions']} partitions, {r['lanes']} lanes):"
+          f" device {r['device_eps']:.0f} events/s vs host dict-of-engines "
+          f"{r['host_eps']:.0f} ({r['speedup']:.2f}×, "
+          f"compiles={r['compile_count']})")
     for nq in (2, 4, 8):
         r = compare(n_queries=nq)
         print(f"q={nq}: packed Ŝ={r['packed_states']} "

@@ -33,6 +33,10 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
     streaming = perf_cer.streaming_throughput(
         total_events=n, batch=batch,
         chunk_sizes=(64, 256) if quick else (64, 256, 1024))
+    partitioned = perf_cer.partitioned_throughput(
+        num_events=n, num_keys=16 if quick else 32,
+        num_lanes=16 if quick else 32, lane_cap=64,
+        chunk=min(512 if quick else 1024, n))
     packed = perf_cer.compare(num_events=n, batch=batch, n_queries=4)
     return {
         "bench": "cer_perf",
@@ -40,10 +44,13 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
         "batch": batch,
         "fused_vs_unfused": fused,
         "streaming": streaming,
+        "partitioned": partitioned,
         "packed_multiquery": {k: v for k, v in packed.items()
                               if k != "single_states"},
-        "compile_counts": {f"chunk_{row['chunk']}": row["compile_count"]
-                           for row in streaming},
+        "compile_counts": dict(
+            {f"chunk_{row['chunk']}": row["compile_count"]
+             for row in streaming},
+            partitioned=partitioned["compile_count"]),
     }
 
 
@@ -63,9 +70,12 @@ def main() -> None:
         f2f = rec["fused_vs_unfused"]
         stream = (f"{rec['streaming'][-1]['streaming_eps']:.0f} ev/s"
                   if rec["streaming"] else "n/a (stream < chunk)")
+        part = rec["partitioned"]
         print(f"# wrote {args.cer_json}: fused {f2f['fused_eps']:.0f} ev/s "
               f"({f2f['speedup']:.2f}× over 3-dispatch), streaming "
-              f"{stream}, compiles={rec['compile_counts']}")
+              f"{stream}, partition-by {part['device_eps']:.0f} ev/s "
+              f"({part['speedup']:.2f}× over host dict-of-engines), "
+              f"compiles={rec['compile_counts']}")
         return
 
     from benchmarks import cer_paper

@@ -26,9 +26,11 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from ..jaxcompat import tree_flatten_with_path
+
 
 def _flatten_with_paths(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
@@ -43,24 +45,32 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        # serializes publish (rename) + GC: without it a blocking save can
+        # overlap an in-flight async write and GC against a half-published
+        # directory listing, deleting steps that should have been retained
+        self._io_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree: Any, blocking: bool = True,
              extra: Optional[Dict] = None) -> None:
         # snapshot to host memory first (cheap; device → host copy)
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        # never overlap writes: a blocking save issued while an async write
+        # is still in flight must drain it first (write order = save order,
+        # so GC's newest-K decision matches the caller's step order)
+        self.wait()
         if blocking:
             self._write(step, host_tree, extra)
         else:
-            self.wait()
             self._thread = threading.Thread(
                 target=self._write, args=(step, host_tree, extra),
                 daemon=True)
             self._thread.start()
 
     def wait(self) -> None:
-        if self._thread is not None:
-            self._thread.join()
+        t = self._thread
+        if t is not None:
+            t.join()
             self._thread = None
 
     def _write(self, step: int, host_tree: Any, extra: Optional[Dict]) -> None:
@@ -79,10 +89,11 @@ class CheckpointManager:
                  "shape": list(arr.shape), "dtype": str(arr.dtype)})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)   # atomic publish
-        self._gc()
+        with self._io_lock:
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)   # atomic publish
+            self._gc()
 
     def _gc(self) -> None:
         steps = self.all_steps()

@@ -1,0 +1,73 @@
+"""Version-compat shims for the jax APIs this repo uses (jax ≥ 0.4.37).
+
+The repo targets both the 0.4.x LTS line and current jax; a handful of APIs
+moved or appeared in between.  Every call site routes through this module so
+the version forks live in exactly one place:
+
+* ``jax.tree.flatten_with_path``      — added after 0.4.x; falls back to
+  ``jax.tree_util.tree_flatten_with_path`` (same (path, leaf) contract).
+* ``jax.shard_map(..., check_vma=)``  — on 0.4.x it is
+  ``jax.experimental.shard_map.shard_map(..., check_rep=)``.
+* ``jax.make_mesh(..., axis_types=)`` — ``axis_types`` /
+  ``jax.sharding.AxisType`` only exist on newer jax; older versions get the
+  plain mesh (all axes implicitly Auto).
+* ``jax.set_mesh`` / ``jax.sharding.get_abstract_mesh`` — the ambient-mesh
+  context is newer-jax-only; older versions no-op (shard_map callers always
+  receive the mesh explicitly, so the context is advisory).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, List, Optional, Tuple
+
+import jax
+
+
+def tree_flatten_with_path(tree: Any) -> Tuple[List[Tuple[Any, Any]], Any]:
+    """``jax.tree.flatten_with_path`` across versions."""
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree)
+    return jax.tree_util.tree_flatten_with_path(tree)
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across versions (older: jax.experimental).
+
+    Replication checking is disabled either way (``check_vma`` on new jax,
+    ``check_rep`` on old) — the callers' out_specs are authoritative.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def make_mesh(shape, axes, devices=None):
+    """``jax.make_mesh`` across versions (axis_types only where supported)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def use_mesh(mesh):
+    """Context manager: ``jax.set_mesh`` where available, else a no-op.
+
+    shard_map receives the mesh explicitly, so on older jax the ambient-mesh
+    context is unnecessary — entering it is still harmless either way.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return contextlib.nullcontext(mesh)
+
+
+def current_mesh() -> Optional[Any]:
+    """The ambient abstract mesh, or None (no context / older jax)."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        return None if m.empty else m
+    except Exception:
+        return None

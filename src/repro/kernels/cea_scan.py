@@ -56,6 +56,20 @@ def _ring_masks(j, W: int, epsilon: int):
     return seed_mask, jnp.maximum(seed_mask, expire)
 
 
+def _ring_masks_lanes(j, W: int, epsilon: int):
+    """Per-lane ring masks: ``j`` is a (B_tile,) int32 vector of positions.
+
+    PARTITION BY lanes sit at independent substream offsets (DESIGN.md §6),
+    so seed/expire slots differ per lane.  Returns ``(seed_mask, clear)``,
+    both (B_tile, W) f32 0/1 masks.
+    """
+    arange_w = jax.lax.iota(jnp.int32, W)
+    seed_mask = (arange_w[None, :] == (j % W)[:, None]).astype(jnp.float32)
+    expire = (arange_w[None, :]
+              == ((j - epsilon - 1) % W)[:, None]).astype(jnp.float32)
+    return seed_mask, jnp.maximum(seed_mask, expire)
+
+
 def _cea_scan_kernel(start_ref,                                  # SMEM scalar
                      ids_ref, m_all_ref, finals_ref, c_in_ref,   # inputs
                      matches_ref, c_out_ref,                     # outputs

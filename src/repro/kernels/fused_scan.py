@@ -29,8 +29,12 @@ The kernel is NQ-generalized: ``finals`` is ``(NQ, S)`` and the seed vector
 (NQ = 1, one-hot init) and the packed multi-query engine (block-diagonal
 ``M_all``, one initial state per query block).
 
-``start_pos`` is a dynamic SMEM scalar — one compiled executable serves
-every chunk of an unbounded stream (DESIGN.md §5).
+``start_pos`` is a dynamic *per-lane* ``(B, 1)`` operand — one compiled
+executable serves every chunk of an unbounded stream (DESIGN.md §5), and
+PARTITION BY lanes can sit at independent substream offsets (DESIGN.md §6).
+A companion ``(B, 1)`` valid-count operand marks each lane's dense prefix of
+real events this chunk; steps past it leave the lane's state untouched and
+emit zero matches, so routed chunks with ragged per-lane fills stay exact.
 """
 from __future__ import annotations
 
@@ -43,10 +47,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .bitvector import _CMP
-from .cea_scan import _ring_masks
+from .cea_scan import _ring_masks_lanes
 
 
-def _fused_scan_kernel(start_ref,                                # SMEM scalar
+def _fused_scan_kernel(start_ref, valid_ref,                     # (B_tile, 1)
                        attrs_ref, ind_ref, m_all_ref, finals_ref, init_ref,
                        c_in_ref,                                 # inputs
                        matches_ref, c_out_ref,                   # outputs
@@ -77,22 +81,27 @@ def _fused_scan_kernel(start_ref,                                # SMEM scalar
                 preferred_element_type=jnp.float32).reshape(B_tile, S, S)
 
     # --- stage 3 (was: cea_scan kernel): windowed counting-semiring step ---
-    j = start_ref[0] + t
-    seed_mask, clear = _ring_masks(j, W, epsilon)
+    # per-lane positions: each PARTITION BY lane sits at its own substream
+    # offset, and only the first valid_ref[b] slots of a lane carry real
+    # events this chunk (dense-prefix contract) — dead steps are no-ops.
+    j = start_ref[:, 0] + t                                    # (B_tile,)
+    seed_mask, clear = _ring_masks_lanes(j, W, epsilon)        # (B_tile, W)
+    live = (t < valid_ref[:, 0]).astype(jnp.float32)           # (B_tile,)
     init = init_ref[0, :]                                      # (S,) multi-hot
     C = c_scratch[...]                                         # (B_tile, W, S)
-    C = C * (1.0 - clear)[None, :, None] \
-        + seed_mask[None, :, None] * init[None, None, :]
-    C = jax.lax.dot_general(
-        C, M, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+    C_new = C * (1.0 - clear)[:, :, None] \
+        + seed_mask[:, :, None] * init[None, None, :]
+    C_new = jax.lax.dot_general(
+        C_new, M, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32)
+    C = C_new * live[:, None, None] + C * (1.0 - live)[:, None, None]
     c_scratch[...] = C
 
     finals = finals_ref[...]                                   # (NQ, S)
     per_q = jax.lax.dot_general(
         C.reshape(B_tile * W, S), finals.T, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32).reshape(B_tile, W, NQ)
-    matches_ref[:, 0, :] = jnp.sum(per_q, axis=1)
+    matches_ref[:, 0, :] = jnp.sum(per_q, axis=1) * live[:, None]
 
     @pl.when(t == T - 1)
     def _flush():
@@ -102,20 +111,22 @@ def _fused_scan_kernel(start_ref,                                # SMEM scalar
 def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
                       m_all: jnp.ndarray, finals_q: jnp.ndarray,
                       init_mask: jnp.ndarray, c0: jnp.ndarray,
-                      start_pos: jnp.ndarray,
+                      start_lanes: jnp.ndarray, valid_lanes: jnp.ndarray,
                       *, specs: Sequence[Tuple[int, int, float]],
                       epsilon: int, b_tile: int = 8,
                       interpret: bool = False):
     """Raw pallas_call; use :func:`repro.kernels.ops.cer_pipeline` instead.
 
-    attrs:     (B, T, A) f32 — raw encoded event attributes
-    class_ind: (2^k, C) f32 — one-hot class indicator (padded rows are zero)
-    m_all:     (C, S, S) f32
-    finals_q:  (NQ, S) f32
-    init_mask: (1, S) f32 multi-hot seed vector
-    c0:        (B, W, S) f32, W ≥ epsilon + 1
-    start_pos: (1,) int32 dynamic chunk offset
-    returns    (matches (B, T, NQ) f32, c_final (B, W, S) f32)
+    attrs:       (B, T, A) f32 — raw encoded event attributes
+    class_ind:   (2^k, C) f32 — one-hot class indicator (padded rows zero)
+    m_all:       (C, S, S) f32
+    finals_q:    (NQ, S) f32
+    init_mask:   (1, S) f32 multi-hot seed vector
+    c0:          (B, W, S) f32, W ≥ epsilon + 1
+    start_lanes: (B, 1) int32 dynamic per-lane substream offsets
+    valid_lanes: (B, 1) int32 per-lane live-event counts this chunk
+                 (pass T for every lane to disable dead-step masking)
+    returns      (matches (B, T, NQ) f32, c_final (B, W, S) f32)
     """
     B, T, A = attrs.shape
     NC, S, _ = m_all.shape
@@ -124,6 +135,8 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
     W = c0.shape[1]
     assert B % b_tile == 0, (B, b_tile)
     assert W >= epsilon + 1, (W, epsilon)
+    assert start_lanes.shape == (B, 1), start_lanes.shape
+    assert valid_lanes.shape == (B, 1), valid_lanes.shape
     grid = (B // b_tile, T)
 
     kernel = functools.partial(
@@ -134,7 +147,8 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),                 # start_pos
+            pl.BlockSpec((b_tile, 1), lambda b, t: (b, 0)),        # start_pos
+            pl.BlockSpec((b_tile, 1), lambda b, t: (b, 0)),        # valid
             pl.BlockSpec((b_tile, 1, A), lambda b, t: (b, t, 0)),  # attrs
             pl.BlockSpec((V, NC), lambda b, t: (0, 0)),            # indicator
             pl.BlockSpec((NC, S, S), lambda b, t: (0, 0, 0)),      # M_all
@@ -152,4 +166,5 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
         ],
         scratch_shapes=[pltpu.VMEM((b_tile, W, S), jnp.float32)],
         interpret=interpret,
-    )(start_pos, attrs, class_ind, m_all, finals_q, init_mask, c0)
+    )(start_lanes, valid_lanes, attrs, class_ind, m_all, finals_q,
+      init_mask, c0)

@@ -57,6 +57,21 @@ def _start_arr(start_pos: Union[int, jnp.ndarray]) -> jnp.ndarray:
     return jnp.reshape(jnp.asarray(start_pos, jnp.int32), (1,))
 
 
+def _is_lane_vector(start_pos) -> bool:
+    """True when start_pos is a per-lane (B,) vector rather than a scalar."""
+    return getattr(start_pos, "ndim", 0) >= 1
+
+
+def _lane_arr(x, B: int, pad_to: int, fill: int) -> jnp.ndarray:
+    """Scalar-or-(B,) operand → (pad_to, 1) int32 lane column for the fused
+    kernel; padded lanes get ``fill``."""
+    a = jnp.asarray(x, jnp.int32)
+    if a.ndim == 0:
+        a = jnp.broadcast_to(a, (B,))
+    a = jnp.pad(a, (0, pad_to - B), constant_values=fill)
+    return a.reshape(pad_to, 1)
+
+
 def class_indicator(class_of: np.ndarray, num_classes: int) -> jnp.ndarray:
     """``(2^k,)`` class lookup → ``(2^k, C)`` one-hot indicator.
 
@@ -211,6 +226,7 @@ def cer_pipeline(attrs: jnp.ndarray,
                  m_all: jnp.ndarray, finals_q: jnp.ndarray,
                  c0: jnp.ndarray, *, init_mask: jnp.ndarray, epsilon: int,
                  start_pos: Union[int, jnp.ndarray] = 0,
+                 valid_counts: Optional[jnp.ndarray] = None,
                  impl: str = "fused", use_pallas: bool = True,
                  interpret: Optional[bool] = None, b_tile: int = 8
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -224,18 +240,31 @@ def cer_pipeline(attrs: jnp.ndarray,
     Pallas path needs W ≡ 0 (mod 8) and the VMEM budget to hold the
     indicator + tables + state tile; otherwise it degrades to the fused XLA
     computation (still one dispatch under the caller's jit).
+
+    PARTITION BY lanes (DESIGN.md §6): ``start_pos`` may also be a ``(B,)``
+    vector of per-lane substream offsets, and ``valid_counts`` a ``(B,)``
+    int32 vector marking each lane's dense prefix of real events this chunk
+    (steps past it are exact no-ops for that lane).  The fused Pallas kernel
+    and the fused-XLA/ref path support both; the legacy unfused kernels are
+    scalar-only, so per-lane calls on that impl route to the XLA path.
     """
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
     T, B, A = attrs.shape
     NC, S, _ = m_all.shape
     W = c0.shape[1]
+    per_lane = _is_lane_vector(start_pos) or valid_counts is not None
 
     if impl == "ref" or (impl == "fused" and not use_pallas):
         return _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0,
-                             init_mask, epsilon, start_pos)
+                             init_mask, epsilon, start_pos, valid_counts)
 
     if impl == "unfused":
+        if per_lane:
+            # the legacy 3-dispatch kernels take a scalar SMEM offset only
+            return _pipeline_xla(attrs, specs, class_of, m_all, finals_q,
+                                 c0, init_mask, epsilon, start_pos,
+                                 valid_counts)
         # legacy 3-dispatch path: bits kernel → gather → scan kernel
         bits = bitvector(attrs.reshape(T * B, A), specs,
                          use_pallas=use_pallas, interpret=interpret)
@@ -257,10 +286,11 @@ def cer_pipeline(attrs: jnp.ndarray,
                 + NCp * Sp * Sp + NQp * Sp     # tables
                 + b_tile * Sp * Sp             # gathered-M temp
                 + b_tile * W * NQp             # per_q temp
-                + b_tile * A + b_tile * NQp)   # attrs block + matches block
+                + b_tile * A + b_tile * NQp    # attrs block + matches block
+                + 2 * b_tile)                  # start + valid lane columns
     if W % 8 != 0 or vmem > VMEM_BYTES:
         return _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0,
-                             init_mask, epsilon, start_pos)
+                             init_mask, epsilon, start_pos, valid_counts)
 
     Bp = _pad_to(B, b_tile)
     a_pad = jnp.pad(jnp.moveaxis(attrs, 0, 1),
@@ -271,16 +301,19 @@ def cer_pipeline(attrs: jnp.ndarray,
                     ((0, NQp - NQ), (0, Sp - S)))
     i_pad = jnp.pad(init_mask.astype(jnp.float32), (0, Sp - S))[None, :]
     c_pad = jnp.pad(c0, ((0, Bp - B), (0, 0), (0, Sp - S)))
+    start_lanes = _lane_arr(start_pos, B, Bp, fill=0)
+    valid_lanes = _lane_arr(T if valid_counts is None else valid_counts,
+                            B, Bp, fill=0)       # padded lanes are dead
 
     matches, c_fin = fused_scan_pallas(
-        a_pad, ind_pad, m_pad, f_pad, i_pad, c_pad, _start_arr(start_pos),
+        a_pad, ind_pad, m_pad, f_pad, i_pad, c_pad, start_lanes, valid_lanes,
         specs=tuple(specs), epsilon=epsilon, b_tile=b_tile,
         interpret=interpret)
     return jnp.moveaxis(matches[:B, :, :NQ], 0, 1), c_fin[:B, :, :S]
 
 
 def _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0, init_mask,
-                  epsilon, start_pos):
+                  epsilon, start_pos, valid_counts=None):
     """Fused pipeline as one XLA computation (also the ``ref`` oracle).
 
     Same dataflow as the fused kernel: under a single jit the ``bits`` /
@@ -295,5 +328,6 @@ def _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0, init_mask,
     class_ids = class_of[bits].reshape(T, B)
     c_fin, matches = ref.cea_scan_multi_ref(c0, m_all, class_ids, finals_q,
                                             init_mask, epsilon,
-                                            start_pos=start_pos)
+                                            start_pos=start_pos,
+                                            valid_counts=valid_counts)
     return matches, c_fin

@@ -96,34 +96,49 @@ def cea_scan_ref(C0: jnp.ndarray, M_all: jnp.ndarray, class_ids: jnp.ndarray,
 def cea_scan_multi_ref(C0: jnp.ndarray, M_all: jnp.ndarray,
                        class_ids: jnp.ndarray, finals_q: jnp.ndarray,
                        init_mask: jnp.ndarray, epsilon: int,
-                       start_pos: int = 0
+                       start_pos=0, valid_counts=None
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Packed multi-query scan oracle (see vector/multiquery.py).
 
     finals_q: (Q, S) per-query final-state masks; init_mask: (S,) multi-hot
     (one initial state per packed query block).  Returns
     (C_T, matches (T, B, Q)).
+
+    ``start_pos`` may be a scalar (all streams at the same offset) or a
+    ``(B,)`` vector of per-lane substream positions (PARTITION BY lanes,
+    DESIGN.md §6) — the ring seed/expire slots are derived per lane.
+    ``valid_counts`` (optional, ``(B,)`` int32) marks the dense prefix of
+    each lane that carries real events this chunk: steps ``t ≥ n_b`` are
+    no-ops for lane ``b`` (state unchanged, zero matches, position does not
+    advance).
     """
     B, W, S = C0.shape
     assert W >= epsilon + 1
     T = class_ids.shape[0]
     fq = finals_q.astype(C0.dtype)
     im = init_mask.astype(C0.dtype)
+    start = jnp.broadcast_to(jnp.asarray(start_pos, jnp.int32), (B,))
+    valid = (None if valid_counts is None
+             else jnp.asarray(valid_counts, jnp.int32))
+    arange_w = jnp.arange(W)
 
     def step(C, inputs):
         t, ids = inputs
         M = M_all[ids]
-        j = start_pos + t
-        seed_slot = j % W
-        expire_slot = (j - epsilon - 1) % W
-        arange_w = jnp.arange(W)
-        clear = (arange_w == seed_slot) | (arange_w == expire_slot)
-        C = C * (1.0 - clear.astype(C.dtype))[None, :, None]
-        seed_oh = (arange_w == seed_slot).astype(C.dtype)
-        C = C + seed_oh[None, :, None] * im[None, None, :]
-        C = jnp.einsum("bws,bst->bwt", C, M)
-        m = jnp.einsum("bws,qs->bq", C, fq)
-        return C, m
+        j = start + t                                              # (B,)
+        seed = (arange_w[None, :] == (j % W)[:, None]).astype(C.dtype)
+        expire = (arange_w[None, :]
+                  == ((j - epsilon - 1) % W)[:, None]).astype(C.dtype)
+        clear = jnp.maximum(seed, expire)                          # (B, W)
+        C2 = C * (1.0 - clear)[:, :, None] \
+            + seed[:, :, None] * im[None, None, :]
+        C2 = jnp.einsum("bws,bst->bwt", C2, M)
+        m = jnp.einsum("bws,qs->bq", C2, fq)
+        if valid is not None:
+            live = (t < valid).astype(C.dtype)                     # (B,)
+            C2 = C2 * live[:, None, None] + C * (1.0 - live)[:, None, None]
+            m = m * live[:, None]
+        return C2, m
 
     ts = jnp.arange(T, dtype=jnp.int32)
     C_T, matches = jax.lax.scan(step, C0, (ts, class_ids))

@@ -71,7 +71,7 @@ def main() -> None:
         events = jax.ShapeDtypeStruct((N, A), jnp.float32)
         keys = jax.ShapeDtypeStruct((N,), jnp.int32)
         lowered_r = jax.jit(
-            lambda e, k: route_by_partition(mesh, e, k, lanes_per_shard=N // n_dev)
+            lambda e, k: route_by_partition(mesh, e, k)
         ).lower(events, keys)
         compiled_r = lowered_r.compile()
         coll_r = collective_bytes(compiled_r.as_text())

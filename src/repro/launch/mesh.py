@@ -6,29 +6,10 @@ XLA_FLAGS before any JAX initialization.
 """
 from __future__ import annotations
 
-import contextlib
-
 import jax
 
-
-def _make_mesh(shape, axes, devices):
-    """jax.make_mesh across versions (axis_types only where supported)."""
-    if hasattr(jax.sharding, "AxisType"):
-        return jax.make_mesh(
-            shape, axes, devices=devices,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes, devices=devices)
-
-
-def use_mesh(mesh):
-    """Context manager: jax.set_mesh where available, else a no-op.
-
-    shard_map receives the mesh explicitly, so on older jax the ambient-mesh
-    context is unnecessary — entering it is still harmless either way.
-    """
-    if hasattr(jax, "set_mesh"):
-        return jax.set_mesh(mesh)
-    return contextlib.nullcontext(mesh)
+from ..jaxcompat import make_mesh as _make_mesh
+from ..jaxcompat import use_mesh  # re-exported for callers  # noqa: F401
 
 
 def make_production_mesh(*, multi_pod: bool = False):

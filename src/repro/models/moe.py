@@ -15,6 +15,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..jaxcompat import current_mesh, shard_map
 from ..sharding import with_logical_constraint as wlc
 from .config import ModelConfig, MoEConfig
 from .layers import Params, dense_init, mlp, mlp_init
@@ -79,18 +80,10 @@ def moe_apply(p: Params, cfg: ModelConfig, x: jnp.ndarray
       §Perf logs the progression.
     * **off-mesh (host tests)**: the same math, single shard.
     """
-    mesh = _current_mesh()
+    mesh = current_mesh()
     if mesh is not None and "model" in mesh.axis_names:
         return _moe_sharded(p, cfg, x, mesh)
     return _moe_global(p, cfg, x)
-
-
-def _current_mesh():
-    try:
-        m = jax.sharding.get_abstract_mesh()
-        return None if m.empty else m
-    except Exception:
-        return None
 
 
 def _moe_global(p: Params, cfg: ModelConfig, x: jnp.ndarray
@@ -291,11 +284,10 @@ def _moe_sharded(p: Params, cfg: ModelConfig, x: jnp.ndarray, mesh
             aux = jax.lax.pmean(aux, batch_axes)
         return y.reshape(Bl, S, d), aux
 
-    y, aux = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(p_specs, x_spec),
-        out_specs=(x_spec, P()),
-        check_vma=False,
+    y, aux = shard_map(
+        body, mesh,
+        (p_specs, x_spec),
+        (x_spec, P()),
     )(p, x)
     return y, aux
 
@@ -392,10 +384,9 @@ def _moe_decode_stationary(p: Params, cfg: ModelConfig, x: jnp.ndarray, mesh
     for a in batch_axes:
         n_b *= sizes[a]
     out_spec = x_spec if (batch_axes and B % n_b == 0) else P(None, None, None)
-    y, aux = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(p_specs, P(None, None, None)),   # tokens replicated
-        out_specs=(out_spec, P()),
-        check_vma=False,
+    y, aux = shard_map(
+        body, mesh,
+        (p_specs, P(None, None, None)),   # tokens replicated
+        (out_spec, P()),
     )(p, x)
     return y, aux

@@ -176,10 +176,11 @@ def divisible_spec(spec: P, shape: Tuple[int, ...], axis_sizes: Dict[str, int]
 def with_logical_constraint(x: jax.Array,
                             logical_axes: Sequence[Optional[str]]) -> jax.Array:
     """Annotate activation sharding; no-op outside a `jax.set_mesh` context."""
+    from ..jaxcompat import current_mesh
+    mesh = current_mesh()
+    if mesh is None:
+        return x
     try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or mesh.empty:
-            return x
         # inside shard_map the axes are Manual: layout is already explicit
         if any(t != jax.sharding.AxisType.Auto for t in mesh.axis_types):
             return x

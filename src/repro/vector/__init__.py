@@ -1,8 +1,10 @@
 """Device (TPU-native) CER engine: symbolic tables + semiring scan."""
 from .encoder import EventEncoder
 from .engine import VectorEngine, VectorQueryTables
+from .partitioned import PartitionedStreamingEngine, PartitionStats
 from .streaming import StreamingVectorEngine
 from .symbolic import SymbolicCEA, compile_symbolic
 
 __all__ = ["EventEncoder", "VectorEngine", "VectorQueryTables",
+           "PartitionedStreamingEngine", "PartitionStats",
            "StreamingVectorEngine", "SymbolicCEA", "compile_symbolic"]

@@ -27,17 +27,8 @@ import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from ..jaxcompat import shard_map as _shard_map
 from ..kernels import ops
-
-
-def _shard_map(f, mesh, in_specs, out_specs):
-    """jax.shard_map across jax versions (older: jax.experimental)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map
-    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                     check_rep=False)
 
 
 def stream_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -94,44 +85,114 @@ def sharded_cer_pipeline(mesh: Mesh, attrs, specs, class_of, class_ind,
 
 
 def route_by_partition(mesh: Mesh, events: jnp.ndarray, keys: jnp.ndarray,
-                       lanes_per_shard: int):
+                       payload: jnp.ndarray = None,
+                       drop: jnp.ndarray = None):
     """Route event rows to the shard owning their partition (hash routing).
 
-    events: (N, A) f32 event block, N % num_shards == 0
-    keys:   (N,)  int32 partition hashes
+    events:  (N, A) f32 event block, N % num_shards == 0
+    keys:    (N,)  int32 partition hashes, already in [0, num_shards) or
+             non-negative (ownership = ``keys % num_shards``)
+    payload: optional (N, P) int32 per-event columns (e.g. key hashes +
+             global stream positions) routed through the identical
+             permutation, so each shard receives its events' metadata.
+    drop:    optional (N,) bool — events excluded sender-side (e.g. NULL
+             partition keys): they enter no bucket, consume no capacity,
+             and come back ``keep=False``.
     Returns (N, A) events re-ordered so that shard s holds the events with
-    ``hash % num_shards == s`` (padded round-robin within shards).
+    ``hash % num_shards == s`` (padded round-robin within shards), plus the
+    routed payload when one was given, plus the keep mask:
+    ``(routed, keep)`` or ``(routed, routed_payload, keep)``.
 
     The dense formulation: each shard bucket-sorts its local events by
     destination shard, then a single ``all_to_all`` exchanges equal-size
-    buckets.  Overflowing buckets spill to a host retry queue (returned mask)
-    — the classic bounded-capacity routing used by MoE dispatch, reused here
-    for CER partition routing.
+    buckets of ``N / num_shards²`` rows.  Overflowing buckets spill to a
+    host retry queue (returned mask) — the classic bounded-capacity routing
+    used by MoE dispatch, reused here for CER partition routing.
     """
     axes = stream_axes(mesh)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    with_payload = payload is not None
+    if drop is None:
+        drop = jnp.zeros((events.shape[0],), bool)
+    extra = (payload,) if with_payload else ()
 
-    def local_route(ev, ks):
-        # ev: (n_local, A), ks: (n_local,)
+    def local_route(ev, ks, dr, *pls):
+        # ev: (n_local, A), ks: (n_local,), dr: (n_local,), pls: (n_local, P)
         n_local, A = ev.shape
         cap = n_local // n_shards
         dest = (ks % n_shards).astype(jnp.int32)              # (n_local,)
-        # position of each event within its destination bucket
-        onehot = jax.nn.one_hot(dest, n_shards, dtype=jnp.int32)
+        # position of each (non-dropped) event within its destination bucket
+        onehot = jax.nn.one_hot(dest, n_shards, dtype=jnp.int32) \
+            * (~dr)[:, None].astype(jnp.int32)
         rank = jnp.cumsum(onehot, axis=0) - 1                 # (n_local, S)
         my_rank = jnp.take_along_axis(rank, dest[:, None], axis=1)[:, 0]
-        keep = my_rank < cap                                  # capacity mask
-        # scatter into (n_shards, cap, A) buckets
-        flat_idx = dest * cap + jnp.minimum(my_rank, cap - 1)
-        buckets = jnp.zeros((n_shards * cap, A), ev.dtype)
-        buckets = buckets.at[flat_idx].add(ev * keep[:, None])
-        buckets = buckets.reshape(n_shards, cap, A)
-        routed = jax.lax.all_to_all(buckets, axes, split_axis=0,
-                                    concat_axis=0, tiled=False)
-        return routed.reshape(n_shards * cap, A), keep
+        keep = ~dr & (my_rank < cap)                          # capacity mask
+        flat_idx = dest * cap + jnp.clip(my_rank, 0, cap - 1)
 
+        def exchange(x):
+            # scatter into (n_shards, cap, ...) buckets, then all_to_all
+            buckets = jnp.zeros((n_shards * cap, x.shape[1]), x.dtype)
+            buckets = buckets.at[flat_idx].add(
+                x * keep[:, None].astype(x.dtype))
+            buckets = buckets.reshape(n_shards, cap, x.shape[1])
+            routed = jax.lax.all_to_all(buckets, axes, split_axis=0,
+                                        concat_axis=0, tiled=False)
+            return routed.reshape(n_shards * cap, x.shape[1])
+
+        return tuple(exchange(x) for x in (ev, *pls)) + (keep,)
+
+    # returns (routed, keep) or (routed, routed_payload, keep)
     return _shard_map(
         local_route, mesh,
-        (P(axes), P(axes)),
-        (P(axes), P(axes)),
-    )(events, keys)
+        (P(axes),) * (3 + len(extra)),
+        (P(axes),) * (2 + len(extra)),
+    )(events, keys, drop, *extra)
+
+
+def route_partitioned_chunk(mesh: Mesh, attrs: jnp.ndarray,
+                            keys: jnp.ndarray, positions: jnp.ndarray):
+    """One chunk of an interleaved stream → shard-owned sub-chunks.
+
+    The sharded PARTITION BY layout (DESIGN.md §6): the global lane table is
+    split over the mesh (shard s owns the partitions with
+    ``hash % num_shards == s``), so the only collective in the whole
+    partitioned pipeline is this router — each shard then runs the *local*
+    assignment-scan + fused-scan step (`vector/partitioned.py`) on its
+    sub-chunk with zero scan collectives.
+
+    attrs (N, A) f32 | keys (N,) uint32 partition hashes | positions (N,)
+    int32 global stream positions.  Returns ``(attrs', keys', positions',
+    valid, keep)`` where row i of every output belongs to the same event and
+    shard s holds the events it owns.  ``valid`` flags the received rows
+    that carry a real event — bucket padding comes back with the NULL key
+    sentinel, so the local lane router drops it either way.  ``keep``
+    (sender-side) flags events that arrived at their owner: NULL-keyed
+    events are dropped before the exchange (they join no substream and must
+    not consume router capacity), and events past the per-bucket capacity
+    spill and retry on the host, as in MoE dispatch.
+    """
+    from ..core.partition import NULL_KEY_HASH
+
+    axes = stream_axes(mesh)
+    n_shards = np.prod([mesh.shape[a] for a in axes]).astype(np.uint32)
+    is_null = keys == jnp.uint32(NULL_KEY_HASH)
+    # ownership is hash % num_shards in *uint32*: reduce before the int32
+    # bitcast so hashes ≥ 2³¹ land on their documented owner
+    dest_keys = _bitcast_i32(keys % n_shards)
+    ones = jnp.ones_like(positions, dtype=jnp.int32)
+    payload = jnp.stack([_bitcast_i32(keys),
+                         positions.astype(jnp.int32), ones], axis=1)
+    routed, routed_pl, keep = route_by_partition(
+        mesh, attrs, dest_keys, payload=payload, drop=is_null)
+    valid = routed_pl[:, 2] > 0
+    keys_out = jnp.where(valid, _bitcast_u32(routed_pl[:, 0]),
+                         jnp.uint32(NULL_KEY_HASH))
+    return routed, keys_out, routed_pl[:, 1], valid, keep
+
+
+def _bitcast_i32(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(x, jnp.int32)
+
+
+def _bitcast_u32(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(x, jnp.uint32)

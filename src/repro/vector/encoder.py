@@ -14,6 +14,7 @@ from typing import Dict, List, Sequence, Tuple
 import numpy as np
 
 from ..core.events import Event
+from ..core.partition import partition_key, stable_key_hash
 from ..core.predicates import AtomRegistry
 from ..kernels.ref import OP_EQ, OP_GE, OP_GT, OP_LE, OP_LT, OP_NE
 
@@ -73,3 +74,23 @@ class EventEncoder:
             for t, ev in enumerate(s):
                 out[t, b] = self.encode_event(ev)
         return out
+
+    def encode_stream_with_keys(self, events: Sequence[Event],
+                                key_attrs: Tuple[str, ...]
+                                ) -> Tuple[np.ndarray, np.ndarray]:
+        """One interleaved stream → (attrs (T, A) f32, keys (T,) uint32).
+
+        ``keys[t]`` is the stable 32-bit partition hash of event ``t``'s
+        PARTITION BY attributes (``core.partition.stable_key_hash``); events
+        NULL on any key attribute get the NULL sentinel, which the device
+        router drops (they join no substream).  Key attributes need not be
+        referenced by the query's predicates — hashing reads the raw values,
+        not the encoded matrix.
+        """
+        T = len(events)
+        out = np.zeros((T, len(self.attrs)), dtype=np.float32)
+        keys = np.empty((T,), dtype=np.uint32)
+        for t, ev in enumerate(events):
+            out[t] = self.encode_event(ev)
+            keys[t] = stable_key_hash(partition_key(ev, key_attrs))
+        return out, keys

@@ -12,7 +12,11 @@ predicates, class folding, and the semiring scan in one dispatch.  For true
 streaming (fixed-size chunks, donated state, compile-once) use
 :class:`repro.vector.streaming.StreamingVectorEngine`.
 
-Batching = partition-by: the B axis carries independent substreams.
+Batching = partition-by: the B axis carries independent substreams.  For
+*pre-partitioned* inputs feed B streams directly; for a raw interleaved
+stream, :meth:`VectorEngine.partitioned_streaming` builds the device-native
+PARTITION BY runtime (`vector/partitioned.py`) that hash-routes events to
+lanes on device and keeps per-lane substream positions.
 """
 from __future__ import annotations
 
@@ -125,6 +129,19 @@ class VectorEngine:
             state = self.init_state(attrs.shape[1])
         matches, state = self.pipeline(attrs, state, start_pos=start_pos)
         return np.asarray(matches).astype(np.int64), state
+
+    # ------------------------------------------------------------------
+    def partitioned_streaming(self, key_attrs: Sequence[str],
+                              chunk_len: int, num_lanes: int, **kw):
+        """Device-native PARTITION BY runtime over this query's tables.
+
+        Returns a :class:`repro.vector.partitioned.PartitionedStreamingEngine`
+        that hash-routes raw interleaved chunks to ``num_lanes`` substream
+        lanes on device (paper §5.4, DESIGN.md §6).
+        """
+        from .partitioned import PartitionedStreamingEngine
+        return PartitionedStreamingEngine(self, key_attrs, chunk_len,
+                                          num_lanes, **kw)
 
     # ------------------------------------------------------------------
     def hit_positions(self, matches: np.ndarray) -> List[Tuple[int, int]]:

@@ -1,0 +1,344 @@
+"""Device-native PARTITION BY streaming (paper §3/§5.4, DESIGN.md §6).
+
+CORE's PARTITION BY splits the stream into maximal substreams agreeing (and
+non-NULL) on the key attributes and runs WHERE-SELECT-WITHIN on each
+substream separately.  The host implementation (`core/partition.py`) is a
+dict of Python engines — one hash lookup and one Algorithm-1 step per event.
+This module is the device-rate equivalent: raw *interleaved* chunks go in,
+and one compiled executable per chunk hash-routes every event to a lane,
+advances all partitions concurrently, and hands back match counts relabelled
+to global stream positions.
+
+Per chunk (all inside one jitted step, state donated):
+
+1. **Lane assignment** — a `lax.scan` over the chunk's key hashes against
+   the `(L,)` lane-ownership table: events of a known key go to its lane;
+   new keys claim an empty lane, or (policy permitting) **evict** the
+   least-recently-used lane that has no events yet this chunk; NULL keys are
+   dropped (they join no substream); new keys that find no lane **spill**
+   (reported to the host, which may evict + retry or fall back to the host
+   engine).
+2. **Dense scatter** — events are packed per lane in stream order (the MoE
+   bounded-capacity dispatch idiom, cf. `route_by_partition`): lane `b`
+   receives a dense prefix of `n_b ≤ lane_cap` events; events beyond
+   `lane_cap` spill.
+3. **Fused scan** — `ops.cer_pipeline` with *per-lane* `start_pos`
+   (substream-local positions, so count-based windows count substream
+   events, exactly like the host engine) and per-lane valid counts (padding
+   slots are exact no-ops).
+4. **Relabelling** — per-slot match counts gather back to the chunk's event
+   order; position `base + t` of the global stream gets the count of
+   complex events closing at event `t`.  Hit positions are global, ready
+   for the host tECS enumerator (deviation D1).
+
+Key hashing runs in the encoder (`EventEncoder.encode_stream_with_keys`)
+with the process-stable 32-bit hash shared with `core/partition.py`; the
+engine verifies injectivity on the keys it has seen and raises on a (≈2⁻³²
+per pair) hash collision rather than silently merging substreams.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.events import Event
+from ..core.partition import EMPTY_LANE, NULL_KEY_HASH, partition_key
+from ..kernels import ops
+from .streaming import StreamingVectorEngine, _quiet_donation
+
+_I32_MAX = np.iinfo(np.int32).max
+
+
+@dataclass
+class PartitionStats:
+    """Cumulative routing outcomes across feeds (host-side bookkeeping)."""
+
+    events: int = 0
+    routed: int = 0
+    dropped_null: int = 0        # NULL partition key → joins no substream
+    spilled_table: int = 0       # new key, no free/evictable lane
+    spilled_capacity: int = 0    # lane already had lane_cap events this chunk
+    evicted_lanes: int = 0       # lanes reassigned to a new key
+
+
+class PartitionedStreamingEngine(StreamingVectorEngine):
+    """Compile-once PARTITION BY runtime over the fused device pipeline.
+
+    Unlike the parent (which takes B pre-partitioned streams per feed),
+    :meth:`feed` takes ONE interleaved chunk of ``chunk_len`` raw events and
+    routes them to ``num_lanes`` partition lanes on device.  Counts/hits come
+    back in global stream positions, matching
+    ``core.partition.PartitionedEngine`` complex-event-for-complex-event
+    (as long as no spill/eviction occurred — both are reported in ``stats``).
+    """
+
+    def __init__(self, engine, key_attrs: Sequence[str], chunk_len: int,
+                 num_lanes: int, lane_cap: Optional[int] = None,
+                 impl: Optional[str] = None, evict: str = "lru"):
+        """``engine``: a constructed VectorEngine or MultiQueryEngine.
+
+        key_attrs: PARTITION BY attributes (need not appear in predicates).
+        num_lanes: concurrent partitions resident on device (L).
+        lane_cap:  per-lane event capacity per chunk; default ``chunk_len``
+                   (no capacity spill possible); smaller values trade spill
+                   risk for less padded scan work, like MoE capacity factors.
+        evict:     "lru" (new keys may evict the least-recently-used lane
+                   that is empty this chunk) or "none" (new keys spill when
+                   no lane is free).
+        """
+        super().__init__(engine, chunk_len, batch=num_lanes, impl=impl)
+        if evict not in ("lru", "none"):
+            raise ValueError(f"evict must be 'lru' or 'none', got {evict!r}")
+        self.key_attrs = tuple(key_attrs)
+        self.num_lanes = int(num_lanes)
+        self.lane_cap = int(lane_cap) if lane_cap is not None else chunk_len
+        self.evict = evict
+        self.stats = PartitionStats()
+        self._hash_to_key: Dict[int, tuple] = {}
+        self._chunk_idx = 0
+        self._state = self._init_lane_state()
+        self._step = jax.jit(self._part_step_impl, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def _init_lane_state(self):
+        return {
+            "C": self.engine.init_state(self.num_lanes),
+            "lane_keys": jnp.full((self.num_lanes,), EMPTY_LANE, jnp.uint32),
+            "lane_pos": jnp.zeros((self.num_lanes,), jnp.int32),
+            "lane_last": jnp.full((self.num_lanes,), -1, jnp.int32),
+        }
+
+    # ------------------------------------------------------------------
+    def _part_step_impl(self, attrs: jnp.ndarray, keys: jnp.ndarray,
+                        state, chunk_idx: jnp.ndarray):
+        self._trace_count += 1  # runs only while tracing (i.e. compiling)
+        T, A = attrs.shape
+        L, cap = self.num_lanes, self.lane_cap
+        lane_ids = jnp.arange(L)
+
+        # --- 1. lane assignment: scan the chunk against the key table -----
+        def assign(carry, k):
+            lane_keys, touched, lane_last = carry
+            # EMPTY_LANE is unreachable from the audited hash path; a raw
+            # feed_keyed caller passing it would match every *unowned* lane
+            # (lane_keys == k), silently sharing state with whichever
+            # partition claims that lane later — treat it as NULL instead
+            is_null = (k == jnp.uint32(NULL_KEY_HASH)) | \
+                (k == jnp.uint32(EMPTY_LANE))
+            hit = (lane_keys == k) & ~is_null                  # (L,)
+            found = hit.any()
+            empty = lane_keys == jnp.uint32(EMPTY_LANE)
+            has_empty = empty.any()
+            idx_empty = jnp.argmax(empty)
+            if self.evict == "lru":
+                # evictable: owned lanes with no events yet this chunk
+                evictable = (touched == 0) & ~empty
+                can_evict = evictable.any()
+                lru = jnp.where(evictable, lane_last, _I32_MAX)
+                idx_victim = jnp.argmin(lru)
+            else:
+                can_evict = jnp.bool_(False)
+                idx_victim = jnp.int32(0)
+            new_lane = jnp.where(has_empty, idx_empty, idx_victim)
+            alloc_ok = has_empty | can_evict
+            lane = jnp.where(found, jnp.argmax(hit), new_lane).astype(
+                jnp.int32)
+            ok = ~is_null & (found | alloc_ok)
+            do_alloc = ~is_null & ~found & alloc_ok
+            sel = lane_ids == lane
+            lane_keys = jnp.where(do_alloc & sel, k, lane_keys)
+            touched = touched + (sel & ok).astype(jnp.int32)
+            lane_last = jnp.where(sel & ok, chunk_idx, lane_last)
+            lane_out = jnp.where(ok, lane, jnp.int32(L))
+            return (lane_keys, touched, lane_last), (lane_out, ok, is_null)
+
+        carry0 = (state["lane_keys"], jnp.zeros((L,), jnp.int32),
+                  state["lane_last"])
+        (lane_keys, _touched, lane_last), (lanes, routed, nulls) = \
+            jax.lax.scan(assign, carry0, keys)
+
+        # lanes whose owner changed were evicted: their partition restarts
+        # from scratch if its key ever returns (fresh state, local pos 0)
+        evicted = (lane_keys != state["lane_keys"]) & \
+            (state["lane_keys"] != jnp.uint32(EMPTY_LANE))
+        C = jnp.where(evicted[:, None, None], 0.0, state["C"])
+        lane_pos = jnp.where(evicted, 0, state["lane_pos"])
+
+        # --- 2. dense scatter: pack each lane's events in stream order ----
+        onehot = (lanes[:, None] == jnp.arange(L + 1)[None, :]
+                  ).astype(jnp.int32)                          # (T, L+1)
+        rank = jnp.take_along_axis(jnp.cumsum(onehot, axis=0),
+                                   lanes[:, None], axis=1)[:, 0] - 1
+        keep = routed & (rank < cap)
+        spilled = routed & ~keep                               # over capacity
+        slot = jnp.where(keep, lanes * cap + rank, L * cap)    # dummy tail
+        buf = jnp.zeros((L * cap + 1, A), attrs.dtype).at[slot].set(attrs)
+        attrs_lanes = jnp.moveaxis(
+            buf[:L * cap].reshape(L, cap, A), 0, 1)            # (cap, L, A)
+        n = (onehot[:, :L] * keep[:, None].astype(jnp.int32)).sum(0)
+
+        # --- 3. fused scan at per-lane substream positions ----------------
+        matches, C = ops.cer_pipeline(
+            attrs_lanes, self._specs, self._class_of, self._class_ind,
+            self._m_all, self._finals_q, C, init_mask=self._init_mask,
+            epsilon=self.epsilon, start_pos=lane_pos, valid_counts=n,
+            impl=self.impl, use_pallas=self._use_pallas,
+            b_tile=self._b_tile)                               # (cap, L, Q)
+
+        # --- 4. relabel: routed-slot counts → chunk event order -----------
+        NQ = matches.shape[-1]
+        mm = jnp.concatenate(
+            [jnp.moveaxis(matches, 0, 1).reshape(L * cap, NQ),
+             jnp.zeros((1, NQ), matches.dtype)])               # dummy row = 0
+        counts_chunk = mm[slot]                                # (T, Q)
+
+        # positions are only consumed mod W (ring slots), so the carried
+        # per-lane position wraps mod W — exact, and int32 never overflows
+        # however long a substream runs
+        new_state = {"C": C, "lane_keys": lane_keys,
+                     "lane_pos": (lane_pos + n) % self.engine.ring,
+                     "lane_last": lane_last}
+        info = {"routed": routed, "nulls": nulls, "spilled": spilled,
+                "evicted": evicted, "lane_fill": n}
+        return counts_chunk, new_state, info
+
+    # ------------------------------------------------------------------
+    def feed(self, events: Sequence[Event]
+             ) -> Tuple[np.ndarray, List[int]]:
+        """Feed one chunk of ``chunk_len`` raw interleaved events.
+
+        Returns ``(counts, hits)``: counts is ``(chunk_len,)`` int64 match
+        counts per *global* stream position (trailing query axis for a
+        multi-query engine); hits is the sorted list of absolute positions
+        with ≥ 1 match, ready for the host tECS enumerator.
+        """
+        if len(events) != self.chunk_len:
+            raise ValueError(
+                f"partitioned chunk must have chunk_len={self.chunk_len} "
+                f"events; got {len(events)}.  Pad the tail chunk on the host "
+                "— odd shapes would trigger a recompile per shape.")
+        attrs, keys = self.encoder.encode_stream_with_keys(
+            events, self.key_attrs)
+        for ev, h in zip(events, keys):       # audit reuses encoder hashes
+            key = partition_key(ev, self.key_attrs)
+            if key is None:
+                continue
+            prev = self._hash_to_key.setdefault(int(h), key)
+            if prev != key:
+                raise ValueError(
+                    f"partition hash collision: {prev!r} and {key!r} both "
+                    f"hash to {int(h):#x}; routing would merge their "
+                    "substreams")
+        return self.feed_keyed(jnp.asarray(attrs), jnp.asarray(keys))
+
+    def feed_keyed(self, attrs: jnp.ndarray, keys: jnp.ndarray,
+                   positions: Optional[np.ndarray] = None
+                   ) -> Tuple[np.ndarray, List[int]]:
+        """Device-tensor entry point: attrs (chunk_len, A) f32 + uint32 keys.
+
+        Skips the host-side collision audit — callers hashing their own keys
+        own that risk.  ``positions`` (optional, (chunk_len,) int) gives the
+        global stream position of each fed row — the sharded path feeds the
+        rows `route_partitioned_chunk` delivered to this shard, which are a
+        non-contiguous slice of the stream; hits are labelled from it.
+        """
+        T = attrs.shape[0]
+        if T != self.chunk_len or keys.shape != (T,):
+            raise ValueError(f"expected attrs (chunk_len={self.chunk_len}, "
+                             f"A) and keys ({self.chunk_len},); got "
+                             f"{attrs.shape} / {keys.shape}")
+        base = self._pos
+        with _quiet_donation():
+            counts_f, self._state, info = self._step(
+                attrs, keys, self._state,
+                jnp.asarray(self._chunk_idx, jnp.int32))
+        self._pos += T
+        self._chunk_idx += 1
+
+        st = self.stats
+        st.events += T
+        st.dropped_null += int(np.asarray(info["nulls"]).sum())
+        st.spilled_capacity += int(np.asarray(info["spilled"]).sum())
+        st.routed += int(np.asarray(info["lane_fill"]).sum())
+        st.spilled_table += T - int(np.asarray(info["routed"]).sum()) \
+            - int(np.asarray(info["nulls"]).sum())
+        st.evicted_lanes += int(np.asarray(info["evicted"]).sum())
+
+        counts = np.asarray(counts_f).astype(np.int64)         # (T, Q)
+        any_q = counts.sum(axis=-1)
+        if self._single_query:
+            counts = counts[:, 0]
+        if positions is None:
+            hits = [base + int(t) for t in np.nonzero(any_q)[0]]
+        else:
+            hits = sorted(int(positions[t]) for t in np.nonzero(any_q)[0])
+        return counts, hits
+
+    # ------------------------------------------------------------------
+    def feed_attrs(self, attrs):
+        """Unsupported on the partitioned engine (parent-class API).
+
+        The partitioned step needs per-event key hashes alongside the
+        attribute rows — use :meth:`feed` (raw events) or
+        :meth:`feed_keyed` (pre-encoded attrs + uint32 hashes).
+        """
+        raise TypeError("PartitionedStreamingEngine routes by key: use "
+                        "feed(events) or feed_keyed(attrs, keys) instead of "
+                        "feed_attrs")
+
+    @property
+    def state(self):
+        """Current device state: ``{C (L, W, S), lane_keys (L,), lane_pos
+        (L,), lane_last (L,)}``.
+
+        Donated to the next :meth:`feed` — copy leaves before feeding if
+        you need a snapshot (see the parent class note on donation).
+        """
+        return self._state
+
+    @property
+    def num_active_lanes(self) -> int:
+        """Lanes currently owned by a partition."""
+        lk = np.asarray(self._state["lane_keys"])
+        return int((lk != np.uint32(EMPTY_LANE)).sum())
+
+    def evict_idle(self, min_idle_chunks: int = 1) -> int:
+        """Free lanes whose partition saw no events for ≥ N chunks.
+
+        Cold-path host surgery on the device state (streaming hot path stays
+        compile-once).  A lane whose partition appeared in the most recent
+        chunk has been idle for 0 chunks.  Evicted partitions restart from
+        scratch if their key returns.  Returns the number of lanes freed.
+        """
+        lk = np.asarray(self._state["lane_keys"])
+        ll = np.asarray(self._state["lane_last"])
+        ev = (lk != np.uint32(EMPTY_LANE)) & \
+            (self._chunk_idx - 1 - ll >= min_idle_chunks)
+        n = int(ev.sum())
+        if n == 0:
+            return 0
+        C = np.asarray(self._state["C"]).copy()
+        lp = np.asarray(self._state["lane_pos"]).copy()
+        C[ev] = 0.0
+        lp[ev] = 0
+        lk = lk.copy()
+        ll = ll.copy()
+        lk[ev] = np.uint32(EMPTY_LANE)
+        ll[ev] = -1
+        self._state = {"C": jnp.asarray(C), "lane_keys": jnp.asarray(lk),
+                       "lane_pos": jnp.asarray(lp),
+                       "lane_last": jnp.asarray(ll)}
+        self.stats.evicted_lanes += n
+        return n
+
+    def reset(self) -> None:
+        """Drop all partitions and rewind the stream position."""
+        self._state = self._init_lane_state()
+        self._pos = 0
+        self._chunk_idx = 0
+        self._hash_to_key.clear()
+        self.stats = PartitionStats()

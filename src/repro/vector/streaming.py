@@ -22,9 +22,15 @@ claim:
 Works for both the single-query :class:`~repro.vector.engine.VectorEngine`
 and the packed :class:`~repro.vector.multiquery.MultiQueryEngine` (pass one
 as ``engine``; match counts then carry a trailing query axis).
+
+``feed`` expects B *pre-partitioned* streams; for one raw interleaved
+stream with PARTITION BY keys, the subclass
+:class:`~repro.vector.partitioned.PartitionedStreamingEngine` hash-routes
+events to lanes on device first (DESIGN.md §6).
 """
 from __future__ import annotations
 
+import contextlib
 import warnings
 from typing import List, Optional, Sequence, Tuple
 
@@ -34,6 +40,20 @@ import numpy as np
 
 from ..core.events import Event
 from ..kernels import ops
+
+
+@contextlib.contextmanager
+def _quiet_donation():
+    """Silence XLA's per-compile donation nag on CPU.
+
+    XLA has no donation on CPU; semantics are unchanged (callers always
+    rebind the returned state), so the warning is noise.
+    """
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
+
 
 class StreamingVectorEngine:
     """Fixed-chunk streaming wrapper around the fused device pipeline."""
@@ -69,6 +89,10 @@ class StreamingVectorEngine:
         self._b_tile = engine.b_tile
 
         self._state = engine.init_state(batch)
+        # ring slots depend on the position only mod W, so the kernel gets
+        # self._pos % ring — the absolute (unbounded) position stays a host
+        # int and the int32 operand can never overflow on long streams
+        self._ring = engine.ring
         self._pos = 0
         self._trace_count = 0  # incremented per trace == per compile
         # state ring donated: steady-state streaming allocates nothing new
@@ -135,13 +159,10 @@ class StreamingVectorEngine:
                 "chunk on the host or build a second engine for remainders — "
                 "odd shapes would trigger a recompile per shape.")
         t0 = self._pos
-        with warnings.catch_warnings():
-            # XLA has no donation on CPU; semantics are unchanged (we always
-            # rebind the returned state), so the per-compile nag is noise.
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable")
+        with _quiet_donation():
             counts_f, self._state = self._step(
-                attrs, self._state, jnp.asarray(self._pos, jnp.int32))
+                attrs, self._state,
+                jnp.asarray(self._pos % self._ring, jnp.int32))
         self._pos += T
         if self._single_query:
             counts_f = counts_f[:, :, 0]

@@ -73,8 +73,7 @@ def test_router_single_shard_identity_up_to_capacity():
     events = jnp.asarray(rng.normal(size=(N, A)), jnp.float32)
     keys = jnp.asarray(rng.integers(0, 100, (N,)), jnp.int32)
     with use_mesh(mesh):
-        routed, keep = route_by_partition(mesh, events, keys,
-                                          lanes_per_shard=N)
+        routed, keep = route_by_partition(mesh, events, keys)
     routed, keep = np.asarray(routed), np.asarray(keep)
     assert keep.all()  # single shard, capacity N ≥ all events
     # every original event row appears exactly once among routed rows

@@ -1,0 +1,376 @@
+"""Device-native PARTITION BY streaming ⇔ host dict-of-engines (DESIGN.md §6).
+
+Parity of `vector/partitioned.py` against `core/partition.py` on randomized
+interleaved streams (random keys incl. NULL attributes, chunk-straddling
+partitions), plus the routing policies the host engine doesn't have: lane
+capacity spill, lane-table overflow, LRU eviction — and compile-once.
+"""
+import random
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import Event, compile_query
+from repro.core.engine import Engine, WindowSpec
+from repro.core.partition import (NULL_KEY_HASH, PartitionedEngine,
+                                  partition_key, stable_key_hash)
+from repro.vector import PartitionedStreamingEngine, VectorEngine
+from repro.vector.multiquery import MultiQueryEngine
+
+QTEXT = "SELECT * FROM S WHERE A ; B+ ; C"
+
+
+def host_partition_counts(qtext, stream, eps, key_attrs):
+    q = compile_query(qtext)
+    pe = PartitionedEngine(
+        lambda: Engine(q.cea, window=WindowSpec.events(eps)),
+        tuple(key_attrs))
+    return [len(pe.process(e)) for e in stream], pe
+
+
+def make_stream(seed, T, alphabet="ABCX", keys=("u1", "u2", 7, 7.0, None),
+                p_missing=0.05):
+    """Random interleaved stream; key values include ints/strs/NULL, and
+    some events miss the key attribute entirely (also NULL)."""
+    rng = random.Random(seed)
+    out = []
+    for _ in range(T):
+        if rng.random() < p_missing:
+            attrs = {}
+        else:
+            attrs = {"uid": rng.choice(keys)}
+        out.append(Event(rng.choice(alphabet), attrs))
+    return out
+
+
+def run_device(pse, stream):
+    counts, hits = [], []
+    chunk = pse.chunk_len
+    assert len(stream) % chunk == 0
+    for lo in range(0, len(stream), chunk):
+        c, h = pse.feed(stream[lo:lo + chunk])
+        counts.append(c)
+        hits += h
+    return np.concatenate(counts), hits
+
+
+# ---------------------------------------------------------------------------
+# exact parity with the host engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qtext,eps", [
+    ("SELECT * FROM S WHERE A ; B ; C", 6),
+    (QTEXT, 5),
+    ("SELECT * FROM S WHERE A ; (B OR C)+ ; A", 7),
+])
+@pytest.mark.parametrize("seed,chunk", [(1, 16), (2, 8)])
+def test_partitioned_matches_host_randomized(qtext, eps, seed, chunk):
+    """Random keys (incl. NULL / missing attrs), partitions straddling every
+    chunk boundary — device counts per global position == host engine."""
+    stream = make_stream(seed, 64)
+    want, pe = host_partition_counts(qtext, stream, eps, ("uid",))
+    ve = VectorEngine(qtext, epsilon=eps)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=chunk,
+                                     num_lanes=8)
+    got, hits = run_device(pse, stream)
+    assert got.tolist() == want
+    assert hits == [j for j, c in enumerate(want) if c > 0]
+    assert pse.compile_count == 1
+    assert pse.num_active_lanes == pe.num_partitions
+    assert pse.stats.spilled_table == pse.stats.spilled_capacity == 0
+    assert pse.stats.dropped_null > 0  # the stream does carry NULL keys
+
+
+def test_partitioned_multi_attribute_key():
+    """PARTITION BY (uid, region): substream = agreement on BOTH."""
+    rng = random.Random(11)
+    stream = [Event(rng.choice("ABCX"),
+                    {"uid": rng.choice(["a", "b", None]),
+                     "region": rng.choice([1, 2])})
+              for _ in range(48)]
+    want, _ = host_partition_counts(QTEXT, stream, 6, ("uid", "region"))
+    ve = VectorEngine(QTEXT, epsilon=6)
+    pse = PartitionedStreamingEngine(ve, ("uid", "region"), chunk_len=16,
+                                     num_lanes=8)
+    got, _ = run_device(pse, stream)
+    assert got.tolist() == want
+
+
+@pytest.mark.parametrize("impl", ["fused", "unfused", "ref"])
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_partitioned_impl_routing(impl, use_pallas):
+    """Every impl route (incl. the unfused→XLA per-lane fallback) agrees."""
+    stream = make_stream(5, 32)
+    want, _ = host_partition_counts(QTEXT, stream, 5, ("uid",))
+    ve = VectorEngine(QTEXT, epsilon=5, use_pallas=use_pallas, impl=impl)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=16, num_lanes=8,
+                                     impl=impl)
+    got, _ = run_device(pse, stream)
+    assert got.tolist() == want, (impl, use_pallas)
+
+
+def test_count_window_is_substream_local():
+    """WITHIN n events counts *substream* positions: a pattern spread far
+    apart globally but adjacent within its partition must match (and must
+    NOT match on the unpartitioned engine)."""
+    qtext, eps = "SELECT * FROM S WHERE A ; B", 1
+    stream = ([Event("A", {"uid": "u1"})]
+              + [Event("X", {"uid": "u2"}) for _ in range(5)]
+              + [Event("B", {"uid": "u1"})]
+              + [Event("X", {"uid": "u2"})])
+    want, _ = host_partition_counts(qtext, stream, eps, ("uid",))
+    assert want[6] == 1  # A@0 and B@6 are adjacent in u1's substream
+    ve = VectorEngine(qtext, epsilon=eps)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=8, num_lanes=4)
+    got, hits = run_device(pse, stream)
+    assert got.tolist() == want
+    assert hits == [6]
+    # global-window evaluation would reject the 6-position gap
+    flat, _ = ve.run([stream])
+    assert flat[:, 0].tolist() != want
+
+
+def test_partitioned_multiquery():
+    """Packed multi-query engine over partitioned lanes: per-query parity."""
+    queries = ["SELECT * FROM S WHERE A1 ; A2",
+               "SELECT * FROM S WHERE A2 ; A1"]
+    rng = random.Random(9)
+    stream = [Event(rng.choice(["A1", "A2"]),
+                    {"uid": rng.choice(["x", "y", None])})
+              for _ in range(32)]
+    mq = MultiQueryEngine(queries, epsilon=5)
+    pse = PartitionedStreamingEngine(mq, ("uid",), chunk_len=16, num_lanes=4)
+    got, _ = run_device(pse, stream)
+    assert got.shape == (32, 2)
+    for qi, q in enumerate(queries):
+        want, _ = host_partition_counts(q, stream, 5, ("uid",))
+        assert got[:, qi].tolist() == want, q
+
+
+# ---------------------------------------------------------------------------
+# routing policies: capacity spill, table overflow, LRU eviction
+# ---------------------------------------------------------------------------
+
+def drop_spilled(stream, key_attrs, chunk, lane_cap):
+    """Host-side oracle of the capacity policy: per chunk, events of one
+    partition beyond lane_cap are dropped from their substream (replaced by
+    NULL-key placeholders so global positions are preserved)."""
+    out = []
+    for lo in range(0, len(stream), chunk):
+        seen = {}
+        for ev in stream[lo:lo + chunk]:
+            k = partition_key(ev, key_attrs)
+            n = seen.get(k, 0)
+            seen[k] = n + 1
+            if k is not None and n >= lane_cap:
+                out.append(Event(ev.type, {}))  # no key → joins no substream
+            else:
+                out.append(ev)
+    return out
+
+
+def test_lane_capacity_spill_reported_and_exact():
+    """lane_cap < events-per-partition-per-chunk: overflow spills (reported)
+    and surviving events still evaluate exactly like the host engine fed the
+    spill-filtered stream."""
+    rng = random.Random(13)
+    stream = [Event(rng.choice("ABCX"), {"uid": rng.choice(["a", "b"])})
+              for _ in range(32)]
+    cap = 4
+    ve = VectorEngine(QTEXT, epsilon=5)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=16, num_lanes=4,
+                                     lane_cap=cap)
+    got, _ = run_device(pse, stream)
+    assert pse.stats.spilled_capacity > 0
+    filtered = drop_spilled(stream, ("uid",), 16, cap)
+    want, _ = host_partition_counts(QTEXT, filtered, 5, ("uid",))
+    assert got.tolist() == want
+
+
+def test_lane_table_overflow_spills_without_eviction():
+    """evict='none' + more keys than lanes: late keys spill (reported);
+    lane-owning partitions stay exact; spilled positions count 0."""
+    rng = random.Random(17)
+    keys = [f"u{i}" for i in range(6)]
+    stream = [Event(rng.choice("ABCX"), {"uid": rng.choice(keys)})
+              for _ in range(64)]
+    ve = VectorEngine(QTEXT, epsilon=5)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=16, num_lanes=3,
+                                     evict="none")
+    got, _ = run_device(pse, stream)
+    assert pse.stats.spilled_table > 0
+    assert pse.stats.evicted_lanes == 0
+    # lanes belong to the first 3 distinct keys of the stream
+    owners, owned = [], set()
+    for ev in stream:
+        k = partition_key(ev, ("uid",))
+        if k not in owned:
+            owners.append(k)
+            owned.add(k)
+    owned = set(owners[:3])
+    filtered = [ev if partition_key(ev, ("uid",)) in owned
+                else Event(ev.type, {}) for ev in stream]
+    want, _ = host_partition_counts(QTEXT, filtered, 5, ("uid",))
+    assert got.tolist() == want
+
+
+def test_lru_eviction_reassigns_lane_and_restarts_partition():
+    """A new key with a full table evicts the least-recently-used untouched
+    lane; the evicted partition restarts from scratch if it returns."""
+    mk = lambda t, u: Event(t, {"uid": u})
+    ve = VectorEngine("SELECT * FROM S WHERE A ; B", epsilon=3)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=8, num_lanes=2)
+    # chunk 0: keys a, b own both lanes; a has a pending A
+    c0 = [mk("A", "a"), mk("X", "b"), mk("X", "b"), mk("X", "b"),
+          mk("X", "b"), mk("X", "b"), mk("X", "b"), mk("X", "b")]
+    pse.feed(c0)
+    # chunk 1: only key c → evicts one lane (both untouched, LRU tie)
+    c1 = [mk("A", "c"), mk("B", "c")] + [mk("X", "c")] * 6
+    counts1, hits1 = pse.feed(c1)
+    assert pse.stats.evicted_lanes == 1
+    assert pse.stats.spilled_table == 0
+    assert counts1.tolist()[:2] == [0, 1]  # fresh c-substream matches A;B
+    assert hits1 == [9]
+    # LRU tie (both lanes last used in chunk 0) breaks to lane 0 → key a
+    # was the one evicted
+    assert stable_key_hash(("a",)) not in \
+        np.asarray(pse._state["lane_keys"]).tolist()
+    # chunk 2: key a returns — its lane was reassigned, so its partition
+    # restarts: the A pending from chunk 0 must NOT pair with this B
+    c2 = [mk("B", "a")] + [mk("X", "c")] * 7
+    counts2, _ = pse.feed(c2)
+    assert counts2.tolist()[0] == 0  # restarted substream has no pending A
+    assert pse.stats.evicted_lanes == 2  # b's lane went to a
+
+
+def test_evict_idle_frees_lanes_and_keeps_compile_count():
+    rng = random.Random(23)
+    stream = [Event(rng.choice("ABCX"), {"uid": rng.choice(["a", "b", "c"])})
+              for _ in range(32)]
+    ve = VectorEngine(QTEXT, epsilon=5)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=16, num_lanes=8)
+    run_device(pse, stream)
+    active = pse.num_active_lanes
+    assert active == 3
+    freed = pse.evict_idle(min_idle_chunks=10)  # nobody idle that long
+    assert freed == 0
+    freed = pse.evict_idle(min_idle_chunks=0)   # everyone idle ≥ 0 chunks
+    assert freed == active and pse.num_active_lanes == 0
+    # streaming continues on the same executable after host-side surgery
+    c, _ = pse.feed(stream[:16])
+    assert pse.compile_count == 1
+
+
+def test_evict_idle_boundary_just_active_lane_survives():
+    """idle is counted in whole chunks: a lane that saw events in the most
+    recent chunk is 0-idle and must survive evict_idle(1)."""
+    mk = lambda u: [Event("A", {"uid": u})] * 4
+    ve = VectorEngine(QTEXT, epsilon=5)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=4, num_lanes=4)
+    pse.feed(mk("a"))
+    assert pse.evict_idle(1) == 0      # a was active in the last chunk
+    pse.feed(mk("b"))
+    assert pse.evict_idle(1) == 1      # now a is idle for exactly 1 chunk
+    assert pse.num_active_lanes == 1   # b survives
+
+
+def test_null_only_chunk_drops_everything():
+    stream = [Event("A", {}) for _ in range(16)]
+    ve = VectorEngine(QTEXT, epsilon=5)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=16, num_lanes=4)
+    counts, hits = pse.feed(stream)
+    assert counts.sum() == 0 and hits == []
+    assert pse.stats.dropped_null == 16
+    assert pse.num_active_lanes == 0
+
+
+# ---------------------------------------------------------------------------
+# runtime contract
+# ---------------------------------------------------------------------------
+
+def test_compile_once_across_many_chunks_and_reset():
+    stream = make_stream(31, 128)
+    ve = VectorEngine(QTEXT, epsilon=6)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=16, num_lanes=8)
+    got1, _ = run_device(pse, stream)
+    assert pse.position == 128 and pse.compile_count == 1
+    pse.reset()
+    assert pse.position == 0 and pse.num_active_lanes == 0
+    got2, _ = run_device(pse, stream)
+    np.testing.assert_array_equal(got1, got2)
+    assert pse.compile_count == 1  # reset must not re-trace
+
+
+def test_ragged_chunk_rejected():
+    ve = VectorEngine(QTEXT, epsilon=5)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=16, num_lanes=4)
+    with pytest.raises(ValueError, match="chunk_len"):
+        pse.feed(make_stream(0, 5))
+
+
+def test_hash_collision_detected(monkeypatch):
+    # the audit reuses the encoder's hashes, so collide them at the source
+    import repro.vector.encoder as enc
+    monkeypatch.setattr(enc, "stable_key_hash",
+                        lambda k: 7 if k is not None else NULL_KEY_HASH)
+    ve = VectorEngine(QTEXT, epsilon=5)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=4, num_lanes=4)
+    stream = [Event("A", {"uid": "a"}), Event("B", {"uid": "b"}),
+              Event("C", {"uid": "a"}), Event("X", {"uid": "a"})]
+    with pytest.raises(ValueError, match="collision"):
+        pse.feed(stream)
+
+
+def test_stable_key_hash_properties():
+    # process-stable, dict-equality-compatible, sentinel-free
+    assert stable_key_hash(("a", 1)) == stable_key_hash(("a", 1))
+    assert stable_key_hash((1,)) == stable_key_hash((1.0,)) \
+        == stable_key_hash((True,))
+    assert stable_key_hash(("1",)) != stable_key_hash((1,))
+    # exact integers: no float collapse at 2^53, no overflow on huge ints
+    assert stable_key_hash((2 ** 53,)) != stable_key_hash((2 ** 53 + 1,))
+    assert stable_key_hash((10 ** 400,)) != stable_key_hash((10 ** 400 + 1,))
+    assert stable_key_hash((float(2 ** 53),)) == stable_key_hash((2 ** 53,))
+    assert stable_key_hash(None) == NULL_KEY_HASH
+    seen = set()
+    for i in range(2000):
+        h = stable_key_hash((f"user-{i}", i))
+        assert 0 <= h < 0xFFFFFFFE
+        seen.add(h)
+    assert len(seen) == 2000  # no collisions on a plausible key population
+
+
+# ---------------------------------------------------------------------------
+# sharded case: one collective (router), then the local zero-collective step
+# ---------------------------------------------------------------------------
+
+def test_sharded_route_then_local_step_matches_host():
+    from repro.launch.mesh import make_host_mesh, use_mesh
+    from repro.vector.distributed import route_partitioned_chunk
+
+    stream = make_stream(41, 32)
+    want, _ = host_partition_counts(QTEXT, stream, 5, ("uid",))
+    ve = VectorEngine(QTEXT, epsilon=5)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=16, num_lanes=8)
+    mesh = make_host_mesh()
+    got = np.zeros(len(stream), np.int64)
+    hits = []
+    for lo in range(0, len(stream), 16):
+        attrs, keys = ve.encoder.encode_stream_with_keys(
+            stream[lo:lo + 16], ("uid",))
+        pos = np.arange(lo, lo + 16, dtype=np.int32)
+        with use_mesh(mesh):
+            a2, k2, p2, valid, keep = route_partitioned_chunk(
+                mesh, jnp.asarray(attrs), jnp.asarray(keys),
+                jnp.asarray(pos))
+        # NULL keys drop sender-side (no router capacity); everything else
+        # fits on a single shard
+        np.testing.assert_array_equal(np.asarray(keep),
+                                      keys != np.uint32(NULL_KEY_HASH))
+        p2 = np.asarray(p2)
+        counts, h = pse.feed_keyed(a2, k2, positions=p2)
+        got[p2[np.asarray(valid)]] = counts[np.asarray(valid)]
+        hits += h
+    assert got.tolist() == want
+    assert sorted(hits) == [j for j, c in enumerate(want) if c > 0]
