@@ -37,6 +37,9 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
         num_events=n, num_keys=16 if quick else 32,
         num_lanes=16 if quick else 32, lane_cap=64,
         chunk=min(512 if quick else 1024, n))
+    enumeration = perf_cer.enumeration_delay(
+        total_events=min(n, 1024) if quick else n,
+        chunk=min(256, n), eps_small=7, eps_large=31 if quick else 63)
     packed = perf_cer.compare(num_events=n, batch=batch, n_queries=4)
     return {
         "bench": "cer_perf",
@@ -45,12 +48,14 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
         "fused_vs_unfused": fused,
         "streaming": streaming,
         "partitioned": partitioned,
+        "enumeration": enumeration,
         "packed_multiquery": {k: v for k, v in packed.items()
                               if k != "single_states"},
         "compile_counts": dict(
             {f"chunk_{row['chunk']}": row["compile_count"]
              for row in streaming},
-            partitioned=partitioned["compile_count"]),
+            partitioned=partitioned["compile_count"],
+            enumeration=enumeration["compile_count"]),
     }
 
 
@@ -71,10 +76,14 @@ def main() -> None:
         stream = (f"{rec['streaming'][-1]['streaming_eps']:.0f} ev/s"
                   if rec["streaming"] else "n/a (stream < chunk)")
         part = rec["partitioned"]
+        enum_ = rec["enumeration"]
         print(f"# wrote {args.cer_json}: fused {f2f['fused_eps']:.0f} ev/s "
               f"({f2f['speedup']:.2f}× over 3-dispatch), streaming "
               f"{stream}, partition-by {part['device_eps']:.0f} ev/s "
               f"({part['speedup']:.2f}× over host dict-of-engines), "
+              f"enumeration {enum_['large']['arena_per_match_us']:.1f} "
+              f"us/match (delay ratio {enum_['delay_ratio']:.2f}, "
+              f"{enum_['large']['enum_speedup']:.2f}× over replay), "
               f"compiles={rec['compile_counts']}")
         return
 

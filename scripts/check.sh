@@ -11,8 +11,26 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -q
+# Run the whole suite ONCE, under a fixed hypothesis seed when hypothesis is
+# available (the property-based arena parity suite in test_tecs_arena.py /
+# test_paper_claims.py must be deterministic in CI; without hypothesis the
+# @given tests skip via tests/_hyp.py and the flag would be unknown).
+HYP_ARGS=()
+if python -c "import hypothesis" 2>/dev/null; then
+    HYP_ARGS=(--hypothesis-seed=0)
+fi
+python -m pytest -q ${HYP_ARGS[@]+"${HYP_ARGS[@]}"}
 
 if [[ "${1:-}" != "--no-bench" ]]; then
     python -m benchmarks.run --quick --cer-json BENCH_cer.json
+    # Regression gate: the streaming / partitioned / enumeration cells must
+    # stay compile-once — any compile_count > 1 is a recompile regression.
+    python - <<'EOF'
+import json, sys
+rec = json.load(open("BENCH_cer.json"))
+bad = {k: v for k, v in rec["compile_counts"].items() if v != 1}
+if bad:
+    sys.exit(f"compile_count regression (must all be 1): {bad}")
+print("compile_counts OK:", rec["compile_counts"])
+EOF
 fi

@@ -15,15 +15,26 @@ Definitions used (per position j, over the set M_j of matches ending at j):
   maximal data sets.
 * ``NXT``  — keep, per start position, the lexicographically earliest data set
   (the "next"/earliest-match heuristic).
+
+The reducers operate on *enumerated* results — host tECS or device-arena
+alike (ComplexEvents from :meth:`ArenaSnapshot.enumerate` carry plain-int
+positions and arrive in DFS order, which none of the reducers depend on).
+Strategies are defined per position ``j`` over the set ``M_j`` of matches
+closing at ``j``: use :func:`apply_strategy_per_position` for a flat list
+spanning several positions (e.g. all hits of a streamed chunk) — applying
+``LAST``/``NXT`` across positions would silently compare unrelated ``M_j``.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, Iterable, List
 
 from .events import ComplexEvent
 
 
-def apply_strategy(strategy: str, matches: List[ComplexEvent]) -> List[ComplexEvent]:
+def apply_strategy(strategy: str, matches: Iterable[ComplexEvent]
+                   ) -> List[ComplexEvent]:
+    """Reduce the matches of ONE closing position under ``strategy``."""
+    matches = list(matches)
     if strategy in ("ALL", "ANY") or not matches:
         return matches
     if strategy == "MAX":
@@ -52,3 +63,22 @@ def apply_strategy(strategy: str, matches: List[ComplexEvent]) -> List[ComplexEv
         return [c for c in matches
                 if len(c.data) == c.end - c.start + 1]
     raise ValueError(f"unknown selection strategy {strategy!r}")
+
+
+def apply_strategy_per_position(strategy: str,
+                                matches: Iterable[ComplexEvent]
+                                ) -> List[ComplexEvent]:
+    """Reduce a flat enumerated list position-by-position.
+
+    Selection strategies are subset selectors of ``M_j`` — the matches
+    closing at one position ``j``.  A chunk's enumerated arena results span
+    many positions; this groups them by ``end`` and reduces each group
+    independently, returning groups in ascending position order.
+    """
+    groups: Dict[int, List[ComplexEvent]] = {}
+    for c in matches:
+        groups.setdefault(int(c.end), []).append(c)
+    out: List[ComplexEvent] = []
+    for j in sorted(groups):
+        out.extend(apply_strategy(strategy, groups[j]))
+    return out

@@ -153,6 +153,50 @@ def ulist_max(ul: UnionList) -> int:
 # ---------------------------------------------------------------------------
 
 
+def enumerate_arena(kind, pos, max_start, left, right, root: int, j: int,
+                    threshold_start: Optional[int] = None,
+                    steps: Optional[List[int]] = None
+                    ) -> Iterator[ComplexEvent]:
+    """Algorithm 2 over a structure-of-arrays tECS (device arena, DESIGN §7).
+
+    Same stack DFS as :func:`enumerate_node`, but nodes are rows of int32
+    arrays fetched from the device arena (``kind/pos/max_start/left/right``)
+    and ``root`` is an arena index (< 0 = empty).  ``threshold_start`` is the
+    window prune (``None`` disables it: arena roots only reference in-window
+    nodes, the ring evicts expired starts before they can be shared).
+    ``steps``, when given, is a 1-element list incremented once per node
+    visit — the work counter the output-linear-delay tests measure.
+    """
+    if root < 0:
+        return
+    thr = -(1 << 62) if threshold_start is None else threshold_start
+    if max_start[root] < thr:
+        return
+    stack: List[Tuple[int, Optional[tuple]]] = [(int(root), None)]
+    while stack:
+        node, plist = stack.pop()
+        while True:
+            if steps is not None:
+                steps[0] += 1
+            k = kind[node]
+            if k == BOTTOM:
+                data = []
+                cell = plist
+                while cell is not None:
+                    data.append(cell[0])
+                    cell = cell[1]
+                yield ComplexEvent(int(pos[node]), j, tuple(data))
+                break
+            elif k == OUTPUT:
+                plist = (int(pos[node]), plist)
+                node = int(left[node])
+            else:  # UNION
+                r = int(right[node])
+                if max_start[r] >= thr:
+                    stack.append((r, plist))
+                node = int(left[node])
+
+
 def enumerate_node(n: Node, j: int, threshold_start: int
                    ) -> Iterator[ComplexEvent]:
     """Enumerate ``⟦n⟧ε(j)`` = complex events closed at ``j`` whose start

@@ -54,10 +54,15 @@ def _fused_scan_kernel(start_ref, valid_ref,                     # (B_tile, 1)
                        attrs_ref, ind_ref, m_all_ref, finals_ref, init_ref,
                        c_in_ref,                                 # inputs
                        matches_ref, c_out_ref,                   # outputs
-                       c_scratch,                                # VMEM scratch
-                       *, specs: Tuple[Tuple[int, int, float], ...],
+                       *rest,                                    # [trace_ref,]
+                       specs: Tuple[Tuple[int, int, float], ...],  # + scratch
                        V: int, W: int, S: int, NC: int, NQ: int,
-                       B_tile: int, T: int, epsilon: int):
+                       B_tile: int, T: int, epsilon: int,
+                       emit_trace: bool):
+    if emit_trace:
+        trace_ref, c_scratch = rest
+    else:
+        (c_scratch,) = rest
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -76,6 +81,11 @@ def _fused_scan_kernel(start_ref, valid_ref,                     # (B_tile, 1)
                 ).astype(jnp.float32)                          # (B_tile, 2^k)
     cls = jnp.dot(onehot_v, ind_ref[...],
                   preferred_element_type=jnp.float32)          # (B_tile, C)
+    if emit_trace:
+        # class-id trace operand for the tECS arena (DESIGN.md §7): cls is
+        # exactly one-hot (indicator rows are one-hot, padded rows all-zero
+        # and never selected), so argmax recovers the integer class id.
+        trace_ref[:, 0] = jnp.argmax(cls, axis=1).astype(jnp.int32)
     m_flat = m_all_ref[...].reshape(NC, S * S)
     M = jnp.dot(cls, m_flat,
                 preferred_element_type=jnp.float32).reshape(B_tile, S, S)
@@ -114,7 +124,7 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
                       start_lanes: jnp.ndarray, valid_lanes: jnp.ndarray,
                       *, specs: Sequence[Tuple[int, int, float]],
                       epsilon: int, b_tile: int = 8,
-                      interpret: bool = False):
+                      interpret: bool = False, emit_trace: bool = False):
     """Raw pallas_call; use :func:`repro.kernels.ops.cer_pipeline` instead.
 
     attrs:       (B, T, A) f32 — raw encoded event attributes
@@ -126,7 +136,12 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
     start_lanes: (B, 1) int32 dynamic per-lane substream offsets
     valid_lanes: (B, 1) int32 per-lane live-event counts this chunk
                  (pass T for every lane to disable dead-step masking)
-    returns      (matches (B, T, NQ) f32, c_final (B, W, S) f32)
+    returns      (matches (B, T, NQ) f32, c_final (B, W, S) f32) — plus,
+                 with ``emit_trace`` (static, per call site), a third
+                 ``(B, T) int32`` output: the per-event symbol class, the
+                 tECS-arena trace operand (DESIGN.md §7).  Counting-only
+                 callers keep the previous two-output kernel, paying
+                 neither the argmax nor the extra HBM write.
     """
     B, T, A = attrs.shape
     NC, S, _ = m_all.shape
@@ -141,7 +156,19 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
 
     kernel = functools.partial(
         _fused_scan_kernel, specs=tuple(specs), V=V, W=W, S=S, NC=NC,
-        NQ=NQ, B_tile=b_tile, T=T, epsilon=epsilon)
+        NQ=NQ, B_tile=b_tile, T=T, epsilon=epsilon, emit_trace=emit_trace)
+
+    out_specs = [
+        pl.BlockSpec((b_tile, 1, NQ), lambda b, t: (b, t, 0)),   # matches
+        pl.BlockSpec((b_tile, W, S), lambda b, t: (b, 0, 0)),    # C_final
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, T, NQ), jnp.float32),
+        jax.ShapeDtypeStruct((B, W, S), jnp.float32),
+    ]
+    if emit_trace:
+        out_specs.append(pl.BlockSpec((b_tile, 1), lambda b, t: (b, t)))
+        out_shape.append(jax.ShapeDtypeStruct((B, T), jnp.int32))
 
     return pl.pallas_call(
         kernel,
@@ -156,14 +183,8 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
             pl.BlockSpec((1, S), lambda b, t: (0, 0)),             # init
             pl.BlockSpec((b_tile, W, S), lambda b, t: (b, 0, 0)),  # C0
         ],
-        out_specs=[
-            pl.BlockSpec((b_tile, 1, NQ), lambda b, t: (b, t, 0)),  # matches
-            pl.BlockSpec((b_tile, W, S), lambda b, t: (b, 0, 0)),   # C_final
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, T, NQ), jnp.float32),
-            jax.ShapeDtypeStruct((B, W, S), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((b_tile, W, S), jnp.float32)],
         interpret=interpret,
     )(start_lanes, valid_lanes, attrs, class_ind, m_all, finals_q,

@@ -228,13 +228,20 @@ def cer_pipeline(attrs: jnp.ndarray,
                  start_pos: Union[int, jnp.ndarray] = 0,
                  valid_counts: Optional[jnp.ndarray] = None,
                  impl: str = "fused", use_pallas: bool = True,
-                 interpret: Optional[bool] = None, b_tile: int = 8
-                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                 interpret: Optional[bool] = None, b_tile: int = 8,
+                 return_trace: bool = False
+                 ) -> Tuple[jnp.ndarray, ...]:
     """Full device CER pipeline: raw attributes → per-position match counts.
 
     attrs (T, B, A) f32 | class_of (2^k,) int32 | class_ind (≥2^k, C) f32
     | m_all (C, S, S) | finals_q (Q, S) | init_mask (S,) | c0 (B, W, S)
     → (matches (T, B, Q) f32, c_final (B, W, S) f32).
+
+    ``return_trace=True`` appends the per-event symbol-class trace
+    ``(T, B) int32`` — the tECS-arena operand (DESIGN.md §7): the arena
+    update consumes it instead of re-evaluating predicates on raw events.
+    The fused Pallas kernel emits it as a third kernel output; the XLA and
+    unfused paths already materialize it.
 
     ``impl`` routes fused / unfused / ref (module docstring).  The fused
     Pallas path needs W ≡ 0 (mod 8) and the VMEM budget to hold the
@@ -257,22 +264,26 @@ def cer_pipeline(attrs: jnp.ndarray,
 
     if impl == "ref" or (impl == "fused" and not use_pallas):
         return _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0,
-                             init_mask, epsilon, start_pos, valid_counts)
+                             init_mask, epsilon, start_pos, valid_counts,
+                             return_trace)
 
     if impl == "unfused":
         if per_lane:
             # the legacy 3-dispatch kernels take a scalar SMEM offset only
             return _pipeline_xla(attrs, specs, class_of, m_all, finals_q,
                                  c0, init_mask, epsilon, start_pos,
-                                 valid_counts)
+                                 valid_counts, return_trace)
         # legacy 3-dispatch path: bits kernel → gather → scan kernel
         bits = bitvector(attrs.reshape(T * B, A), specs,
                          use_pallas=use_pallas, interpret=interpret)
         class_ids = class_of[bits].reshape(T, B)
-        return cea_scan_multi(class_ids, m_all, finals_q, c0,
-                              init_mask=init_mask, epsilon=epsilon,
-                              start_pos=start_pos, use_pallas=use_pallas,
-                              interpret=interpret, b_tile=b_tile)
+        matches, c_fin = cea_scan_multi(
+            class_ids, m_all, finals_q, c0, init_mask=init_mask,
+            epsilon=epsilon, start_pos=start_pos, use_pallas=use_pallas,
+            interpret=interpret, b_tile=b_tile)
+        if return_trace:
+            return matches, c_fin, class_ids.astype(jnp.int32)
+        return matches, c_fin
 
     # --- impl == "fused" ----------------------------------------------------
     interpret = (not _on_tpu()) if interpret is None else interpret
@@ -287,10 +298,11 @@ def cer_pipeline(attrs: jnp.ndarray,
                 + b_tile * Sp * Sp             # gathered-M temp
                 + b_tile * W * NQp             # per_q temp
                 + b_tile * A + b_tile * NQp    # attrs block + matches block
-                + 2 * b_tile)                  # start + valid lane columns
+                + (3 if return_trace else 2) * b_tile)  # start/valid[/trace]
     if W % 8 != 0 or vmem > VMEM_BYTES:
         return _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0,
-                             init_mask, epsilon, start_pos, valid_counts)
+                             init_mask, epsilon, start_pos, valid_counts,
+                             return_trace)
 
     Bp = _pad_to(B, b_tile)
     a_pad = jnp.pad(jnp.moveaxis(attrs, 0, 1),
@@ -305,29 +317,33 @@ def cer_pipeline(attrs: jnp.ndarray,
     valid_lanes = _lane_arr(T if valid_counts is None else valid_counts,
                             B, Bp, fill=0)       # padded lanes are dead
 
-    matches, c_fin = fused_scan_pallas(
+    res = fused_scan_pallas(
         a_pad, ind_pad, m_pad, f_pad, i_pad, c_pad, start_lanes, valid_lanes,
         specs=tuple(specs), epsilon=epsilon, b_tile=b_tile,
-        interpret=interpret)
-    return jnp.moveaxis(matches[:B, :, :NQ], 0, 1), c_fin[:B, :, :S]
+        interpret=interpret, emit_trace=return_trace)
+    matches, c_fin = res[0], res[1]
+    out = jnp.moveaxis(matches[:B, :, :NQ], 0, 1), c_fin[:B, :, :S]
+    if return_trace:
+        return out + (res[2][:B].T,)
+    return out
 
 
 def _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0, init_mask,
-                  epsilon, start_pos, valid_counts=None):
+                  epsilon, start_pos, valid_counts=None, return_trace=False):
     """Fused pipeline as one XLA computation (also the ``ref`` oracle).
 
     Same dataflow as the fused kernel: under a single jit the ``bits`` /
     ``class_ids`` intermediates live only inside the compiled computation —
     no extra dispatches, no host round trips between stages.
     """
-    T, B, A = attrs.shape
     idx = jnp.asarray([s[0] for s in specs], dtype=jnp.int32)
     ops_ = jnp.asarray([s[1] for s in specs], dtype=jnp.int32)
     thr = jnp.asarray([s[2] for s in specs], dtype=jnp.float32)
-    bits = ref.bitvector_ref(attrs.reshape(T * B, A), idx, ops_, thr)
-    class_ids = class_of[bits].reshape(T, B)
+    class_ids = ref.class_trace_ref(attrs, idx, ops_, thr, class_of)
     c_fin, matches = ref.cea_scan_multi_ref(c0, m_all, class_ids, finals_q,
                                             init_mask, epsilon,
                                             start_pos=start_pos,
                                             valid_counts=valid_counts)
+    if return_trace:
+        return matches, c_fin, class_ids
     return matches, c_fin

@@ -38,6 +38,22 @@ def bitvector_ref(attrs: jnp.ndarray, attr_idx: jnp.ndarray,
     return jnp.sum(bits.astype(jnp.int32) * weights[None, :], axis=1)
 
 
+def class_trace_ref(attrs: jnp.ndarray, attr_idx: jnp.ndarray,
+                    op_code: jnp.ndarray, threshold: jnp.ndarray,
+                    class_of: jnp.ndarray) -> jnp.ndarray:
+    """(T, B, A) attrs → (T, B) int32 symbol-class trace.
+
+    The per-event symbol class is the *trace operand* of the device tECS
+    arena (vector/tecs_arena.py, DESIGN.md §7): it determines which
+    predecessor edges fire at each step, so the arena builder never has to
+    re-evaluate predicates on raw events.
+    """
+    T, B, A = attrs.shape
+    bits = bitvector_ref(attrs.reshape(T * B, A), attr_idx, op_code,
+                         threshold)
+    return class_of[bits].reshape(T, B).astype(jnp.int32)
+
+
 def cea_step_ref(C: jnp.ndarray, M: jnp.ndarray, seed_slot: jnp.ndarray,
                  expire_slot: jnp.ndarray, finals: jnp.ndarray,
                  init_state: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -1,10 +1,12 @@
-"""Device (TPU-native) CER engine: symbolic tables + semiring scan."""
+"""Device (TPU-native) CER engine: symbolic tables + semiring scan + tECS."""
 from .encoder import EventEncoder
 from .engine import VectorEngine, VectorQueryTables
 from .partitioned import PartitionedStreamingEngine, PartitionStats
 from .streaming import StreamingVectorEngine
 from .symbolic import SymbolicCEA, compile_symbolic
+from .tecs_arena import ArenaOverflow, ArenaSnapshot
 
 __all__ = ["EventEncoder", "VectorEngine", "VectorQueryTables",
            "PartitionedStreamingEngine", "PartitionStats",
-           "StreamingVectorEngine", "SymbolicCEA", "compile_symbolic"]
+           "StreamingVectorEngine", "SymbolicCEA", "compile_symbolic",
+           "ArenaOverflow", "ArenaSnapshot"]

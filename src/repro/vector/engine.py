@@ -1,10 +1,12 @@
-"""Device (TPU-native) CER engine — recognition + counting on accelerator.
+"""Device (TPU-native) CER engine — recognition, counting, and tECS arena.
 
-The vector engine runs the *recognition* projection of Algorithm 1 on device
-(DESIGN.md §3, deviation D1): per stream position it computes the exact number
-of complex events closing there (``|⟦A⟧ε_j(S)|``) plus a hit bitmap, using the
-windowed counting-semiring scan.  Enumeration of the actual complex events
-stays on the host tECS engine, invoked only at hit positions.
+The vector engine runs Algorithm 1 on device (DESIGN.md §3): per stream
+position it computes the exact number of complex events closing there
+(``|⟦A⟧ε_j(S)|``) plus a hit bitmap, using the windowed counting-semiring
+scan.  :meth:`VectorEngine.run_enumerate` additionally maintains the tECS
+*arena* (DESIGN.md §7) in the same compiled computation and enumerates the
+actual complex events from the fetched node store with output-linear delay
+— no host event replay (deviation D1, narrowed).
 
 Execution is routed through :func:`repro.kernels.ops.cer_pipeline`
 (``impl`` ∈ fused / unfused / ref): the default fused path evaluates
@@ -21,14 +23,15 @@ lanes on device and keeps per-lane substream positions.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.events import Event
+from ..core.events import ComplexEvent, Event
 from ..core.query import CompiledQuery, compile_query
 from ..kernels import ops
+from . import tecs_arena
 from .encoder import EventEncoder
 from .symbolic import SymbolicCEA, compile_symbolic
 
@@ -131,6 +134,38 @@ class VectorEngine:
         return np.asarray(matches).astype(np.int64), state
 
     # ------------------------------------------------------------------
+    # device tECS arena: enumeration without host event replay (DESIGN §7)
+    # ------------------------------------------------------------------
+    def arena_tables(self) -> tecs_arena.ArenaTables:
+        """Static predecessor tables driving the device tECS arena."""
+        tbl = getattr(self, "_arena_tables", None)
+        if tbl is None:
+            tbl = tecs_arena.tables_from_symbolic(self.symbolic)
+            self._arena_tables = tbl
+        return tbl
+
+    def run_enumerate(self, streams: Sequence[Sequence[Event]],
+                      start_pos: int = 0, arena_capacity: int = 1 << 15,
+                      strategy: str = "ALL"
+                      ) -> Tuple[np.ndarray,
+                                 Dict[Tuple[int, int], List[ComplexEvent]]]:
+        """Device-arena evaluation *with enumeration* (narrows deviation D1).
+
+        The whole pipeline — predicates, counting scan, and tECS arena
+        maintenance — runs in one jitted device computation
+        (:func:`repro.vector.tecs_arena.run_enumerate`); the host only
+        fetches the arena arrays and walks Algorithm 2 over them
+        (output-linear delay, no event replay).
+
+        Returns ``(counts (T, B) int64, matches)`` with ``matches`` mapping
+        each hit ``(t, b)`` to its complex events (post ``strategy``).
+        """
+        counts, res = tecs_arena.run_enumerate(
+            self, streams, start_pos=start_pos,
+            arena_capacity=arena_capacity, strategy=strategy)
+        return counts[:, :, 0], {(t, b): v for (t, b, _q), v in res.items()}
+
+    # ------------------------------------------------------------------
     def partitioned_streaming(self, key_attrs: Sequence[str],
                               chunk_len: int, num_lanes: int, **kw):
         """Device-native PARTITION BY runtime over this query's tables.
@@ -145,6 +180,7 @@ class VectorEngine:
 
     # ------------------------------------------------------------------
     def hit_positions(self, matches: np.ndarray) -> List[Tuple[int, int]]:
-        """(t, b) positions with ≥1 match — where host enumeration is needed."""
+        """(t, b) positions with ≥1 match — where enumeration applies
+        (:meth:`run_enumerate` / the streaming arena do this on device)."""
         t_idx, b_idx = np.nonzero(matches)
         return list(zip(t_idx.tolist(), b_idx.tolist()))

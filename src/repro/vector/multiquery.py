@@ -22,7 +22,6 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from ..core.cea import compile_cel
@@ -42,6 +41,7 @@ class PackedTables:
     init_mask: jnp.ndarray      # (Ŝ,) 1.0 at each query's initial state
     offsets: List[int]          # block start per query
     sizes: List[int]
+    reps: np.ndarray            # (C,) representative bit-vector per class
 
 
 class MultiQueryEngine:
@@ -97,7 +97,8 @@ class MultiQueryEngine:
             class_of=jnp.asarray(class_of.astype(np.int32)),
             class_ind=ops.class_indicator(class_of.astype(np.int32),
                                           n_classes),
-            init_mask=jnp.asarray(init_mask), offsets=offsets, sizes=sizes)
+            init_mask=jnp.asarray(init_mask), offsets=offsets, sizes=sizes,
+            reps=reps)
 
     # ------------------------------------------------------------------
     @property
@@ -149,3 +150,30 @@ class MultiQueryEngine:
             state = self.init_state(attrs.shape[1])
         matches, state = self.pipeline(attrs, state, start_pos=start_pos)
         return np.asarray(matches).astype(np.int64), state
+
+    # ------------------------------------------------------------------
+    # device tECS arena over the packed automaton (DESIGN.md §7)
+    # ------------------------------------------------------------------
+    def arena_tables(self):
+        """Predecessor tables of the block-diagonal packed det CEA."""
+        tbl = getattr(self, "_arena_tables", None)
+        if tbl is None:
+            from . import tecs_arena
+            tbl = tecs_arena.tables_from_packed(
+                self.symbolics, self.tables.offsets,
+                np.asarray(self.tables.class_of), self.tables.reps)
+            self._arena_tables = tbl
+        return tbl
+
+    def run_enumerate(self, streams, start_pos: int = 0,
+                      arena_capacity: int = 1 << 15, strategy: str = "ALL"):
+        """Packed-query enumeration from the device arena (no event replay).
+
+        Returns ``(counts (T, B, Q) int64, matches)`` with ``matches``
+        mapping each hit ``(t, b, q)`` to its complex events — the shared
+        driver :func:`repro.vector.tecs_arena.run_enumerate` verbatim.
+        """
+        from . import tecs_arena
+        return tecs_arena.run_enumerate(
+            self, streams, start_pos=start_pos,
+            arena_capacity=arena_capacity, strategy=strategy)

@@ -28,8 +28,10 @@ Per chunk (all inside one jitted step, state donated):
    slots are exact no-ops).
 4. **Relabelling** — per-slot match counts gather back to the chunk's event
    order; position `base + t` of the global stream gets the count of
-   complex events closing at event `t`.  Hit positions are global, ready
-   for the host tECS enumerator (deviation D1).
+   complex events closing at event `t`.  Hit positions are global; with
+   ``arena_capacity`` set each lane also maintains its tECS arena in the
+   same step (nodes labelled with global positions, DESIGN.md §7) and
+   :meth:`enumerate` yields the complex events without event replay.
 
 Key hashing runs in the encoder (`EventEncoder.encode_stream_with_keys`)
 with the process-stable 32-bit hash shared with `core/partition.py`; the
@@ -45,9 +47,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.events import Event
+from ..core.events import ComplexEvent, Event
 from ..core.partition import EMPTY_LANE, NULL_KEY_HASH, partition_key
+from ..core.selection import apply_strategy
 from ..kernels import ops
+from . import tecs_arena
 from .streaming import StreamingVectorEngine, _quiet_donation
 
 _I32_MAX = np.iinfo(np.int32).max
@@ -78,7 +82,8 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
 
     def __init__(self, engine, key_attrs: Sequence[str], chunk_len: int,
                  num_lanes: int, lane_cap: Optional[int] = None,
-                 impl: Optional[str] = None, evict: str = "lru"):
+                 impl: Optional[str] = None, evict: str = "lru",
+                 arena_capacity: Optional[int] = None):
         """``engine``: a constructed VectorEngine or MultiQueryEngine.
 
         key_attrs: PARTITION BY attributes (need not appear in predicates).
@@ -89,32 +94,48 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         evict:     "lru" (new keys may evict the least-recently-used lane
                    that is empty this chunk) or "none" (new keys spill when
                    no lane is free).
+        arena_capacity: when set, each lane maintains its tECS arena in the
+                   same compiled step (nodes labelled with *global* stream
+                   positions); hits become enumerable via :meth:`enumerate`
+                   without host event replay (DESIGN.md §7).
         """
-        super().__init__(engine, chunk_len, batch=num_lanes, impl=impl)
+        # num_lanes before super().__init__: the parent builds the initial
+        # state via our _init_full_state override (lane tables + arena in
+        # one shot — no throwaway parent-shaped allocation)
+        self.num_lanes = int(num_lanes)
+        super().__init__(engine, chunk_len, batch=num_lanes, impl=impl,
+                         arena_capacity=arena_capacity)
         if evict not in ("lru", "none"):
             raise ValueError(f"evict must be 'lru' or 'none', got {evict!r}")
         self.key_attrs = tuple(key_attrs)
-        self.num_lanes = int(num_lanes)
         self.lane_cap = int(lane_cap) if lane_cap is not None else chunk_len
         self.evict = evict
         self.stats = PartitionStats()
         self._hash_to_key: Dict[int, tuple] = {}
         self._chunk_idx = 0
-        self._state = self._init_lane_state()
         self._step = jax.jit(self._part_step_impl, donate_argnums=(2,))
 
     # ------------------------------------------------------------------
+    def _init_full_state(self, batch: int):
+        return self._init_lane_state()
+
     def _init_lane_state(self):
-        return {
+        st = {
             "C": self.engine.init_state(self.num_lanes),
             "lane_keys": jnp.full((self.num_lanes,), EMPTY_LANE, jnp.uint32),
             "lane_pos": jnp.zeros((self.num_lanes,), jnp.int32),
             "lane_last": jnp.full((self.num_lanes,), -1, jnp.int32),
         }
+        if self.arena_capacity is not None:
+            st["arena"] = tecs_arena.init_arena(
+                self.num_lanes, self.arena_capacity, self._ring,
+                self._arena_tables.num_states)
+        return st
 
     # ------------------------------------------------------------------
     def _part_step_impl(self, attrs: jnp.ndarray, keys: jnp.ndarray,
-                        state, chunk_idx: jnp.ndarray):
+                        state, chunk_idx: jnp.ndarray,
+                        positions: jnp.ndarray):
         self._trace_count += 1  # runs only while tracing (i.e. compiling)
         T, A = attrs.shape
         L, cap = self.num_lanes, self.lane_cap
@@ -182,12 +203,14 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         n = (onehot[:, :L] * keep[:, None].astype(jnp.int32)).sum(0)
 
         # --- 3. fused scan at per-lane substream positions ----------------
-        matches, C = ops.cer_pipeline(
+        with_arena = self.arena_capacity is not None
+        pipe = ops.cer_pipeline(
             attrs_lanes, self._specs, self._class_of, self._class_ind,
             self._m_all, self._finals_q, C, init_mask=self._init_mask,
             epsilon=self.epsilon, start_pos=lane_pos, valid_counts=n,
             impl=self.impl, use_pallas=self._use_pallas,
-            b_tile=self._b_tile)                               # (cap, L, Q)
+            b_tile=self._b_tile, return_trace=with_arena)      # (cap, L, Q)
+        matches, C = pipe[0], pipe[1]
 
         # --- 4. relabel: routed-slot counts → chunk event order -----------
         NQ = matches.shape[-1]
@@ -203,7 +226,28 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
                      "lane_pos": (lane_pos + n) % self.engine.ring,
                      "lane_last": lane_last}
         info = {"routed": routed, "nulls": nulls, "spilled": spilled,
-                "evicted": evicted, "lane_fill": n}
+                "evicted": evicted, "lane_fill": n,
+                "lanes": jnp.where(keep, lanes, jnp.int32(L))}
+
+        # --- 5. tECS arena: per-lane node stores, global position labels --
+        if with_arena:
+            trace = pipe[2]                                    # (cap, L)
+            arena = dict(state["arena"])
+            # an evicted lane's partition restarts: its cells are garbage
+            arena["cell"] = jnp.where(evicted[:, None, None],
+                                      tecs_arena.NULL, arena["cell"])
+            posbuf = jnp.full((L * cap + 1,), -1, jnp.int32).at[slot].set(
+                jnp.asarray(positions, jnp.int32))
+            gpos_lanes = jnp.moveaxis(
+                posbuf[:L * cap].reshape(L, cap), 0, 1)        # (cap, L)
+            arena, roots = tecs_arena.arena_scan(
+                self._arena_tables, arena, trace, gpos_lanes,
+                lane_pos, n, matches > 0.5, epsilon=self.epsilon)
+            rr = jnp.concatenate(
+                [jnp.moveaxis(roots, 0, 1).reshape(L * cap, NQ),
+                 jnp.full((1, NQ), tecs_arena.NULL, jnp.int32)])
+            new_state["arena"] = arena
+            info["roots"] = rr[slot]                           # (T, Q)
         return counts_chunk, new_state, info
 
     # ------------------------------------------------------------------
@@ -252,10 +296,22 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
                              f"A) and keys ({self.chunk_len},); got "
                              f"{attrs.shape} / {keys.shape}")
         base = self._pos
+        if positions is None:
+            pos_arr = base + np.arange(T, dtype=np.int64)
+        else:
+            pos_arr = np.asarray(positions, dtype=np.int64)
+        if self.arena_capacity is not None and \
+                int(pos_arr.max(initial=0)) > _I32_MAX:
+            raise ValueError(
+                f"arena node labels are int32 stream positions; position "
+                f"{int(pos_arr.max())} exceeds {_I32_MAX}.  reset() the "
+                "engine (see DESIGN.md §7)")
+        pos_arr = pos_arr.astype(np.int32)
         with _quiet_donation():
             counts_f, self._state, info = self._step(
                 attrs, keys, self._state,
-                jnp.asarray(self._chunk_idx, jnp.int32))
+                jnp.asarray(self._chunk_idx, jnp.int32),
+                jnp.asarray(pos_arr))
         self._pos += T
         self._chunk_idx += 1
 
@@ -272,11 +328,55 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         any_q = counts.sum(axis=-1)
         if self._single_query:
             counts = counts[:, 0]
+        if self.arena_capacity is not None:
+            roots_np = np.asarray(info["roots"])
+            lanes_np = np.asarray(info["lanes"])
+            for t in np.nonzero(any_q)[0]:
+                self._roots[int(pos_arr[t])] = (int(lanes_np[t]),
+                                                roots_np[t])
         if positions is None:
             hits = [base + int(t) for t in np.nonzero(any_q)[0]]
         else:
             hits = sorted(int(positions[t]) for t in np.nonzero(any_q)[0])
         return counts, hits
+
+    # ------------------------------------------------------------------
+    # tECS-arena enumeration at global positions (DESIGN.md §7)
+    # ------------------------------------------------------------------
+    def enumerate(self, position: int, *, query: int = 0,
+                  strategy: str = "ALL", snapshot=None
+                  ) -> List[ComplexEvent]:
+        """Complex events closing at global ``position`` — start/end/data
+        are global stream positions, matching the host
+        ``PartitionedEngine``'s relabelled output.  No event replay: the
+        arena nodes were labelled with global positions as they were built.
+
+        Unlike the parent (B pre-partitioned streams, ``(position,
+        stream)``), the partitioned engine has ONE interleaved stream, so
+        there is no ``stream`` argument; everything past ``position`` is
+        keyword-only to keep parent-style positional calls from silently
+        landing in ``query``.
+        """
+        if not isinstance(position, (int, np.integer)):
+            raise TypeError(
+                f"position must be a global stream position (int), got "
+                f"{position!r} — the partitioned engine has no stream axis")
+        rec = self._roots.get(int(position))
+        if rec is None:
+            return []
+        lane, roots_row = rec
+        snap = snapshot if snapshot is not None else self.arena_snapshot()
+        ces = list(snap.enumerate(lane, int(roots_row[query]),
+                                  int(position)))
+        return apply_strategy(strategy, ces)
+
+    def enumerate_hits(self, hits: Sequence[int], *, query: int = 0,
+                       strategy: str = "ALL"):
+        """Enumerate a batch of global hit positions with one arena fetch."""
+        snap = self.arena_snapshot()
+        return {p: self.enumerate(p, query=query, strategy=strategy,
+                                  snapshot=snap)
+                for p in hits}
 
     # ------------------------------------------------------------------
     def feed_attrs(self, attrs):
@@ -329,9 +429,19 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         ll = ll.copy()
         lk[ev] = np.uint32(EMPTY_LANE)
         ll[ev] = -1
-        self._state = {"C": jnp.asarray(C), "lane_keys": jnp.asarray(lk),
-                       "lane_pos": jnp.asarray(lp),
-                       "lane_last": jnp.asarray(ll)}
+        new_state = {"C": jnp.asarray(C), "lane_keys": jnp.asarray(lk),
+                     "lane_pos": jnp.asarray(lp),
+                     "lane_last": jnp.asarray(ll)}
+        if self.arena_capacity is not None:
+            # evicted partitions restart from scratch: their cell rows are
+            # garbage.  Already-built nodes (and recorded roots) stay valid —
+            # the bump allocator never recycles ids (DESIGN.md §7).
+            arena = dict(self._state["arena"])
+            cell = np.asarray(arena["cell"]).copy()
+            cell[ev] = tecs_arena.NULL
+            arena["cell"] = jnp.asarray(cell)
+            new_state["arena"] = arena
+        self._state = new_state
         self.stats.evicted_lanes += n
         return n
 
@@ -341,4 +451,5 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         self._pos = 0
         self._chunk_idx = 0
         self._hash_to_key.clear()
+        self._roots.clear()
         self.stats = PartitionStats()

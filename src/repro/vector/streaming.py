@@ -15,9 +15,11 @@ claim:
   performs zero fresh allocations for state on backends with donation
   (donation is a no-op on CPU, where XLA ignores it with a warning we
   silence).
-* **Host hand-off** — :meth:`feed` returns per-position match counts plus
-  the absolute ``(pos, stream)`` hit list the host tECS enumerator consumes
-  (deviation D1: recognition on device, enumeration on host).
+* **Device tECS arena** — with ``arena_capacity`` set, the same compiled
+  step maintains the paper's enumeration structure on device (DESIGN.md
+  §7): :meth:`feed` returns counts + the absolute ``(pos, stream)`` hit
+  list, and :meth:`enumerate` walks Algorithm 2 over the fetched arena —
+  output-linear delay, no event replay (deviation D1, narrowed).
 
 Works for both the single-query :class:`~repro.vector.engine.VectorEngine`
 and the packed :class:`~repro.vector.multiquery.MultiQueryEngine` (pass one
@@ -32,14 +34,18 @@ from __future__ import annotations
 
 import contextlib
 import warnings
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.events import Event
+from ..core.events import ComplexEvent, Event
+from ..core.selection import apply_strategy
 from ..kernels import ops
+from . import tecs_arena
+
+_I32_MAX = np.iinfo(np.int32).max
 
 
 @contextlib.contextmanager
@@ -59,11 +65,17 @@ class StreamingVectorEngine:
     """Fixed-chunk streaming wrapper around the fused device pipeline."""
 
     def __init__(self, engine, chunk_len: int, batch: int,
-                 impl: Optional[str] = None):
+                 impl: Optional[str] = None,
+                 arena_capacity: Optional[int] = None):
         """``engine``: a constructed VectorEngine or MultiQueryEngine.
 
         chunk_len: events per feed() call — fixed for shape-stable compiles.
         batch:     number of parallel substreams (partition-by lanes).
+        arena_capacity: when set, the step also maintains the device tECS
+                   arena (``arena_capacity`` node slots per lane,
+                   DESIGN.md §7) inside the same compiled executable, and
+                   hits become *enumerable* via :meth:`enumerate` without
+                   any host event replay.
         """
         if isinstance(engine, str):
             raise TypeError("pass a constructed VectorEngine/MultiQueryEngine"
@@ -88,15 +100,33 @@ class StreamingVectorEngine:
         self._use_pallas = engine.use_pallas
         self._b_tile = engine.b_tile
 
-        self._state = engine.init_state(batch)
         # ring slots depend on the position only mod W, so the kernel gets
         # self._pos % ring — the absolute (unbounded) position stays a host
-        # int and the int32 operand can never overflow on long streams
+        # int and the int32 operand can never overflow on long streams.
+        # The ARENA path is the exception: node labels are absolute int32
+        # positions, so with arena_capacity set feed() refuses past 2^31-1
+        # events between resets (the arena's ovf latch fires several orders
+        # of magnitude earlier anyway — see DESIGN.md §7).
         self._ring = engine.ring
         self._pos = 0
         self._trace_count = 0  # incremented per trace == per compile
+        self.arena_capacity = arena_capacity
+        self._arena_tables = (engine.arena_tables()
+                              if arena_capacity is not None else None)
+        self._roots: Dict[Tuple[int, int], np.ndarray] = {}
+        self._state = self._init_full_state(batch)
         # state ring donated: steady-state streaming allocates nothing new
-        self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+        self._step = jax.jit(
+            self._arena_step_impl if arena_capacity is not None
+            else self._step_impl, donate_argnums=(1,))
+
+    def _init_full_state(self, batch: int):
+        C = self.engine.init_state(batch)
+        if self.arena_capacity is None:
+            return C
+        return {"C": C, "arena": tecs_arena.init_arena(
+            batch, self.arena_capacity, self._ring,
+            self._arena_tables.num_states)}
 
     # ------------------------------------------------------------------
     def _step_impl(self, attrs: jnp.ndarray, state: jnp.ndarray,
@@ -108,6 +138,24 @@ class StreamingVectorEngine:
             epsilon=self.epsilon, start_pos=start_pos, impl=self.impl,
             use_pallas=self._use_pallas, b_tile=self._b_tile)
 
+    def _arena_step_impl(self, attrs: jnp.ndarray, state: dict,
+                         start_pos: jnp.ndarray, gbase: jnp.ndarray):
+        """Counting scan + tECS-arena maintenance, one compiled step.
+
+        ``gbase`` is the chunk's absolute stream offset (int32): arena node
+        labels are global positions, unlike the mod-ring ``start_pos``.
+        """
+        self._trace_count += 1  # runs only while tracing (i.e. compiling)
+        counts, C, arena, roots = tecs_arena.scan_chunk(
+            self._arena_tables, state["arena"], attrs, state["C"],
+            specs=self._specs, class_of=self._class_of,
+            class_ind=self._class_ind, m_all=self._m_all,
+            finals_q=self._finals_q, init_mask=self._init_mask,
+            epsilon=self.epsilon, start=start_pos, gbase=gbase,
+            impl=self.impl, use_pallas=self._use_pallas,
+            b_tile=self._b_tile)
+        return counts, {"C": C, "arena": arena}, roots
+
     # ------------------------------------------------------------------
     @property
     def position(self) -> int:
@@ -116,7 +164,8 @@ class StreamingVectorEngine:
 
     @property
     def state(self) -> jnp.ndarray:
-        """Current (B, W, S) run-count ring (device-resident).
+        """Current (B, W, S) run-count ring (device-resident); with
+        ``arena_capacity`` set, a ``{"C", "arena"}`` pytree instead.
 
         The buffer is *donated* to the next :meth:`feed` — on backends with
         donation (TPU/GPU) a held reference is invalidated by that call.
@@ -159,10 +208,23 @@ class StreamingVectorEngine:
                 "chunk on the host or build a second engine for remainders — "
                 "odd shapes would trigger a recompile per shape.")
         t0 = self._pos
+        if self.arena_capacity is not None and self._pos + T > _I32_MAX:
+            raise ValueError(
+                f"arena node labels are int32 stream positions; position "
+                f"{self._pos + T} exceeds {_I32_MAX}.  reset() the engine "
+                "(the arena would long since have overflowed its capacity "
+                "anyway — see DESIGN.md §7)")
         with _quiet_donation():
-            counts_f, self._state = self._step(
-                attrs, self._state,
-                jnp.asarray(self._pos % self._ring, jnp.int32))
+            if self.arena_capacity is not None:
+                counts_f, self._state, roots = self._step(
+                    attrs, self._state,
+                    jnp.asarray(self._pos % self._ring, jnp.int32),
+                    jnp.asarray(self._pos, jnp.int32))
+            else:
+                counts_f, self._state = self._step(
+                    attrs, self._state,
+                    jnp.asarray(self._pos % self._ring, jnp.int32))
+                roots = None
         self._pos += T
         if self._single_query:
             counts_f = counts_f[:, :, 0]
@@ -170,10 +232,73 @@ class StreamingVectorEngine:
         hit_dims = np.nonzero(counts.sum(axis=-1) if counts.ndim == 3
                               else counts)
         hits = [(t0 + int(t), int(b)) for t, b in zip(*hit_dims)]
+        if roots is not None:
+            roots_np = np.asarray(roots)
+            for p, b in hits:
+                self._roots[(p, b)] = roots_np[p - t0, b]
         return counts, hits
+
+    # ------------------------------------------------------------------
+    # tECS-arena enumeration (requires arena_capacity; DESIGN.md §7)
+    # ------------------------------------------------------------------
+    def arena_snapshot(self) -> "tecs_arena.ArenaSnapshot":
+        """Host-fetch the current arena; node ids are stable across feeds,
+        so one snapshot enumerates every hit recorded so far."""
+        if self.arena_capacity is None:
+            raise ValueError("engine built without arena_capacity — "
+                             "no tECS arena to snapshot")
+        return tecs_arena.ArenaSnapshot(self._state["arena"])
+
+    def enumerate(self, position: int, stream: int = 0, query: int = 0,
+                  strategy: str = "ALL",
+                  snapshot: Optional["tecs_arena.ArenaSnapshot"] = None
+                  ) -> List[ComplexEvent]:
+        """Complex events closing at absolute ``position`` on ``stream``.
+
+        Walks Algorithm 2 over the fetched arena (output-linear delay) — no
+        host event replay.  Pass a shared ``snapshot`` when enumerating many
+        hits to fetch the arena once.
+        """
+        rec = self._roots.get((int(position), int(stream)))
+        if rec is None:
+            return []
+        snap = snapshot if snapshot is not None else self.arena_snapshot()
+        ces = list(snap.enumerate(int(stream), int(rec[query]),
+                                  int(position)))
+        return apply_strategy(strategy, ces)
+
+    def enumerate_hits(self, hits: Sequence[Tuple[int, int]],
+                       query: int = 0, strategy: str = "ALL"
+                       ) -> Dict[Tuple[int, int], List[ComplexEvent]]:
+        """Enumerate a batch of ``(position, stream)`` hits with one fetch."""
+        snap = self.arena_snapshot()
+        return {(p, b): self.enumerate(p, b, query, strategy, snapshot=snap)
+                for p, b in hits}
+
+    def clear_roots(self, before: Optional[int] = None) -> int:
+        """Forget recorded enumeration roots (host-side bookkeeping).
+
+        The roots dict otherwise grows by one entry per hit for the life of
+        the stream; prune it once hits have been enumerated (or will never
+        be).  ``before`` drops only roots at positions ``< before``; None
+        drops all.  Device state is untouched — reclaiming arena *nodes*
+        is ``reset()``'s job.  Returns the number of entries dropped.
+        """
+        if before is None:
+            n = len(self._roots)
+            self._roots.clear()
+            return n
+        # keys are (position, stream) here, bare positions in the
+        # partitioned subclass — normalize to the position
+        drop = [k for k in self._roots
+                if (k[0] if isinstance(k, tuple) else k) < before]
+        for k in drop:
+            del self._roots[k]
+        return len(drop)
 
     # ------------------------------------------------------------------
     def reset(self) -> None:
         """Drop all live runs and rewind the stream position."""
-        self._state = self.engine.init_state(self.batch)
+        self._state = self._init_full_state(self.batch)
         self._pos = 0
+        self._roots.clear()

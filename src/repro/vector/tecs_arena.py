@@ -1,0 +1,579 @@
+"""Array-backed tECS arena on device (paper §5.1–5.2, DESIGN.md §7).
+
+The host tECS (:mod:`repro.core.tecs`) is a pointer DAG built one node at a
+time; the device scan previously stopped at match *counts* and re-ran the
+host engine at every hit position (the old deviation D1).  This module closes
+that gap: the tECS is maintained **on device** as a structure-of-arrays node
+store — ``kind/pos/max_start/left/right`` int32 arrays with a per-lane bump
+allocator — updated inside the same jitted step as the counting scan, using
+the paper's ``new_bottom``/``extend``/``union``/``merge`` discipline
+(time-ordered unions, 3-bounded output-depth via the Fig. 5 gadgets) as
+vectorized updates over the ``(B, W, S)`` state ring.
+
+Keying (the vectorization insight)
+----------------------------------
+Algorithm 1 keys its hash table ``T`` by det state and aggregates nodes of
+different starts in *union-lists*.  The device ring already splits runs by
+start slot, so the arena keys cells by ``(start-slot w, det state s)``: every
+run in a cell shares one start position, hence one ``max_start`` — which is
+exactly the precondition of the paper's ``union`` gadgets.  Per event the
+cell update is
+
+    cell'[w, s'] = ⋃ over predecessors p of
+                     extend(cell[w, p], j)   for marking   edges p →• s'
+                     cell[w, p]              for unmarking edges p →◦ s'
+
+with the seed slot cleared and re-seeded with ``new_bottom(j)`` and the
+expired slot dropped — the exact node-level mirror of the counting step, so
+counts and enumerated sets agree by construction (runs ↔ complex events,
+Thm 3).  At hit positions a *root* is built per query: same-slot cells fold
+with the union gadgets (equal max-start), then slots chain right-wards in
+decreasing start order (Fig. 5(e) merge) — ready for Algorithm 2.
+
+Enumeration stays output-linear: every node reachable from a root is inside
+the window (the ring evicts expired starts before they can be referenced),
+so the DFS prune never cuts a productive branch, and the gadget discipline
+keeps output-depth ≤ 3 (checked by ``check_invariants`` and the paper-claims
+tests).
+
+Allocation
+----------
+Each lane owns ``capacity`` node slots plus one *sink* slot at index
+``capacity``.  Per update the number of nodes needed per cell is computed
+(extend: 1; union: 1, or 3 for the union×union gadget), lanes assign ids by
+exclusive cumulative sum from their bump pointer, and writes land with one
+scatter per field.  When a lane's pointer would pass ``capacity`` the lane's
+``ovf`` flag latches and all further writes divert to the sink slot:
+recognition (counts/hits) is unaffected, but enumeration for that lane
+raises until the arena is reset/compacted (overflow policy, DESIGN.md §7).
+
+Node ids are bump-ordered, so children always have smaller ids than their
+parents — fetched arenas are topologically sorted by construction, which the
+invariant checker exploits.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.events import ComplexEvent
+from ..core.tecs import BOTTOM, OUTPUT, UNION, enumerate_arena
+
+NULL = -1  # empty cell / absent child
+
+
+# ---------------------------------------------------------------------------
+# static tables: predecessor lists of the det CEA, by (class, target state)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ArenaTables:
+    """Per-query static tables driving the arena update.
+
+    ``pred_*[c, s', k]`` lists the ≤ K predecessor edges into det state
+    ``s'`` under symbol class ``c``: source state, marking flag (• = extend,
+    ◦ = pass-through), and a validity mask for the padded tail.
+    """
+
+    pred_idx: jnp.ndarray    # (C, S, K) int32 source det state
+    pred_mark: jnp.ndarray   # (C, S, K) bool  — True: •-edge (extend)
+    pred_valid: jnp.ndarray  # (C, S, K) bool
+    finals_sq: jnp.ndarray   # (S, Q) bool — final-state masks, per query
+    init_states: Tuple[int, ...]  # seed targets (one per packed query block)
+    num_states: int
+    num_queries: int
+    max_indegree: int
+
+
+def build_tables(delta_mark: np.ndarray, delta_unmark: np.ndarray,
+                 finals_q: np.ndarray, init_states: Sequence[int]
+                 ) -> ArenaTables:
+    """Invert forward ``delta`` tables into per-target predecessor lists.
+
+    delta_mark/delta_unmark: (S, C) int32 forward maps, 0 = dead (dropped).
+    finals_q: (Q, S) bool/float final-state masks.
+    """
+    dm = np.asarray(delta_mark)
+    du = np.asarray(delta_unmark)
+    S, C = dm.shape
+    preds: List[List[List[Tuple[int, bool]]]] = \
+        [[[] for _ in range(S)] for _ in range(C)]
+    for p in range(1, S):          # dead state 0 is never a source
+        for c in range(C):
+            t = int(dm[p, c])
+            if t != 0:
+                preds[c][t].append((p, True))   # marks first: extends are
+            t = int(du[p, c])                   # non-union, cheapest gadget
+            if t != 0:
+                preds[c][t].append((p, False))
+    K = max(1, max(len(preds[c][s]) for c in range(C) for s in range(S)))
+    pred_idx = np.zeros((C, S, K), np.int32)
+    pred_mark = np.zeros((C, S, K), bool)
+    pred_valid = np.zeros((C, S, K), bool)
+    for c in range(C):
+        for s in range(S):
+            for k, (p, m) in enumerate(preds[c][s]):
+                pred_idx[c, s, k] = p
+                pred_mark[c, s, k] = m
+                pred_valid[c, s, k] = True
+    fq = np.asarray(finals_q).astype(bool)
+    return ArenaTables(
+        pred_idx=jnp.asarray(pred_idx),
+        pred_mark=jnp.asarray(pred_mark),
+        pred_valid=jnp.asarray(pred_valid),
+        finals_sq=jnp.asarray(fq.T),
+        init_states=tuple(int(s) for s in init_states),
+        num_states=S, num_queries=fq.shape[0], max_indegree=K)
+
+
+def tables_from_symbolic(symbolic) -> ArenaTables:
+    """Arena tables for a single :class:`~repro.vector.symbolic.SymbolicCEA`."""
+    return build_tables(symbolic.delta_mark, symbolic.delta_unmark,
+                        symbolic.finals[None, :], (symbolic.initial,))
+
+
+def tables_from_packed(symbolics, offsets, class_of, reps) -> ArenaTables:
+    """Arena tables for the packed multi-query engine (block-diagonal CEA).
+
+    ``reps[c]`` is a representative bit-vector of joint class ``c``; each
+    query block maps it through its own class partition.  Block-local dead
+    states (0) stay "none"; live targets/sources shift by the block offset.
+    """
+    n_classes = int(np.asarray(class_of).max()) + 1
+    S_hat = sum(s.num_states for s in symbolics)
+    dm = np.zeros((S_hat, n_classes), np.int32)
+    du = np.zeros((S_hat, n_classes), np.int32)
+    finals = np.zeros((len(symbolics), S_hat), bool)
+    inits = []
+    for qi, sym in enumerate(symbolics):
+        off = offsets[qi]
+        for c in range(n_classes):
+            cq = int(sym.class_of[reps[c]])
+            for s in range(1, sym.num_states):
+                t = int(sym.delta_mark[s, cq])
+                if t != 0:
+                    dm[off + s, c] = off + t
+                t = int(sym.delta_unmark[s, cq])
+                if t != 0:
+                    du[off + s, c] = off + t
+        finals[qi, off:off + sym.num_states] = sym.finals
+        inits.append(off + sym.initial)
+    return build_tables(dm, du, finals, inits)
+
+
+# ---------------------------------------------------------------------------
+# device arena state
+# ---------------------------------------------------------------------------
+
+
+def init_arena(batch: int, capacity: int, ring: int, num_states: int) -> dict:
+    """Fresh arena pytree: per-lane node store + cell table + bump pointer.
+
+    Index ``capacity`` of every field array is the overflow sink slot.
+    """
+    shape = (batch, capacity + 1)
+    return {
+        "kind": jnp.full(shape, NULL, jnp.int32),
+        "pos": jnp.full(shape, NULL, jnp.int32),
+        "maxs": jnp.full(shape, NULL, jnp.int32),
+        "left": jnp.full(shape, NULL, jnp.int32),
+        "right": jnp.full(shape, NULL, jnp.int32),
+        "cell": jnp.full((batch, ring, num_states), NULL, jnp.int32),
+        "ptr": jnp.zeros((batch,), jnp.int32),
+        "ovf": jnp.zeros((batch,), bool),
+    }
+
+
+def _alloc(ar: dict, need: jnp.ndarray) -> Tuple[dict, jnp.ndarray]:
+    """Bump-allocate ``need[b, m]`` nodes per slot; returns base id per slot.
+
+    A slot needing ``n`` nodes owns ids ``base .. base+n-1``.  Lanes that
+    would pass capacity latch ``ovf``; their ids clamp into the sink at
+    write time.
+    """
+    cap = ar["kind"].shape[1] - 1
+    csum = jnp.cumsum(need, axis=1)
+    base = ar["ptr"][:, None] + csum - need
+    new_ptr = ar["ptr"] + csum[:, -1]
+    out = dict(ar)
+    out["ovf"] = ar["ovf"] | (new_ptr > cap)
+    out["ptr"] = jnp.minimum(new_ptr, cap)
+    return out, base
+
+
+def _write(ar: dict, ids: jnp.ndarray, mask: jnp.ndarray, *,
+           kind, pos, maxs, left, right) -> dict:
+    """Masked SoA scatter of one node per (lane, slot); invalid → sink."""
+    cap = ar["kind"].shape[1] - 1
+    b = jnp.arange(ids.shape[0])[:, None]
+    wid = jnp.where(mask & (ids < cap), ids, cap)
+    out = dict(ar)
+    for name, val in (("kind", kind), ("pos", pos), ("maxs", maxs),
+                      ("left", left), ("right", right)):
+        v = jnp.broadcast_to(jnp.asarray(val, jnp.int32), ids.shape)
+        out[name] = ar[name].at[b, wid].set(v)
+    return out
+
+
+def _gather(field: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """field[b, ids[b, m]] with NULL-safe clamping (callers mask)."""
+    b = jnp.arange(ids.shape[0])[:, None]
+    return field[b, jnp.clip(ids, 0, field.shape[1] - 1)]
+
+
+def _ref(ids: jnp.ndarray, cap: int) -> jnp.ndarray:
+    """Node *reference* for freshly allocated ids (overflow → sink id)."""
+    return jnp.minimum(ids, cap)
+
+
+def _union_fold(ar: dict, acc: jnp.ndarray, contrib: jnp.ndarray,
+                valid: jnp.ndarray) -> Tuple[dict, jnp.ndarray]:
+    """One fold iteration of the paper's ``union`` (Fig. 5 gadgets (a)–(d)).
+
+    acc/contrib/valid: (B, M) node ids + mask.  Where ``valid``:
+    ``acc := acc is NULL ? contrib : union(acc, contrib)``.  Inputs must be
+    safe nodes with equal max-start (guaranteed per-cell / per-slot); the
+    result is safe, time-ordered, and output-depth ≤ 3.
+    """
+    cap = ar["kind"].shape[1] - 1
+    has_acc = acc != NULL
+    do_u = valid & has_acc
+    ka = _gather(ar["kind"], acc) == UNION
+    kc = _gather(ar["kind"], contrib) == UNION
+    both = do_u & ka & kc
+    single = do_u & ~both
+    need = jnp.where(do_u, jnp.where(both, 3, 1), 0)
+    ar, base = _alloc(ar, need)
+
+    m = jnp.maximum(_gather(ar["maxs"], acc), _gather(ar["maxs"], contrib))
+    # (a): acc non-union → left = acc; (b): contrib non-union → left = contrib
+    case_a = single & ~ka
+    l1 = jnp.where(case_a, acc, contrib)
+    r1 = jnp.where(case_a, contrib, acc)
+    # (c)/(d): both unions → 3 nodes splice the two odepth-1 chains
+    n1l = _gather(ar["left"], acc)
+    n1r = _gather(ar["right"], acc)
+    n2l = _gather(ar["left"], contrib)
+    n2r = _gather(ar["right"], contrib)
+    m1r = _gather(ar["maxs"], n1r)
+    m2r = _gather(ar["maxs"], n2r)
+    ge = m1r >= m2r
+    # id0: the single-case union, or u2 = n1.right ∪ n2.right (time-ordered)
+    ar = _write(ar, base, single | both,
+                kind=UNION, pos=NULL,
+                maxs=jnp.where(single, m, jnp.maximum(m1r, m2r)),
+                left=jnp.where(single, l1, jnp.where(ge, n1r, n2r)),
+                right=jnp.where(single, r1, jnp.where(ge, n2r, n1r)))
+    # id1: u1 = n2.left ∨ u2 ; id2: u = n1.left ∨ u1
+    ar = _write(ar, base + 1, both, kind=UNION, pos=NULL, maxs=m,
+                left=n2l, right=_ref(base, cap))
+    ar = _write(ar, base + 2, both, kind=UNION, pos=NULL, maxs=m,
+                left=n1l, right=_ref(base + 1, cap))
+    new_acc = jnp.where(
+        do_u, jnp.where(both, _ref(base + 2, cap), _ref(base, cap)),
+        jnp.where(valid, contrib, acc))
+    return ar, new_acc
+
+
+# ---------------------------------------------------------------------------
+# the arena scan: one chunk of T events, vectorized over lanes
+# ---------------------------------------------------------------------------
+
+
+def arena_scan(tables: ArenaTables, arena: dict, class_ids: jnp.ndarray,
+               gpos: jnp.ndarray, start: jnp.ndarray, valid: jnp.ndarray,
+               hits: jnp.ndarray, *, epsilon: int
+               ) -> Tuple[dict, jnp.ndarray]:
+    """Maintain the tECS arena over one chunk; emit enumeration roots.
+
+    class_ids: (T, B) int32 symbol classes (the kernel's trace operand).
+    gpos:      (T, B) int32 *global* stream position per step (node labels);
+               ignored where dead.
+    start:     (B,) int32 ring-local substream offsets (consumed mod W).
+    valid:     (B,) int32 dense prefix of real events per lane this chunk.
+    hits:      (T, B, Q) bool — positions with ≥ 1 match (from the counting
+               scan); roots are built (and nodes allocated) only there.
+    Returns (arena', roots (T, B, Q) int32) — roots are NULL where no hit.
+    """
+    T, B = class_ids.shape
+    W = arena["cell"].shape[1]
+    S = tables.num_states
+    Q = tables.num_queries
+    cap = arena["kind"].shape[1] - 1
+    arange_w = jnp.arange(W)
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,))
+    valid = jnp.broadcast_to(jnp.asarray(valid, jnp.int32), (B,))
+
+    def step(ar, xs):
+        t, cls_t, gpos_t, hit_t = xs
+        j = start + t                                           # (B,)
+        live = t < valid
+        seed = (arange_w[None, :] == (j % W)[:, None])
+        expire = (arange_w[None, :] == ((j - epsilon - 1) % W)[:, None])
+        clear = (seed | expire) & live[:, None]
+        cell = jnp.where(clear[:, :, None], NULL, ar["cell"])
+
+        # -- new_bottom(j) at the seed slot's initial state(s) --------------
+        ar, base = _alloc(ar, live.astype(jnp.int32)[:, None])
+        id_bot = base[:, 0]
+        ar = _write(ar, base, live[:, None], kind=BOTTOM,
+                    pos=gpos_t[:, None], maxs=gpos_t[:, None],
+                    left=NULL, right=NULL)
+        b_idx = jnp.arange(B)
+        seed_slot = j % W
+        for s0 in tables.init_states:
+            old = cell[b_idx, seed_slot, s0]
+            cell = cell.at[b_idx, seed_slot, s0].set(
+                jnp.where(live, _ref(id_bot, cap), old))
+
+        # -- transition: fold predecessor edges into each (slot, state) ----
+        pk_all = jnp.moveaxis(tables.pred_idx[cls_t], 2, 0)     # (K, B, S)
+        mk_all = jnp.moveaxis(tables.pred_mark[cls_t], 2, 0)
+        vk_all = jnp.moveaxis(tables.pred_valid[cls_t], 2, 0)
+
+        def fold_k(carry, xs_k):
+            acc, ark = carry
+            pk, mk, vk = xs_k                                   # (B, S)
+            src = jnp.take_along_axis(
+                cell, jnp.broadcast_to(jnp.clip(pk, 0, S - 1)[:, None, :],
+                                       (B, W, S)), axis=2)      # (B, W, S)
+            cvalid = vk[:, None, :] & (src != NULL) & live[:, None, None]
+            m_ext = (cvalid & mk[:, None, :]).reshape(B, W * S)
+            ark, base_e = _alloc(ark, m_ext.astype(jnp.int32))
+            src_f = src.reshape(B, W * S)
+            ark = _write(ark, base_e, m_ext, kind=OUTPUT,
+                         pos=gpos_t[:, None],
+                         maxs=_gather(ark["maxs"], src_f),
+                         left=src_f, right=NULL)
+            contrib = jnp.where(m_ext, _ref(base_e, cap), src_f)
+            ark, acc = _union_fold(ark, acc, contrib,
+                                   cvalid.reshape(B, W * S))
+            return (acc, ark), None
+
+        acc0 = jnp.full((B, W * S), NULL, jnp.int32)
+        (acc, ar), _ = jax.lax.scan(fold_k, (acc0, ar),
+                                    (pk_all, mk_all, vk_all))
+        cell = jnp.where(live[:, None, None],
+                         acc.reshape(B, W, S), ar["cell"])
+
+        # -- roots at hit positions (Fig. 5(e) merge) ----------------------
+        # same-slot final cells share a max-start → gadget fold ...
+        def fold_s(carry, xs_s):
+            slotacc, ars = carry
+            cell_s, fin_s = xs_s                      # (B, W) / (Q,)
+            cval = ((cell_s != NULL)[:, :, None] & fin_s[None, None, :]
+                    & hit_t[:, None, :])
+            contrib = jnp.broadcast_to(cell_s[:, :, None], (B, W, Q))
+            ars, sa = _union_fold(ars, slotacc.reshape(B, W * Q),
+                                  contrib.reshape(B, W * Q),
+                                  cval.reshape(B, W * Q))
+            return (sa.reshape(B, W, Q), ars), None
+
+        slot0 = jnp.full((B, W, Q), NULL, jnp.int32)
+        (slotacc, ar), _ = jax.lax.scan(
+            fold_s, (slot0, ar),
+            (jnp.moveaxis(cell, 2, 0), tables.finals_sq))
+
+        # ... then slots chain right-wards in decreasing start order
+        def fold_d(carry, d):
+            root, ard = carry
+            slot_d = (j - d) % W                                # (B,)
+            m_node = jnp.take_along_axis(
+                slotacc, jnp.broadcast_to(slot_d[:, None, None], (B, 1, Q)),
+                axis=1)[:, 0, :]                                # (B, Q)
+            vm = (m_node != NULL) & hit_t
+            need = (vm & (root != NULL)).astype(jnp.int32)
+            ard, base_c = _alloc(ard, need)
+            ard = _write(ard, base_c, need > 0, kind=UNION, pos=NULL,
+                         maxs=_gather(ard["maxs"], m_node),
+                         left=m_node, right=root)
+            root = jnp.where(vm, jnp.where(root != NULL,
+                                           _ref(base_c, cap), m_node), root)
+            return (root, ard), None
+
+        root0 = jnp.full((B, Q), NULL, jnp.int32)
+        (root, ar), _ = jax.lax.scan(
+            fold_d, (root0, ar),
+            jnp.arange(epsilon, -1, -1, dtype=jnp.int32))
+
+        ar = dict(ar)
+        ar["cell"] = cell
+        return ar, jnp.where(hit_t, root, NULL)
+
+    ts = jnp.arange(T, dtype=jnp.int32)
+    hits = jnp.asarray(hits, bool)
+    arena, roots = jax.lax.scan(step, arena,
+                                (ts, class_ids, gpos, hits))
+    return arena, roots
+
+
+# ---------------------------------------------------------------------------
+# shared chunk step + one-shot driver
+# ---------------------------------------------------------------------------
+
+
+def scan_chunk(atables: ArenaTables, arena: dict, attrs, state, *,
+               specs, class_of, class_ind, m_all, finals_q, init_mask,
+               epsilon: int, start, gbase, impl, use_pallas, b_tile):
+    """One chunk through the fused pipeline + arena at a common offset.
+
+    The whole-batch case: every lane advances by the same T events from
+    ring offset ``start``, with global positions ``gbase + t`` (PARTITION
+    BY lanes have per-lane offsets and scattered positions — see
+    ``PartitionedStreamingEngine._part_step_impl`` instead).  Shared by the
+    streaming engine's arena step and the one-shot :func:`run_enumerate`.
+    Returns ``(matches, state', arena', roots)``.
+    """
+    from ..kernels import ops
+    matches, state, trace = ops.cer_pipeline(
+        attrs, specs, class_of, class_ind, m_all, finals_q, state,
+        init_mask=init_mask, epsilon=epsilon, start_pos=start, impl=impl,
+        use_pallas=use_pallas, b_tile=b_tile, return_trace=True)
+    T, B = trace.shape
+    gpos = jnp.broadcast_to(
+        gbase + jnp.arange(T, dtype=jnp.int32)[:, None], (T, B))
+    arena, roots = arena_scan(
+        atables, arena, trace, gpos, start,
+        jnp.full((B,), T, jnp.int32), matches > 0.5, epsilon=epsilon)
+    return matches, state, arena, roots
+
+
+def run_enumerate(engine, streams, start_pos: int = 0,
+                  arena_capacity: int = 1 << 15, strategy: str = "ALL"):
+    """One-shot pipeline + arena + enumeration over pre-batched streams.
+
+    ``engine`` is a constructed VectorEngine or MultiQueryEngine (anything
+    with ``tables``/``encoder``/``arena_tables()``/``init_state``).  The
+    predicate scan, counting scan and arena maintenance run as ONE jitted
+    computation (cached on the engine); the host then fetches the arena and
+    walks Algorithm 2 per hit.  Returns ``(counts (T, B, Q) int64,
+    {(t, b, q): [ComplexEvent]})`` — single-query callers slice Q = 0.
+    """
+    from ..core.selection import apply_strategy
+    attrs = jnp.asarray(engine.encoder.encode_streams(streams))
+    tbl = engine.tables
+    finals = tbl.finals
+    finals_q = finals if finals.ndim == 2 else finals[None, :]
+    atables = engine.arena_tables()
+
+    def step(attrs, state, arena, start):
+        # one-shot: absolute positions and ring offsets coincide
+        matches, _, arena, roots = scan_chunk(
+            atables, arena, attrs, state, specs=engine.encoder.specs,
+            class_of=tbl.class_of, class_ind=tbl.class_ind,
+            m_all=tbl.m_all, finals_q=finals_q, init_mask=tbl.init_mask,
+            epsilon=engine.epsilon, start=start, gbase=start,
+            impl=engine.impl, use_pallas=engine.use_pallas,
+            b_tile=engine.b_tile)
+        return matches, arena, roots
+
+    jitted = getattr(engine, "_enum_jit", None)
+    if jitted is None:
+        jitted = jax.jit(step)
+        engine._enum_jit = jitted
+    T, B = attrs.shape[:2]
+    state = engine.init_state(B)
+    arena = init_arena(B, arena_capacity, engine.ring, atables.num_states)
+    matches_f, arena, roots = jitted(attrs, state, arena,
+                                     jnp.asarray(start_pos, jnp.int32))
+    counts = np.asarray(matches_f).astype(np.int64)
+    roots_np = np.asarray(roots)
+    snap = ArenaSnapshot(arena)
+    out = {}
+    for t, b, q in zip(*np.nonzero(counts)):
+        j = int(start_pos) + int(t)
+        ces = list(snap.enumerate(int(b), roots_np[t, b, q], j,
+                                  j - engine.epsilon))
+        out[(int(t), int(b), int(q))] = apply_strategy(strategy, ces)
+    return counts, out
+
+
+# ---------------------------------------------------------------------------
+# host side: fetch + enumerate (Algorithm 2 over the fetched arrays)
+# ---------------------------------------------------------------------------
+
+
+class ArenaOverflow(RuntimeError):
+    """A lane's bump pointer passed capacity; its nodes are unreliable."""
+
+
+class ArenaSnapshot:
+    """Host-fetched (numpy) copy of the device arena.
+
+    Node ids are stable across feeds (the arena is append-only between
+    resets), so roots recorded at earlier chunks stay enumerable from any
+    later snapshot — fetch once, enumerate many.
+    """
+
+    def __init__(self, arena: dict):
+        self.kind = np.asarray(arena["kind"])
+        self.pos = np.asarray(arena["pos"])
+        self.maxs = np.asarray(arena["maxs"])
+        self.left = np.asarray(arena["left"])
+        self.right = np.asarray(arena["right"])
+        self.ptr = np.asarray(arena["ptr"])
+        self.ovf = np.asarray(arena["ovf"])
+
+    @property
+    def nodes_created(self) -> int:
+        return int(self.ptr.sum())
+
+    def enumerate(self, lane: int, root: int, end_pos: int,
+                  threshold: Optional[int] = None,
+                  steps: Optional[List[int]] = None
+                  ) -> Iterator[ComplexEvent]:
+        """Enumerate ``⟦root⟧(end_pos)`` with output-linear delay.
+
+        ``threshold`` is the earliest admissible start (``None`` disables
+        the prune — every node reachable from a live root is in-window by
+        ring-eviction construction).  ``steps`` is an optional 1-element
+        work counter incremented per node visit (paper-claims tests).
+        """
+        if bool(self.ovf[lane]):
+            raise ArenaOverflow(
+                f"lane {lane} overflowed its arena (capacity "
+                f"{self.kind.shape[1] - 1}); raise arena_capacity or reset")
+        yield from enumerate_arena(
+            self.kind[lane], self.pos[lane], self.maxs[lane],
+            self.left[lane], self.right[lane], int(root), int(end_pos),
+            threshold, steps)
+
+
+def check_invariants(snap: ArenaSnapshot, lane: int) -> None:
+    """Assert the paper's tECS invariants on one lane's node store.
+
+    * ids are topologically ordered (children < parent — bump discipline);
+    * unions are time-ordered: ``max(left) ≥ max(right)``, node max =
+      ``max(left)``;
+    * output-depth ≤ 3 everywhere (3-boundedness, via the safe-node
+      gadgets);
+    * bottoms/outputs carry positions; unions don't.
+    """
+    n = int(snap.ptr[lane])
+    kind = snap.kind[lane]
+    pos, maxs = snap.pos[lane], snap.maxs[lane]
+    left, right = snap.left[lane], snap.right[lane]
+    odepth = np.zeros(n, np.int64)
+    for i in range(n):
+        k = kind[i]
+        assert k in (BOTTOM, OUTPUT, UNION), (lane, i, k)
+        if k == BOTTOM:
+            assert left[i] == NULL and right[i] == NULL, (lane, i)
+            assert pos[i] == maxs[i] >= 0, (lane, i)
+        elif k == OUTPUT:
+            assert 0 <= left[i] < i, (lane, i, left[i])
+            assert maxs[i] == maxs[left[i]], (lane, i)
+            odepth[i] = 0
+        else:
+            li, ri = int(left[i]), int(right[i])
+            assert 0 <= li < i and 0 <= ri < i, (lane, i, li, ri)
+            assert pos[i] == NULL, (lane, i)
+            assert maxs[li] >= maxs[ri], (lane, i, maxs[li], maxs[ri])
+            assert maxs[i] == maxs[li], (lane, i)
+            odepth[i] = 1 + odepth[li]
+            assert odepth[i] <= 3, (lane, i, odepth[i])

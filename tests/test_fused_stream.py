@@ -62,6 +62,31 @@ def test_fused_pipeline_matches_ref(S, C, k, B, T, A, eps):
     np.testing.assert_array_equal(np.asarray(c_f), np.asarray(c_r))
 
 
+@pytest.mark.parametrize("S,C,k,B,T,A,eps", [(4, 3, 2, 8, 17, 2, 3),
+                                             (9, 5, 4, 5, 21, 3, 7)])
+def test_fused_pipeline_class_trace_matches_ref(S, C, k, B, T, A, eps):
+    """return_trace parity on the real Pallas path (interpret mode): the
+    kernel's class-id trace output — the tECS-arena operand (DESIGN §7) —
+    must equal the oracle's bit-for-bit, and the 2-output (emit_trace off)
+    and 3-output kernels must agree on matches/state."""
+    rng = np.random.default_rng(S * 77 + B)
+    specs, class_of, M, finals, init = random_pipeline(rng, S, C, A, k)
+    attrs = jnp.asarray(rng.normal(size=(T, B, A)).astype(np.float32))
+    c0 = jnp.zeros((B, ops.ring_size(eps), S), jnp.float32)
+    args = pipeline_args(specs, class_of, M, finals[None, :], num_classes=C)
+    kw = dict(init_mask=jnp.asarray(init), epsilon=eps)
+    m_f, c_f, tr_f = ops.cer_pipeline(attrs, specs, *args, c0, **kw,
+                                      impl="fused", return_trace=True)
+    m_2, c_2 = ops.cer_pipeline(attrs, specs, *args, c0, **kw, impl="fused")
+    m_r, c_r, tr_r = ops.cer_pipeline(attrs, specs, *args, c0, **kw,
+                                      impl="ref", return_trace=True)
+    assert tr_f.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(tr_f), np.asarray(tr_r))
+    np.testing.assert_array_equal(np.asarray(m_f), np.asarray(m_r))
+    np.testing.assert_array_equal(np.asarray(m_2), np.asarray(m_r))
+    np.testing.assert_array_equal(np.asarray(c_f), np.asarray(c_2))
+
+
 def test_fused_pipeline_dynamic_start_pos_traced():
     """start_pos may be a traced scalar: one jitted executable, many offsets."""
     rng = np.random.default_rng(3)

@@ -286,6 +286,105 @@ def test_null_only_chunk_drops_everything():
 
 
 # ---------------------------------------------------------------------------
+# edge cases with the tECS arena: empty/NULL chunks, eviction + revival
+# (ISSUE 3 satellites; arena layout in DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def test_arena_all_null_chunk_is_a_no_op():
+    """A chunk whose every event is NULL-keyed routes nothing: stats count
+    the drops, the arena allocates NO nodes (no live lane steps), and the
+    engine keeps enumerating exactly afterwards."""
+    ve = VectorEngine(QTEXT, epsilon=5, use_pallas=False)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=16, num_lanes=4,
+                                     arena_capacity=1 << 14)
+    counts, hits = pse.feed([Event("A", {}) for _ in range(16)])
+    assert counts.sum() == 0 and hits == []
+    assert pse.stats.dropped_null == 16 and pse.stats.routed == 0
+    snap = pse.arena_snapshot()
+    assert snap.nodes_created == 0 and not snap.ovf.any()
+
+    # follow-up real chunk: global positions 16.. match the host oracle
+    types = "ABCABCABCABCABCA"
+    counts2, hits2 = pse.feed([Event(t, {"uid": "a"}) for t in types])
+    res = pse.enumerate_hits(hits2)
+    q = compile_query(QTEXT)
+    host = PartitionedEngine(
+        lambda: Engine(q.cea, window=WindowSpec.events(5)), ("uid",))
+    want = {}
+    stream = [Event("A", {}) for _ in range(16)] + \
+        [Event(t, {"uid": "a"}) for t in types]
+    for i, ev in enumerate(stream):
+        ces = host.process(ev)
+        if ces:
+            want[i] = {(c.start, c.end, c.data) for c in ces}
+    got = {p: {(c.start, c.end, c.data) for c in ces}
+           for p, ces in res.items()}
+    assert got == want and len(want) > 0
+
+
+def test_arena_full_spill_chunk_keeps_arena_intact():
+    """evict='none' + full lane table: a chunk of only-new keys spills
+    entirely; the arena must not allocate or corrupt existing lanes."""
+    mk = lambda u: [Event("A", {"uid": u})] * 2
+    ve = VectorEngine(QTEXT, epsilon=5, use_pallas=False)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=8, num_lanes=4,
+                                     evict="none", arena_capacity=1 << 14)
+    pse.feed(mk("a") + mk("b") + mk("c") + mk("d"))   # table now full
+    nodes_before = pse.arena_snapshot().nodes_created
+    counts, hits = pse.feed(mk("e") + mk("f") + mk("g") + mk("h"))
+    assert counts.sum() == 0 and hits == []
+    assert pse.stats.spilled_table == 8
+    assert pse.arena_snapshot().nodes_created == nodes_before
+    assert pse.num_active_lanes == 4
+
+
+def test_arena_evict_idle_then_revival_stays_consistent():
+    """evict_idle() immediately followed by the key's return: the revived
+    partition restarts from scratch (fresh cells, substream position 0),
+    PartitionStats records exactly one eviction, counts equal enumerated
+    sizes, and hits recorded *before* the eviction stay enumerable (bump
+    ids are never recycled)."""
+    ve = VectorEngine(QTEXT, epsilon=5, use_pallas=False)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=8, num_lanes=4,
+                                     arena_capacity=1 << 14)
+    first = "ABCABCAB"
+    c1, h1 = pse.feed([Event(t, {"uid": "a"}) for t in first])
+    assert len(h1) > 0
+    res1 = pse.enumerate_hits(h1)
+    for p in h1:
+        assert c1[p] == len(res1[p])          # counts ⇔ enumerated sizes
+
+    freed = pse.evict_idle(0)
+    assert freed == 1 and pse.num_active_lanes == 0
+    assert pse.stats.evicted_lanes == 1
+
+    # revival: same key returns in the very next chunk
+    revival = "CABCABCA"
+    c2, h2 = pse.feed([Event(t, {"uid": "a"}) for t in revival])
+    res2 = pse.enumerate_hits(h2)
+    # oracle: a FRESH host engine sees only the revival substream; its
+    # local positions map to global 8..15
+    eng = Engine(compile_query(QTEXT).cea, window=WindowSpec.events(5))
+    want = {}
+    for i, t in enumerate(revival):
+        ces = eng.process(Event(t, {"uid": "a"}))
+        if ces:
+            want[8 + i] = {(8 + c.start, 8 + c.end,
+                            tuple(8 + d for d in c.data)) for c in ces}
+    got = {p: {(c.start, c.end, c.data) for c in ces}
+           for p, ces in res2.items()}
+    assert got == want and len(want) > 0
+    # pre-eviction hits survive the surgery and the revival feed
+    assert pse.enumerate_hits(h1) == res1
+    # stats audit: every event accounted for
+    st = pse.stats
+    assert st.events == 16
+    assert st.routed + st.dropped_null + st.spilled_table + \
+        st.spilled_capacity == st.events
+    assert pse.compile_count == 1
+
+
+# ---------------------------------------------------------------------------
 # runtime contract
 # ---------------------------------------------------------------------------
 

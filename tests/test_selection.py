@@ -1,7 +1,16 @@
-"""Selection strategies (paper §2/§6): semantics of MAX / LAST / NXT / ALL."""
+"""Selection strategies (paper §2/§6): semantics of MAX / LAST / NXT / ALL.
+
+The first half exercises them through compiled queries; the second half
+pins down the reducer tie-breaking DIRECTLY on hand-built ComplexEvents
+(previously only covered indirectly) and on device-arena enumeration
+results (ISSUE 3 satellite)."""
+import numpy as np
 import pytest
 
 from repro.core import Event, compile_query
+from repro.core.events import ComplexEvent
+from repro.core.selection import (apply_strategy,
+                                  apply_strategy_per_position)
 
 
 def run(qtext, types):
@@ -52,3 +61,82 @@ def test_strategies_subset_of_all():
         got = set(run(f"SELECT {strat} * FROM S WHERE A ; (B OR C)+ ; A",
                       "ABCBA"))
         assert got <= base and got
+
+
+# ---------------------------------------------------------------------------
+# direct reducer unit tests (tie-breaking pinned on hand-built events)
+# ---------------------------------------------------------------------------
+
+def CE(s, e, d):
+    return ComplexEvent(s, e, tuple(d))
+
+
+def test_max_tie_breaking_direct():
+    """Same-start strict subsets drop; incomparable maximal sets BOTH stay;
+    other starts are untouched (dominance is per-start)."""
+    m = [CE(0, 3, (0, 3)), CE(0, 3, (0, 1, 3)), CE(0, 3, (0, 2, 3)),
+         CE(1, 3, (1, 3))]
+    got = apply_strategy("MAX", m)
+    assert set(got) == {m[1], m[2], m[3]}
+
+
+def test_last_tie_breaking_direct():
+    """Latest start wins; among equal-start survivors MAX breaks the tie
+    (subsets of a surviving match drop, incomparables stay)."""
+    m = [CE(0, 4, (0, 4)), CE(2, 4, (2, 4)), CE(2, 4, (2, 3, 4))]
+    assert apply_strategy("LAST", m) == [m[2]]
+    m2 = [CE(2, 5, (2, 3, 5)), CE(2, 5, (2, 4, 5)), CE(0, 5, (0, 1, 5))]
+    assert set(apply_strategy("LAST", m2)) == {m2[0], m2[1]}
+
+
+def test_nxt_tie_breaking_direct():
+    """Per start, the lexicographically earliest data set — including the
+    prefix rule: a shorter prefix is earlier than its extensions."""
+    m = [CE(0, 4, (0, 2, 4)), CE(0, 4, (0, 1, 4)),
+         CE(1, 4, (1, 4)), CE(1, 4, (1, 2, 4))]
+    got = apply_strategy("NXT", m)
+    assert got == [CE(0, 4, (0, 1, 4)), CE(1, 4, (1, 2, 4))]
+    assert apply_strategy("NXT", [CE(0, 2, (0, 1, 2)), CE(0, 2, (0, 1))]) \
+        == [CE(0, 2, (0, 1))]
+
+
+def test_reducers_normalize_numpy_positions():
+    """Enumerated results may carry numpy ints (snapshot arrays) — the
+    reducers must compare them like Python ints."""
+    m = [ComplexEvent(np.int64(0), np.int64(2), (np.int64(0), np.int64(2))),
+         CE(1, 2, (1, 2))]
+    got = apply_strategy("LAST", m)
+    assert [(int(c.start), int(c.end)) for c in got] == [(1, 2)]
+
+
+def test_per_position_grouping_protects_last_and_nxt():
+    """A flat arena result list spans several closing positions; LAST/NXT
+    must reduce each position's M_j independently."""
+    m = [CE(0, 2, (0, 2)), CE(1, 2, (1, 2)),       # j = 2
+         CE(0, 5, (0, 5)), CE(3, 5, (3, 5))]       # j = 5
+    got = apply_strategy_per_position("LAST", m)
+    assert got == [CE(1, 2, (1, 2)), CE(3, 5, (3, 5))]
+    # naive flat application would have dropped position 2 entirely
+    assert apply_strategy("LAST", m) == [CE(3, 5, (3, 5))]
+
+
+def test_strategy_on_arena_results_equals_host():
+    """Device-arena enumeration + reducer ≡ host enumeration + reducer,
+    per closing position (arena DFS order differs from the host's — the
+    reducers are order-insensitive)."""
+    from repro.core.engine import Engine, WindowSpec
+    from repro.vector import VectorEngine
+    qtext = "SELECT * FROM S WHERE A ; B+ ; C"
+    types = "ABBCABBCBBXC"
+    stream = [Event(t) for t in types]
+    eps = 7
+    for strat in ("MAX", "LAST", "NXT"):
+        ve = VectorEngine(qtext, epsilon=eps, use_pallas=False)
+        counts, matches = ve.run_enumerate([list(stream)], strategy=strat)
+        eng = Engine(compile_query(qtext).cea, window=WindowSpec.events(eps))
+        for t, ev in enumerate(stream):
+            want = {(c.start, c.end, c.data)
+                    for c in apply_strategy(strat, eng.process(ev))}
+            got = {(c.start, c.end, c.data)
+                   for c in matches.get((t, 0), [])}
+            assert got == want, (strat, t)
