@@ -30,6 +30,9 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
     n = events if events else (2048 if quick else 8192)
     batch = 8 if quick else 16
     fused = perf_cer.compare_fused(num_events=n, batch=batch)
+    tiles = perf_cer.fused_tile_sweep(
+        num_events=n, batch=batch, b_tiles=(8,) if quick else (8, 16),
+        t_tiles=(1, 2, 4), chunks=(64, 256, n))
     streaming = perf_cer.streaming_throughput(
         total_events=n, batch=batch,
         chunk_sizes=(64, 256) if quick else (64, 256, 1024))
@@ -39,13 +42,23 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
         chunk=min(512 if quick else 1024, n))
     enumeration = perf_cer.enumeration_delay(
         total_events=min(n, 1024) if quick else n,
-        chunk=min(256, n), eps_small=7, eps_large=31 if quick else 63)
+        chunk=min(512, n), eps_small=7, eps_large=31 if quick else 63)
+    # arena-scan regression gate data (scripts/check.sh): arena-on scan
+    # throughput must stay within a floor RATIO of counting-only streaming
+    # (the pre-block-vectorization fold sat at ~1/1000 — see DESIGN.md §8).
+    best_stream = max((r["streaming_eps"] for r in streaming), default=None)
+    if best_stream:
+        enumeration["scan_vs_streaming"] = (
+            min(enumeration["small"]["scan_eps"],
+                enumeration["large"]["scan_eps"]) / best_stream)
+        enumeration["scan_vs_streaming_floor"] = 0.02
     packed = perf_cer.compare(num_events=n, batch=batch, n_queries=4)
     return {
         "bench": "cer_perf",
         "events": n,
         "batch": batch,
         "fused_vs_unfused": fused,
+        "fused_tile_sweep": tiles,
         "streaming": streaming,
         "partitioned": partitioned,
         "enumeration": enumeration,
@@ -80,7 +93,10 @@ def main() -> None:
         print(f"# wrote {args.cer_json}: fused {f2f['fused_eps']:.0f} ev/s "
               f"({f2f['speedup']:.2f}× over 3-dispatch), streaming "
               f"{stream}, partition-by {part['device_eps']:.0f} ev/s "
-              f"({part['speedup']:.2f}× over host dict-of-engines), "
+              f"({part['speedup']:.2f}× over host dict-of-engines, arena-on "
+              f"{part['device_arena_eps']:.0f} ev/s), arena scan "
+              f"{enum_['large']['scan_eps']:.0f} ev/s "
+              f"({enum_['large'].get('block_vs_fold', 0):.0f}× over fold), "
               f"enumeration {enum_['large']['arena_per_match_us']:.1f} "
               f"us/match (delay ratio {enum_['delay_ratio']:.2f}, "
               f"{enum_['large']['enum_speedup']:.2f}× over replay), "

@@ -23,8 +23,13 @@ python -m pytest -q ${HYP_ARGS[@]+"${HYP_ARGS[@]}"}
 
 if [[ "${1:-}" != "--no-bench" ]]; then
     python -m benchmarks.run --quick --cer-json BENCH_cer.json
-    # Regression gate: the streaming / partitioned / enumeration cells must
-    # stay compile-once — any compile_count > 1 is a recompile regression.
+    # Regression gates:
+    #  * the streaming / partitioned / enumeration cells must stay
+    #    compile-once — any compile_count > 1 is a recompile regression;
+    #  * arena-ON scan throughput must stay within the floor ratio of
+    #    counting-only streaming recorded in BENCH_cer.json — the
+    #    pre-block-vectorization fold sat at ~1/1000 (DESIGN.md §8), and a
+    #    regression to per-event store updates would land back there.
     python - <<'EOF'
 import json, sys
 rec = json.load(open("BENCH_cer.json"))
@@ -32,5 +37,17 @@ bad = {k: v for k, v in rec["compile_counts"].items() if v != 1}
 if bad:
     sys.exit(f"compile_count regression (must all be 1): {bad}")
 print("compile_counts OK:", rec["compile_counts"])
+enum = rec["enumeration"]
+ratio = enum.get("scan_vs_streaming")
+floor = enum.get("scan_vs_streaming_floor")
+if ratio is None or floor is None:
+    sys.exit("enumeration record is missing the arena-scan ratio gate "
+             "fields (scan_vs_streaming / scan_vs_streaming_floor)")
+if ratio < floor:
+    sys.exit(f"arena-scan throughput regression: enumeration.scan_eps / "
+             f"streaming_eps = {ratio:.4f} < floor {floor} — the tECS "
+             f"arena update has fallen off the block-vectorized path "
+             f"(DESIGN.md §8)")
+print(f"arena scan ratio OK: {ratio:.3f} >= floor {floor}")
 EOF
 fi

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: block tECS builder step (DESIGN.md §8).
+
+The sequential heart of the block-vectorized arena builder — per event:
+expire + seed the ring slot, fold the statically-tabulated predecessor
+edges through the union gadgets, and emit the event's node records and
+enumeration roots — runs here as one ``pallas_call`` over a
+``(B' / b_tile, steps)`` grid, where ``B' = n_seg · B`` is the segmented
+lane axis (``repro.kernels.ref.segment_operands``: the chunk is split into
+overlapping segments so the scan gets shorter and wider).  The four
+``(b_tile, W, S)`` cell-attribute arrays (node id / is-union / left /
+right) stay resident in VMEM scratch for the whole chunk; per step the
+kernel streams the class/hit/position blocks in and one record-region
+block per output to HBM.
+
+Allocation (chunk-level cumsum), virtual-id translation and the batched
+SoA store update against the HBM-resident node arrays happen vectorized
+outside the kernel (``tecs_arena.arena_scan_block``).
+
+The kernel body delegates to :func:`repro.kernels.ref.arena_block_step` —
+the same function the pure-jnp oracle scans — so kernel/oracle parity
+holds by construction; the tests still assert it end to end in interpret
+mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import ArenaBlockLayout, arena_block_step
+
+
+def _arena_update_kernel(cls_ref, hit_ref, j_ref, live_ref, vb_ref,
+                         ptab_ref, finals_ref,
+                         cid0_ref, cisu0_ref, cl0_ref, cr0_ref,
+                         valid_ref, left_ref, right_ref,   # (bt, 1, M)
+                         root_ref,                         # (bt, 1, Q)
+                         fin_cid, fin_cisu, fin_cl, fin_cr,
+                         cid_s, cisu_s, cl_s, cr_s,        # VMEM scratch
+                         *, lay: ArenaBlockLayout, steps: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        cid_s[...] = cid0_ref[...]
+        cisu_s[...] = cisu0_ref[...]
+        cl_s[...] = cl0_ref[...]
+        cr_s[...] = cr0_ref[...]
+
+    cells = (cid_s[...], cisu_s[...], cl_s[...], cr_s[...])
+    ptab = ptab_ref[...].reshape(ptab_ref.shape[0], lay.S, lay.K, 3)
+    out, (valid, left, right), root = arena_block_step(
+        cells, cls_ref[:, 0], hit_ref[:, 0, :], j_ref[:, 0],
+        live_ref[:, 0] > 0, vb_ref[:, 0], lay=lay, ptab=ptab,
+        finals_sq=finals_ref[...])
+    cid_s[...], cisu_s[...], cl_s[...], cr_s[...] = out
+    valid_ref[:, 0, :] = valid
+    left_ref[:, 0, :] = left
+    right_ref[:, 0, :] = right
+    root_ref[:, 0, :] = root
+
+    @pl.when(t == steps - 1)
+    def _flush():
+        for ref_, val in zip((fin_cid, fin_cisu, fin_cl, fin_cr),
+                             (cid_s, cisu_s, cl_s, cr_s)):
+            ref_[...] = val[...]
+
+
+def arena_update_pallas(cells0, cls_s, hit_s, j_s, live_s, vb_s, *,
+                        lay: ArenaBlockLayout, ptab, finals_sq,
+                        b_tile: int = 8, interpret: bool = False):
+    """Raw pallas_call; use :func:`repro.kernels.ops.arena_block_update`.
+
+    cells0:  four (B', W, S) int32 arrays — segment-start cell tables.
+    cls_s/j_s/live_s/vb_s: (B', steps) int32 segmented operands
+    (lane-major); hit_s: (B', steps, Q).
+    Returns ``((valid, left, right), roots, cells_fin)`` with the record
+    arrays (B', steps, M), roots (B', steps, Q) and the final cell table
+    (four (B', W, S) arrays).
+    """
+    B, W, S = cells0[0].shape
+    steps = cls_s.shape[1]
+    Q = lay.Q
+    C = ptab.shape[0]
+    K = lay.K
+    M = lay.M
+    assert B % b_tile == 0, (B, b_tile)
+    grid = (B // b_tile, steps)
+    kernel = functools.partial(_arena_update_kernel, lay=lay, steps=steps)
+    bt = b_tile
+    lane_spec = pl.BlockSpec((bt, 1), lambda b, t: (b, t))
+    cell_spec = pl.BlockSpec((bt, W, S), lambda b, t: (b, 0, 0))
+    rec_spec = pl.BlockSpec((bt, 1, M), lambda b, t: (b, t, 0))
+    in_specs = [
+        lane_spec,                                           # class trace
+        pl.BlockSpec((bt, 1, Q), lambda b, t: (b, t, 0)),    # hits
+        lane_spec, lane_spec, lane_spec,                     # j / live / vb
+        pl.BlockSpec((C, S, K * 3), lambda b, t: (0, 0, 0)),  # pred tables
+        pl.BlockSpec((S, Q), lambda b, t: (0, 0)),           # finals
+        cell_spec, cell_spec, cell_spec, cell_spec,          # cells0
+    ]
+    out_specs = [rec_spec, rec_spec, rec_spec,
+                 pl.BlockSpec((bt, 1, Q), lambda b, t: (b, t, 0))]
+    out_shape = [jax.ShapeDtypeStruct((B, steps, M), jnp.int32)] * 3 + [
+        jax.ShapeDtypeStruct((B, steps, Q), jnp.int32)]
+    out_specs += [cell_spec] * 4
+    out_shape += [jax.ShapeDtypeStruct((B, W, S), jnp.int32)] * 4
+    res = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bt, W, S), jnp.int32)] * 4,
+        interpret=interpret,
+    )(cls_s, hit_s, j_s, live_s, vb_s,
+      jnp.asarray(ptab).reshape(C, S, K * 3),
+      jnp.asarray(finals_sq).astype(jnp.int32), *cells0)
+    return tuple(res[:3]), res[3], tuple(res[4:])

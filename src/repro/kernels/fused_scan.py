@@ -49,6 +49,15 @@ from jax.experimental.pallas import tpu as pltpu
 from .bitvector import _CMP
 from .cea_scan import _ring_masks_lanes
 
+# Default events per grid step.  The benchmarks/perf_cer.py
+# fused_tile_sweep cell sweeps b_tile × t_tile; on the CPU backend the
+# kernel runs through the fused-XLA fallback (tiles are a no-op there), so
+# this default encodes the sweep's structural reasoning for TPU: 4 events
+# amortize grid sequencing and block index arithmetic without growing the
+# attrs/matches blocks past a VMEM tile, and every power-of-two chunk
+# length divides by it.  Chunks not divisible by t_tile fall back to 1.
+DEFAULT_T_TILE = 4
+
 
 def _fused_scan_kernel(start_ref, valid_ref,                     # (B_tile, 1)
                        attrs_ref, ind_ref, m_all_ref, finals_ref, init_ref,
@@ -57,63 +66,72 @@ def _fused_scan_kernel(start_ref, valid_ref,                     # (B_tile, 1)
                        *rest,                                    # [trace_ref,]
                        specs: Tuple[Tuple[int, int, float], ...],  # + scratch
                        V: int, W: int, S: int, NC: int, NQ: int,
-                       B_tile: int, T: int, epsilon: int,
+                       B_tile: int, T: int, epsilon: int, t_tile: int,
                        emit_trace: bool):
     if emit_trace:
         trace_ref, c_scratch = rest
     else:
         (c_scratch,) = rest
-    t = pl.program_id(1)
+    tt = pl.program_id(1)
 
-    @pl.when(t == 0)
+    @pl.when(tt == 0)
     def _init():
         c_scratch[...] = c_in_ref[...]
 
-    # --- stage 1 (was: bitvector kernel): predicate bits, static unroll ----
-    attrs = attrs_ref[:, 0, :]                                 # (B_tile, A)
-    bits = jnp.zeros((B_tile,), dtype=jnp.int32)
-    for i, (col, op, thr) in enumerate(specs):
-        bit = _CMP[op](attrs[:, col], jnp.float32(thr))
-        bits = bits | (bit.astype(jnp.int32) << i)
-
-    # --- stage 2 (was: class_of gather): fold bits → class via indicator ---
-    onehot_v = (bits[:, None] == jax.lax.iota(jnp.int32, V)[None, :]
-                ).astype(jnp.float32)                          # (B_tile, 2^k)
-    cls = jnp.dot(onehot_v, ind_ref[...],
-                  preferred_element_type=jnp.float32)          # (B_tile, C)
-    if emit_trace:
-        # class-id trace operand for the tECS arena (DESIGN.md §7): cls is
-        # exactly one-hot (indicator rows are one-hot, padded rows all-zero
-        # and never selected), so argmax recovers the integer class id.
-        trace_ref[:, 0] = jnp.argmax(cls, axis=1).astype(jnp.int32)
     m_flat = m_all_ref[...].reshape(NC, S * S)
-    M = jnp.dot(cls, m_flat,
-                preferred_element_type=jnp.float32).reshape(B_tile, S, S)
-
-    # --- stage 3 (was: cea_scan kernel): windowed counting-semiring step ---
-    # per-lane positions: each PARTITION BY lane sits at its own substream
-    # offset, and only the first valid_ref[b] slots of a lane carry real
-    # events this chunk (dense-prefix contract) — dead steps are no-ops.
-    j = start_ref[:, 0] + t                                    # (B_tile,)
-    seed_mask, clear = _ring_masks_lanes(j, W, epsilon)        # (B_tile, W)
-    live = (t < valid_ref[:, 0]).astype(jnp.float32)           # (B_tile,)
-    init = init_ref[0, :]                                      # (S,) multi-hot
-    C = c_scratch[...]                                         # (B_tile, W, S)
-    C_new = C * (1.0 - clear)[:, :, None] \
-        + seed_mask[:, :, None] * init[None, None, :]
-    C_new = jax.lax.dot_general(
-        C_new, M, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32)
-    C = C_new * live[:, None, None] + C * (1.0 - live)[:, None, None]
-    c_scratch[...] = C
-
     finals = finals_ref[...]                                   # (NQ, S)
-    per_q = jax.lax.dot_general(
-        C.reshape(B_tile * W, S), finals.T, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32).reshape(B_tile, W, NQ)
-    matches_ref[:, 0, :] = jnp.sum(per_q, axis=1) * live[:, None]
+    init = init_ref[0, :]                                      # (S,) multi-hot
+    # events per grid step: t_tile > 1 amortizes block index bookkeeping and
+    # grid sequencing over several events (the tables / indicator loads hit
+    # VMEM-resident blocks either way) — see benchmarks/perf_cer.py
+    # fused_tile_sweep for the measured sweep.
+    for ti in range(t_tile):
+        t = tt * t_tile + ti
+        # --- stage 1 (was: bitvector kernel): predicate bits, unrolled ----
+        attrs = attrs_ref[:, ti, :]                            # (B_tile, A)
+        bits = jnp.zeros((B_tile,), dtype=jnp.int32)
+        for i, (col, op, thr) in enumerate(specs):
+            bit = _CMP[op](attrs[:, col], jnp.float32(thr))
+            bits = bits | (bit.astype(jnp.int32) << i)
 
-    @pl.when(t == T - 1)
+        # --- stage 2 (was: class_of gather): fold bits → class ------------
+        onehot_v = (bits[:, None] == jax.lax.iota(jnp.int32, V)[None, :]
+                    ).astype(jnp.float32)                      # (B_tile, 2^k)
+        cls = jnp.dot(onehot_v, ind_ref[...],
+                      preferred_element_type=jnp.float32)      # (B_tile, C)
+        if emit_trace:
+            # class-id trace operand for the tECS arena (DESIGN.md §7):
+            # cls is exactly one-hot (indicator rows are one-hot, padded
+            # rows all-zero and never selected), so argmax recovers the
+            # integer class id.
+            trace_ref[:, ti] = jnp.argmax(cls, axis=1).astype(jnp.int32)
+        M = jnp.dot(cls, m_flat,
+                    preferred_element_type=jnp.float32
+                    ).reshape(B_tile, S, S)
+
+        # --- stage 3 (was: cea_scan kernel): windowed semiring step -------
+        # per-lane positions: each PARTITION BY lane sits at its own
+        # substream offset, and only the first valid_ref[b] slots of a lane
+        # carry real events this chunk (dense-prefix contract) — dead steps
+        # are no-ops.
+        j = start_ref[:, 0] + t                                # (B_tile,)
+        seed_mask, clear = _ring_masks_lanes(j, W, epsilon)    # (B_tile, W)
+        live = (t < valid_ref[:, 0]).astype(jnp.float32)       # (B_tile,)
+        C = c_scratch[...]                                     # (B_tile,W,S)
+        C_new = C * (1.0 - clear)[:, :, None] \
+            + seed_mask[:, :, None] * init[None, None, :]
+        C_new = jax.lax.dot_general(
+            C_new, M, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        C = C_new * live[:, None, None] + C * (1.0 - live)[:, None, None]
+        c_scratch[...] = C
+
+        per_q = jax.lax.dot_general(
+            C.reshape(B_tile * W, S), finals.T, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(B_tile, W, NQ)
+        matches_ref[:, ti, :] = jnp.sum(per_q, axis=1) * live[:, None]
+
+    @pl.when(tt == T // t_tile - 1)
     def _flush():
         c_out_ref[...] = c_scratch[...]
 
@@ -123,7 +141,7 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
                       init_mask: jnp.ndarray, c0: jnp.ndarray,
                       start_lanes: jnp.ndarray, valid_lanes: jnp.ndarray,
                       *, specs: Sequence[Tuple[int, int, float]],
-                      epsilon: int, b_tile: int = 8,
+                      epsilon: int, b_tile: int = 8, t_tile: int = 1,
                       interpret: bool = False, emit_trace: bool = False):
     """Raw pallas_call; use :func:`repro.kernels.ops.cer_pipeline` instead.
 
@@ -136,6 +154,9 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
     start_lanes: (B, 1) int32 dynamic per-lane substream offsets
     valid_lanes: (B, 1) int32 per-lane live-event counts this chunk
                  (pass T for every lane to disable dead-step masking)
+    t_tile:      events per grid step (must divide T); > 1 shrinks the grid
+                 and amortizes per-step block bookkeeping
+                 (benchmarks/perf_cer.py fused_tile_sweep)
     returns      (matches (B, T, NQ) f32, c_final (B, W, S) f32) — plus,
                  with ``emit_trace`` (static, per call site), a third
                  ``(B, T) int32`` output: the per-event symbol class, the
@@ -149,17 +170,19 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
     NQ = finals_q.shape[0]
     W = c0.shape[1]
     assert B % b_tile == 0, (B, b_tile)
+    assert T % t_tile == 0, (T, t_tile)
     assert W >= epsilon + 1, (W, epsilon)
     assert start_lanes.shape == (B, 1), start_lanes.shape
     assert valid_lanes.shape == (B, 1), valid_lanes.shape
-    grid = (B // b_tile, T)
+    grid = (B // b_tile, T // t_tile)
 
     kernel = functools.partial(
         _fused_scan_kernel, specs=tuple(specs), V=V, W=W, S=S, NC=NC,
-        NQ=NQ, B_tile=b_tile, T=T, epsilon=epsilon, emit_trace=emit_trace)
+        NQ=NQ, B_tile=b_tile, T=T, epsilon=epsilon, t_tile=t_tile,
+        emit_trace=emit_trace)
 
     out_specs = [
-        pl.BlockSpec((b_tile, 1, NQ), lambda b, t: (b, t, 0)),   # matches
+        pl.BlockSpec((b_tile, t_tile, NQ), lambda b, t: (b, t, 0)),  # matches
         pl.BlockSpec((b_tile, W, S), lambda b, t: (b, 0, 0)),    # C_final
     ]
     out_shape = [
@@ -167,7 +190,8 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
         jax.ShapeDtypeStruct((B, W, S), jnp.float32),
     ]
     if emit_trace:
-        out_specs.append(pl.BlockSpec((b_tile, 1), lambda b, t: (b, t)))
+        out_specs.append(pl.BlockSpec((b_tile, t_tile),
+                                      lambda b, t: (b, t)))
         out_shape.append(jax.ShapeDtypeStruct((B, T), jnp.int32))
 
     return pl.pallas_call(
@@ -176,7 +200,7 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
         in_specs=[
             pl.BlockSpec((b_tile, 1), lambda b, t: (b, 0)),        # start_pos
             pl.BlockSpec((b_tile, 1), lambda b, t: (b, 0)),        # valid
-            pl.BlockSpec((b_tile, 1, A), lambda b, t: (b, t, 0)),  # attrs
+            pl.BlockSpec((b_tile, t_tile, A), lambda b, t: (b, t, 0)),  # attrs
             pl.BlockSpec((V, NC), lambda b, t: (0, 0)),            # indicator
             pl.BlockSpec((NC, S, S), lambda b, t: (0, 0, 0)),      # M_all
             pl.BlockSpec((NQ, S), lambda b, t: (0, 0)),            # finals

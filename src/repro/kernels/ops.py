@@ -30,9 +30,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
+from .arena_update import arena_update_pallas
 from .bitvector import bitvector_pallas
 from .cea_scan import cea_scan_multi_pallas, cea_scan_pallas
-from .fused_scan import fused_scan_pallas
+from .fused_scan import DEFAULT_T_TILE, fused_scan_pallas
 
 VMEM_BYTES = 16 * 1024 * 1024  # v5e VMEM per core (we budget ~16 MB)
 
@@ -229,6 +230,7 @@ def cer_pipeline(attrs: jnp.ndarray,
                  valid_counts: Optional[jnp.ndarray] = None,
                  impl: str = "fused", use_pallas: bool = True,
                  interpret: Optional[bool] = None, b_tile: int = 8,
+                 t_tile: Optional[int] = None,
                  return_trace: bool = False
                  ) -> Tuple[jnp.ndarray, ...]:
     """Full device CER pipeline: raw attributes → per-position match counts.
@@ -248,6 +250,10 @@ def cer_pipeline(attrs: jnp.ndarray,
     indicator + tables + state tile; otherwise it degrades to the fused XLA
     computation (still one dispatch under the caller's jit).
 
+    ``t_tile``: events per fused-kernel grid step (None → the largest of
+    ``DEFAULT_T_TILE``, 2, 1 dividing T) — larger tiles amortize grid
+    sequencing; swept in ``benchmarks/perf_cer.py::fused_tile_sweep``.
+
     PARTITION BY lanes (DESIGN.md §6): ``start_pos`` may also be a ``(B,)``
     vector of per-lane substream offsets, and ``valid_counts`` a ``(B,)``
     int32 vector marking each lane's dense prefix of real events this chunk
@@ -258,6 +264,11 @@ def cer_pipeline(attrs: jnp.ndarray,
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
     T, B, A = attrs.shape
+    # validate before impl routing: the XLA fallbacks ignore t_tile, but a
+    # value invalid for the kernel must fail on every backend, not only TPU
+    if t_tile is not None and T % t_tile != 0:
+        raise ValueError(f"t_tile must divide the chunk length: {t_tile} "
+                         f"vs T={T}")
     NC, S, _ = m_all.shape
     W = c0.shape[1]
     per_lane = _is_lane_vector(start_pos) or valid_counts is not None
@@ -287,6 +298,8 @@ def cer_pipeline(attrs: jnp.ndarray,
 
     # --- impl == "fused" ----------------------------------------------------
     interpret = (not _on_tpu()) if interpret is None else interpret
+    if t_tile is None:
+        t_tile = max(tt for tt in (DEFAULT_T_TILE, 2, 1) if T % tt == 0)
     NQ = finals_q.shape[0]
     V = class_ind.shape[0]
     Sp = _pad_to(S, 128)
@@ -297,8 +310,9 @@ def cer_pipeline(attrs: jnp.ndarray,
                 + NCp * Sp * Sp + NQp * Sp     # tables
                 + b_tile * Sp * Sp             # gathered-M temp
                 + b_tile * W * NQp             # per_q temp
-                + b_tile * A + b_tile * NQp    # attrs block + matches block
-                + (3 if return_trace else 2) * b_tile)  # start/valid[/trace]
+                + b_tile * t_tile * (A + NQp)  # attrs + matches blocks
+                + (2 + (t_tile if return_trace else 0))
+                * b_tile)                      # start/valid[/trace block]
     if W % 8 != 0 or vmem > VMEM_BYTES:
         return _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0,
                              init_mask, epsilon, start_pos, valid_counts,
@@ -319,13 +333,71 @@ def cer_pipeline(attrs: jnp.ndarray,
 
     res = fused_scan_pallas(
         a_pad, ind_pad, m_pad, f_pad, i_pad, c_pad, start_lanes, valid_lanes,
-        specs=tuple(specs), epsilon=epsilon, b_tile=b_tile,
+        specs=tuple(specs), epsilon=epsilon, b_tile=b_tile, t_tile=t_tile,
         interpret=interpret, emit_trace=return_trace)
     matches, c_fin = res[0], res[1]
     out = jnp.moveaxis(matches[:B, :, :NQ], 0, 1), c_fin[:B, :, :S]
     if return_trace:
         return out + (res[2][:B].T,)
     return out
+
+
+def arena_block_update(cells0, class_ids, hits, start, valid_counts, *,
+                       lay, ptab, finals_sq, n_seg: int = 1,
+                       use_pallas: bool = False,
+                       interpret: Optional[bool] = None, b_tile: int = 8):
+    """Block tECS builder over one chunk — Pallas kernel vs jnp oracle.
+
+    cells0: four (B, W, S) int32 arrays (node id / is-union / left /
+    right — the chunk-start cell table).  class_ids: (T, B) int32.
+    hits: (T, B, Q) bool/int32.  start/valid_counts: (B,) int32.  ptab:
+    (C, S, K, 3) packed predecessor tables
+    (:func:`repro.kernels.ref.pack_pred_tables`).  n_seg: parallel chunk
+    segments (:func:`repro.kernels.ref.pick_segments`).  Returns
+    ``(cells_T, valid, left, right, roots)`` — record arrays (T, B, M) on
+    virtual node ids; allocation and the store update happen vectorized
+    downstream (``tecs_arena.arena_scan_block``).
+
+    Routing: the Pallas kernel (:mod:`repro.kernels.arena_update`) engages
+    only on TPU — in interpret mode it is strictly slower than the XLA
+    oracle, so off-TPU callers get :func:`repro.kernels.ref.arena_build_ref`
+    unless ``interpret=True`` forces the kernel for parity tests.  Both
+    paths run the same :func:`repro.kernels.ref.arena_block_step` over the
+    same segmented operands.
+    """
+    T, B = class_ids.shape
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,))
+    valid_counts = jnp.broadcast_to(jnp.asarray(valid_counts, jnp.int32),
+                                    (B,))
+    if not use_pallas or (interpret is None and not _on_tpu()):
+        return ref.arena_build_ref(cells0, class_ids, hits, start,
+                                   valid_counts, lay=lay, ptab=ptab,
+                                   finals_sq=finals_sq, n_seg=n_seg)
+    interpret = False if interpret is None else interpret
+    xs, cells0_seg = ref.segment_operands(cells0, class_ids, hits, start,
+                                          valid_counts, lay=lay,
+                                          n_seg=n_seg)
+    cls_s, hit_s, j_s, live_s, vb_s = xs
+    Bn = cls_s.shape[1]
+    Bp = _pad_to(Bn, b_tile)
+    pads = ((0, Bp - Bn), (0, 0), (0, 0))
+
+    def lane(x):                   # (steps, Bn, ...) → padded (Bp, steps, …)
+        x = jnp.moveaxis(jnp.asarray(x, jnp.int32), 0, 1)
+        return jnp.pad(x, pads[:x.ndim])
+
+    recs, roots, cells_fin = arena_update_pallas(
+        tuple(jnp.pad(c, pads, constant_values=ref.ARENA_NULL)
+              for c in cells0_seg),
+        lane(cls_s), lane(hit_s), lane(j_s),
+        lane(live_s),              # padded lanes are dead (live = 0)
+        lane(vb_s), lay=lay, ptab=ptab, finals_sq=finals_sq,
+        b_tile=b_tile, interpret=interpret)
+    recs = tuple(jnp.moveaxis(y[:Bn], 0, 1) for y in recs)
+    roots = jnp.moveaxis(roots[:Bn], 0, 1)
+    cells_fin = tuple(c[:Bn] for c in cells_fin)
+    return ref.assemble_records(cells_fin, recs, roots, T, B,
+                                lay=lay, n_seg=n_seg)
 
 
 def _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0, init_mask,

@@ -14,13 +14,19 @@ Shapes / conventions shared with the kernels:
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from dataclasses import dataclass
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from ..core.tecs import BOTTOM, OUTPUT, UNION
 
 # op codes shared with the bit-vector kernel
 OP_EQ, OP_NE, OP_LT, OP_LE, OP_GT, OP_GE = range(6)
+
+ARENA_NULL = -1  # empty cell / absent child (shared with vector/tecs_arena)
 
 
 def bitvector_ref(attrs: jnp.ndarray, attr_idx: jnp.ndarray,
@@ -159,3 +165,654 @@ def cea_scan_multi_ref(C0: jnp.ndarray, M_all: jnp.ndarray,
     ts = jnp.arange(T, dtype=jnp.int32)
     C_T, matches = jax.lax.scan(step, C0, (ts, class_ids))
     return C_T, matches
+
+
+
+# ---------------------------------------------------------------------------
+# block-vectorized tECS arena builder (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+#
+# The per-event arena fold (vector/tecs_arena.arena_scan) scatters into the
+# (B, capacity) node store many times per event — on backends without true
+# in-place scatter that copies the whole store per write, which is what made
+# arena-on scans ~1000× slower than counting-only ones.  The block builder
+# splits the update into
+#
+#   1. a minimal sequential recurrence over the chunk — ONLY the per-cell
+#      attribute table (node id / is-union / union children, four (B, W, S)
+#      int32 arrays) is carried, one gather + one unrolled union-gadget
+#      fold per predecessor depth per event (`arena_block_step`; the Pallas
+#      kernel in kernels/arena_update.py runs the same function with the
+#      table in VMEM), emitting the cell-table *trace*; and
+#
+#   2. fully vectorized record reconstruction over the whole chunk
+#      (`arena_records_from_trace`): the same helpers, `jax.vmap`-ed over
+#      the T axis of the trace, re-derive every allocation slot's validity
+#      and child references — no per-event work remains.
+#
+# Node ids are *virtual* while the chunk is in flight:
+#
+#   virtual id of the node allocated at (event t, step slot m)  =
+#       voffset + t·M + m            (voffset = capacity + 1, so virtual ids
+#                                     never collide with real store ids)
+#
+# Every event exposes the same static layout of M allocation slots (bottom,
+# per-fold-depth extend/union regions, same-slot root folds, right-chain),
+# so ids need no sequential allocator: the caller turns the validity mask
+# into real ids with ONE chunk-level exclusive cumsum, translates virtual
+# references in one vectorized pass, and lands every SoA field with one
+# batched store update per chunk (tecs_arena.arena_scan_block).
+#
+# Both execution paths (jnp scan below, Pallas kernel) call the same step
+# function, so kernel/oracle parity holds by construction, and the record
+# reconstruction consumes the emitted trace — the allocation plan can never
+# diverge from the recurrence.
+#
+# The record regions run over target states 1..S−1 only: the dead state 0
+# never has predecessor edges, so its cells can never allocate — dropping
+# the column shrinks every record array by 1/S for free (the id sequence is
+# unchanged: those slots never allocated anything).
+
+
+@dataclass(frozen=True)
+class ArenaBlockLayout:
+    """Static per-event slot layout of the block tECS builder.
+
+    Slot regions, in id order (children always precede parents):
+
+    * ``off_bottom``  — 1 slot: the event's ``new_bottom`` node.
+    * ``off_ext[k]``  — W·|ext_states[k]| slots per fold depth k: extend
+      nodes.  Only states with a *marking* predecessor edge at depth k
+      (under some class) can ever extend — the rest are compressed away.
+    * ``off_uni[k]``  — 3·W·|uni_states[k]| slots per fold depth k ≥ 1:
+      the union gadget's up-to-3 nodes per cell.  Only states with > k
+      predecessor edges (under some class) can union at depth k; depth 0
+      never unions (empty accumulator), so ``off_uni[0] = −1``.
+    * ``off_fs[fi]``  — 3·W·Q slots per *relevant* final state (final for
+      ≥ 1 query) after the first: the same-slot root fold.  −1 for fi = 0.
+    * ``off_chain``   — (ε+1)·Q slots: the Fig. 5(e) right-chain, ordered by
+      decreasing start age (oldest first) so chain links point backwards.
+
+    The compression is purely static (from the predecessor tables), so the
+    id sequence produced by the chunk-level cumsum still matches the
+    per-event reference fold's allocation order exactly — the dropped
+    slots could never allocate there either — and node stores come out
+    bit-identical on non-overflowing lanes, which the parity suite
+    asserts.
+    """
+
+    W: int
+    S: int
+    K: int
+    Q: int
+    epsilon: int
+    cap: int
+    init_states: Tuple[int, ...]
+    fin_states: Tuple[int, ...]
+    ext_states: Tuple[Tuple[int, ...], ...]   # per fold depth k
+    uni_states: Tuple[Tuple[int, ...], ...]   # per fold depth k (k=0: ())
+    off_bottom: int
+    off_ext: Tuple[int, ...]
+    off_uni: Tuple[int, ...]
+    off_fs: Tuple[int, ...]
+    off_chain: int
+    M: int
+
+    @property
+    def E(self) -> int:
+        return self.epsilon + 1
+
+    @property
+    def voffset(self) -> int:
+        """First virtual id (one past the store's sink slot)."""
+        return self.cap + 1
+
+    def _region_tables(self):
+        """(kind, w_of, d_of) static (M,) decode tables (cached)."""
+        cached = getattr(self, "_tables_cache", None)
+        if cached is not None:
+            return cached
+        kind = np.full(self.M, UNION, np.int32)
+        w_of = np.zeros(self.M, np.int32)
+        d_of = np.full(self.M, -1, np.int32)
+        kind[self.off_bottom] = BOTTOM
+        for k, off in enumerate(self.off_ext):
+            n = len(self.ext_states[k])
+            kind[off:off + self.W * n] = OUTPUT
+            w_of[off:off + self.W * n] = np.repeat(np.arange(self.W), n)
+        for k, off in enumerate(self.off_uni):
+            if off >= 0:
+                n = len(self.uni_states[k])
+                w_of[off:off + 3 * self.W * n] = np.repeat(
+                    np.arange(self.W), 3 * n)
+        for off in self.off_fs:
+            if off >= 0:
+                w_of[off:off + 3 * self.W * self.Q] = np.repeat(
+                    np.arange(self.W), 3 * self.Q)
+        # chain slots: slot w is dynamic ((j − d) mod W); record d instead
+        d_of[self.off_chain:self.off_chain + self.E * self.Q] = np.repeat(
+            np.arange(self.epsilon, -1, -1), self.Q)
+        object.__setattr__(self, "_tables_cache", (kind, w_of, d_of))
+        return kind, w_of, d_of
+
+    def kind_static(self) -> np.ndarray:
+        """(M,) int32 node kind per slot — static, never emitted."""
+        return self._region_tables()[0]
+
+    def pos_is_event(self) -> np.ndarray:
+        """(M,) bool — slots whose ``pos`` label is the event position."""
+        return self.kind_static() != UNION
+
+    def w_static(self) -> np.ndarray:
+        """(M,) int32 ring slot per layout slot (chain slots: see d_static)."""
+        return self._region_tables()[1]
+
+    def d_static(self) -> np.ndarray:
+        """(M,) int32 chain age d (slot = (j−d) mod W); −1 off-chain."""
+        return self._region_tables()[2]
+
+
+def arena_block_layout(W: int, S: int, K: int, Q: int, epsilon: int,
+                       cap: int, init_states, finals_sq_np,
+                       pred_mark_np, pred_valid_np) -> ArenaBlockLayout:
+    """Build the static slot layout for one (query tables, ring, capacity).
+
+    ``pred_mark_np``/``pred_valid_np``: the (C, S, K) predecessor tables —
+    they determine which target states can allocate at each fold depth
+    (region compression, see :class:`ArenaBlockLayout`).
+    """
+    fin = tuple(int(s) for s in range(S)
+                if np.asarray(finals_sq_np)[s].any())
+    pm = np.asarray(pred_mark_np).astype(bool)
+    pv = np.asarray(pred_valid_np).astype(bool)
+    ext_states = tuple(
+        tuple(int(s) for s in range(S) if (pv[:, s, k] & pm[:, s, k]).any())
+        for k in range(K))
+    uni_states = tuple(
+        () if k == 0 else
+        tuple(int(s) for s in range(S) if pv[:, s, k].any())
+        for k in range(K))
+    off = 0
+    off_bottom = off
+    off += 1
+    off_ext: List[int] = []
+    off_uni: List[int] = []
+    for k in range(K):
+        off_ext.append(off)
+        off += W * len(ext_states[k])
+        if k == 0:
+            off_uni.append(-1)
+        else:
+            off_uni.append(off)
+            off += 3 * W * len(uni_states[k])
+    off_fs: List[int] = []
+    for fi in range(len(fin)):
+        if fi == 0:
+            off_fs.append(-1)
+        else:
+            off_fs.append(off)
+            off += 3 * W * Q
+    off_chain = off
+    off += (epsilon + 1) * Q
+    return ArenaBlockLayout(
+        W=W, S=S, K=K, Q=Q, epsilon=epsilon, cap=cap,
+        init_states=tuple(int(s) for s in init_states), fin_states=fin,
+        ext_states=ext_states, uni_states=uni_states,
+        off_bottom=off_bottom, off_ext=tuple(off_ext), off_uni=tuple(off_uni),
+        off_fs=tuple(off_fs), off_chain=off_chain, M=off)
+
+
+def pack_pred_tables(pred_idx, pred_mark, pred_valid) -> np.ndarray:
+    """Stack the three (C, S, K) predecessor tables → (C, S, K, 3) int32.
+
+    One packed table means ONE gather per event inside the recurrence
+    instead of three.  Returns numpy (callers cache it across jit traces;
+    a traced constant must never be cached — it would leak the tracer).
+    """
+    return np.stack([np.asarray(pred_idx).astype(np.int32),
+                     np.asarray(pred_mark).astype(np.int32),
+                     np.asarray(pred_valid).astype(np.int32)], axis=-1)
+
+
+def _union_gadget(acc, contrib, cval, v0):
+    """One vectorized application of the paper's union gadgets (Fig. 5 a–d).
+
+    acc/contrib: ``(id, is_union, left, right)`` tuples of broadcast-
+    compatible int32 arrays (ids are virtual or real; NULL = empty).
+    cval: bool — positions where ``contrib`` participates.  v0: int32 —
+    virtual id of the gadget's first slot (slots v0, v0+1, v0+2).  All
+    participants share the cell's max-start (that equality is what makes
+    the gadgets vectorize — DESIGN.md §7), so no time-order comparison is
+    needed.
+
+    Returns ``(acc', records)`` where records is the 3-slot record tuple
+    ``(valid0, left0, right0, valid12, left1, right1, left2, right2)``:
+    slot 0 carries the pairwise union (cases a/b) or the spliced ``u2``
+    (cases c/d); slots 1–2 carry ``u1``/``u`` of the union×union splice.
+    The records are dead code for the in-scan recurrence (XLA removes
+    them); the vectorized reconstruction consumes them.
+    """
+    a_id, a_u, a_l, a_r = acc
+    c_id, c_u, c_l, c_r = contrib
+    prev = a_id != ARENA_NULL
+    do_u = cval & prev
+    both = do_u & (a_u > 0) & (c_u > 0)
+    single = do_u & ~both
+    # (a): acc non-union → left = acc; (b): acc union → left = contrib
+    case_a = single & (a_u == 0)
+    l1 = jnp.where(case_a, a_id, c_id)
+    r1 = jnp.where(case_a, c_id, a_id)
+    # (c)/(d): both unions → 3 nodes splice the two odepth-1 chains.  The
+    # right children share the cell's max-start, so the reference fold's
+    # time-order comparison always resolves left = acc.right.
+    rec0_l = jnp.where(single, l1, a_r)
+    rec0_r = jnp.where(single, r1, c_r)
+    n_id = jnp.where(do_u, jnp.where(both, v0 + 2, v0),
+                     jnp.where(cval, c_id, a_id))
+    n_u = jnp.where(do_u, 1, jnp.where(cval & ~prev, c_u, a_u))
+    n_l = jnp.where(do_u, jnp.where(both, a_l, l1),
+                    jnp.where(cval, c_l, a_l))
+    n_r = jnp.where(do_u, jnp.where(both, v0 + 1, r1),
+                    jnp.where(cval, c_r, a_r))
+    records = (do_u, rec0_l, rec0_r, both, c_l, v0, a_l, v0 + 1)
+    return (n_id, n_u, n_l, n_r), records
+
+
+def _interleave3(a, b, c, shape):
+    """Stack three gadget-slot arrays → (B, 3·n) in 0/1/2 slot order."""
+    B = shape[0]
+    return jnp.stack([jnp.broadcast_to(a, shape).reshape(B, -1),
+                      jnp.broadcast_to(b, shape).reshape(B, -1),
+                      jnp.broadcast_to(c, shape).reshape(B, -1)],
+                     axis=-1).reshape(B, -1)
+
+
+def _state_rank(states, S: int) -> jnp.ndarray:
+    """(S,) int32 region rank of each state (0 for absent states).
+
+    Built from lazy iota comparisons — Pallas kernels cannot capture
+    constant arrays; absent states' ranks are never selected (their
+    allocation masks are statically false).
+    """
+    iota_s = jax.lax.iota(jnp.int32, S)
+    rank = jnp.zeros((S,), jnp.int32)
+    for i, s in enumerate(states):
+        rank = jnp.where(iota_s == s, i, rank)
+    return rank
+
+
+def _clear_seed(cells, j, live, vbase, *, lay: ArenaBlockLayout):
+    """Ring maintenance for one event: expire + seed ``new_bottom(j)``.
+
+    cells: ``(cid, cisU, cleft, cright)`` (B, W, S) int32; j/vbase: (B,)
+    int32; live: (B,) bool.  Returns the fold-input table (seed bottom
+    visible as a predecessor source; non-live lanes untouched).
+    """
+    cid, cisU, cleft, cright = cells
+    W, S = lay.W, lay.S
+    arange_w = jax.lax.iota(jnp.int32, W)
+    seed = (arange_w[None, :] == (j % W)[:, None]) & live[:, None]
+    expire = (arange_w[None, :]
+              == ((j - lay.epsilon - 1) % W)[:, None]) & live[:, None]
+    cid = jnp.where((seed | expire)[:, :, None], ARENA_NULL, cid)
+    iota_s = jax.lax.iota(jnp.int32, S)
+    init_oh = jnp.zeros((S,), bool)
+    for s0 in lay.init_states:
+        init_oh = init_oh | (iota_s == s0)
+    seed_cells = seed[:, :, None] & init_oh[None, None, :]
+    cid = jnp.where(seed_cells, (vbase + lay.off_bottom)[:, None, None], cid)
+    cisU = jnp.where(seed_cells, 0, cisU)
+    return cid, cisU, cleft, cright
+
+
+def _fold_cells(cells_in, cls_t, live, vbase, *, lay: ArenaBlockLayout,
+                ptab):
+    """The predecessor folds for one event: four (B, W, S) → new cell table.
+
+    Returns ``(acc, pieces)`` — acc is the post-fold ``(id, isU, left,
+    right)`` tuple, pieces the slot-layout-ordered list of per-region
+    record tuples (``(valid, left)`` for extend regions — their right
+    child is always NULL — and ``(valid, left, right)`` for union
+    regions), each (B, region_size) int32, restricted to the states that
+    can statically allocate there (region compression).
+    """
+    cid_in, cisU_in, cleft, cright = cells_in
+    B, W, S = cid_in.shape
+    pt = jnp.asarray(ptab)[cls_t]                          # (B, S, K, 3)
+    iota_w = jax.lax.iota(jnp.int32, W)
+    pieces = []
+    acc = None
+
+    def sel(x, states):            # (B, W, S) → (B, W·|states|), w-major
+        cols = [jnp.broadcast_to(x, (B, W, S))[:, :, s] for s in states]
+        if not cols:
+            return jnp.zeros((B, 0), jnp.int32)
+        return jnp.stack(cols, axis=-1).reshape(B, -1)
+
+    for k in range(lay.K):
+        idx = jnp.broadcast_to(
+            jnp.clip(pt[:, :, k, 0], 0, S - 1)[:, None, :], (B, W, S))
+        src_id = jnp.take_along_axis(cid_in, idx, axis=2)
+        src_u = jnp.take_along_axis(cisU_in, idx, axis=2)
+        src_l = jnp.take_along_axis(cleft, idx, axis=2)
+        src_r = jnp.take_along_axis(cright, idx, axis=2)
+        mk = pt[:, :, k, 1][:, None, :] > 0
+        cval = ((pt[:, :, k, 2][:, None, :] > 0) & (src_id != ARENA_NULL)
+                & live[:, None, None])                     # (B, W, S)
+        m_ext = cval & mk
+        e_states = lay.ext_states[k]
+        n_e = len(e_states)
+        v_ext = (vbase[:, None, None] + lay.off_ext[k]
+                 + iota_w[None, :, None] * n_e
+                 + _state_rank(e_states, S)[None, None, :])
+        pieces.append((sel(m_ext.astype(jnp.int32), e_states),
+                       sel(src_id, e_states)))
+        contrib = (jnp.where(m_ext, v_ext, src_id),
+                   jnp.where(cval & ~mk, src_u, 0), src_l, src_r)
+        if acc is None:
+            null3 = jnp.full((B, W, S), ARENA_NULL, jnp.int32)
+            acc = (jnp.where(cval, contrib[0], null3),
+                   jnp.where(cval, contrib[1], 0),
+                   jnp.where(cval, contrib[2], null3),
+                   jnp.where(cval, contrib[3], null3))
+        else:
+            u_states = lay.uni_states[k]
+            n_u = len(u_states)
+            v0 = (vbase[:, None, None] + lay.off_uni[k]
+                  + 3 * (iota_w[None, :, None] * n_u
+                         + _state_rank(u_states, S)[None, None, :]))
+            acc, recs = _union_gadget(acc, contrib, cval, v0)
+            v_do, l0, r0, v_both, l1_, r1_, l2_, r2_ = recs
+
+            def tri(a, b, c):      # (B, W·n·3): slots 0/1/2 per cell
+                return _interleave3(
+                    *[jnp.stack([jnp.broadcast_to(x, (B, W, S))[:, :, s]
+                                 for s in u_states], axis=-1)
+                      for x in (a, b, c)], shape=(B, W, n_u))
+
+            if n_u:
+                pieces.append((
+                    tri(v_do.astype(jnp.int32), v_both.astype(jnp.int32),
+                        v_both.astype(jnp.int32)),
+                    tri(l0, l1_, l2_), tri(r0, r1_, r2_)))
+            else:
+                z = jnp.zeros((B, 0), jnp.int32)
+                pieces.append((z, z, z))
+    return acc, pieces
+
+
+def _roots_step(cells_t, hit_t, j, vbase, *, lay: ArenaBlockLayout,
+                finals_sq):
+    """Root construction for one event, from the POST-event cell table.
+
+    Same-slot final cells fold through the union gadgets, then slots chain
+    right-wards in decreasing start order (Fig. 5(e)).  NOTE matches the
+    reference fold: ``hit_t`` alone gates the folds (the counting scan
+    already zeroes matches on dead steps).  Returns (pieces, root).
+    """
+    cid, cisU, cleft, cright = cells_t
+    B, W, S = cid.shape
+    Q = lay.Q
+    hit_t = hit_t > 0
+    pieces = []
+    sa = None
+    fs_ix = jax.lax.iota(jnp.int32, W * Q).reshape(W, Q)
+    for fi, s_f in enumerate(lay.fin_states):
+        cval = ((cid[:, :, s_f] != ARENA_NULL)[:, :, None]
+                & (finals_sq[s_f][None, None, :] > 0)
+                & hit_t[:, None, :])                       # (B, W, Q)
+        contrib = tuple(
+            jnp.broadcast_to(c[:, :, s_f][:, :, None], (B, W, Q))
+            for c in (cid, cisU, cleft, cright))
+        if sa is None:
+            nullq = jnp.full((B, W, Q), ARENA_NULL, jnp.int32)
+            sa = (jnp.where(cval, contrib[0], nullq),
+                  jnp.where(cval, contrib[1], 0),
+                  jnp.where(cval, contrib[2], nullq),
+                  jnp.where(cval, contrib[3], nullq))
+        else:
+            v0 = vbase[:, None, None] + lay.off_fs[fi] + 3 * fs_ix[None]
+            sa, recs = _union_gadget(sa, contrib, cval, v0)
+            v_do, l0, r0, v_both, l1_, r1_, l2_, r2_ = recs
+            sh = (B, W, Q)
+            pieces.append((
+                _interleave3(v_do.astype(jnp.int32),
+                             v_both.astype(jnp.int32),
+                             v_both.astype(jnp.int32), sh),
+                _interleave3(l0, l1_, l2_, sh),
+                _interleave3(r0, r1_, r2_, sh)))
+    if sa is None:  # no final states at all: no roots ever
+        sa = (jnp.full((B, W, Q), ARENA_NULL, jnp.int32),) * 4
+
+    # right-chain over slots in decreasing start order (oldest start first)
+    E = lay.E
+    d_arr = lay.epsilon - jax.lax.iota(jnp.int32, E)
+    slot_d = (j[:, None] - d_arr[None, :]) % W             # (B, E)
+    gidx = jnp.broadcast_to(slot_d[:, :, None], (B, E, Q))
+    m_id = jnp.take_along_axis(sa[0], gidx, axis=1)        # (B, E, Q)
+    m_val = m_id != ARENA_NULL
+    rank = jnp.cumsum(m_val.astype(jnp.int32), axis=1)
+    v_chain = (vbase[:, None, None] + lay.off_chain
+               + (jax.lax.iota(jnp.int32, E)[:, None] * Q
+                  + jax.lax.iota(jnp.int32, Q)[None, :])[None])
+    alloc = m_val & (rank >= 2)
+    elem = jnp.where(m_val, jnp.where(alloc, v_chain, m_id), ARENA_NULL)
+    pos_e = jnp.where(m_val, jax.lax.iota(jnp.int32, E)[None, :, None], -1)
+    last = jax.lax.cummax(pos_e, axis=1)
+    prev_pos = jnp.concatenate(
+        [jnp.full((B, 1, Q), -1, jnp.int32), last[:, :-1]], axis=1)
+    prev_elem = jnp.take_along_axis(elem, jnp.clip(prev_pos, 0, E - 1),
+                                    axis=1)
+    prev_elem = jnp.where(prev_pos >= 0, prev_elem, ARENA_NULL)
+    pieces.append((alloc.astype(jnp.int32).reshape(B, -1),
+                   m_id.reshape(B, -1), prev_elem.reshape(B, -1)))
+    root = jnp.take_along_axis(elem, jnp.clip(last[:, -1:], 0, E - 1),
+                               axis=1)[:, 0]
+    root = jnp.where(last[:, -1] >= 0, root, ARENA_NULL)   # (B, Q)
+    return pieces, root
+
+
+def arena_block_step(cells, cls_t, hit_t, j, live, vbase, *,
+                     lay: ArenaBlockLayout, ptab, finals_sq,
+                     sparse_roots: bool = False):
+    """One event of the block builder: recurrence + record emission.
+
+    cells: four (B, W, S) int32 arrays (id / is-union / left / right).
+    cls_t/j/vbase: (B,) int32 (``vbase`` is per-lane: segmented execution
+    places lanes at different stream offsets).  hit_t: (B, Q) int32.
+    live: (B,) bool.  Returns ``(cells', (valid, left, right), root)`` —
+    the per-event record rows (B, M) in slot-layout order and root (B, Q).
+
+    ``sparse_roots`` wraps the root construction in a ``lax.cond``: steps
+    without any hit skip the fold/chain work entirely at runtime (hits are
+    sparse in most streams).  Pallas kernels keep it off — ``cond`` does
+    not lower there — and pay the roots unconditionally.
+    """
+    cells_in = _clear_seed(cells, j, live, vbase, lay=lay)
+    acc, pieces = _fold_cells(cells_in, cls_t, live, vbase, lay=lay,
+                              ptab=ptab)
+    lv = live[:, None, None]
+    out = tuple(jnp.where(lv, a, c) for a, c in zip(acc, cells_in))
+
+    def roots(_):
+        return _roots_step(out, hit_t, j, vbase, lay=lay,
+                           finals_sq=finals_sq)
+
+    if sparse_roots:
+        B = cls_t.shape[0]
+        Q = lay.Q
+        n_fs = max(len(lay.fin_states) - 1, 0)
+
+        def no_roots(_):
+            zfs = jnp.zeros((B, 3 * lay.W * Q), jnp.int32)
+            zch = jnp.zeros((B, lay.E * Q), jnp.int32)
+            return ([(zfs, zfs, zfs)] * n_fs + [(zch, zch, zch)],
+                    jnp.full((B, Q), ARENA_NULL, jnp.int32))
+
+        root_pieces, root = jax.lax.cond(jnp.any(hit_t > 0), roots,
+                                         no_roots, None)
+    else:
+        root_pieces, root = roots(None)
+
+    all_pieces = pieces + list(root_pieces)
+    nullcol = jnp.full((cls_t.shape[0], 1), ARENA_NULL, jnp.int32)
+
+    def third(p):                  # extend regions have no right child
+        return p[2] if len(p) == 3 else jnp.full_like(p[1], ARENA_NULL)
+
+    valid = jnp.concatenate(
+        [live.astype(jnp.int32)[:, None]] + [p[0] for p in all_pieces],
+        axis=1)
+    left = jnp.concatenate([nullcol] + [p[1] for p in all_pieces], axis=1)
+    right = jnp.concatenate([nullcol] + [third(p) for p in all_pieces],
+                            axis=1)
+    return out, (valid, left, right), root
+
+
+def pick_segments(T: int, W: int, max_seg: int = 8) -> int:
+    """Number of parallel chunk segments for the recurrence scan.
+
+    The cell table has finite memory (window ε+1 ≤ W): a segment's start
+    state is reproduced exactly by replaying the W preceding events from
+    an empty table (every run alive at the handoff started inside the
+    replay; virtual node ids depend only on the absolute event index, so
+    the replayed prefix computes identical ids and its emissions are
+    simply discarded).  Splitting a T-event chunk into n segments turns a
+    T-step × B-wide scan into a (W + T/n)-step × nB-wide scan.  Requires
+    T/n ≥ W (segment replays never leave the chunk) and n | T.
+
+    NOTE: on CPU XLA the builder step is bandwidth-bound, so the replay
+    overhead loses — measured slower for every n > 1 — and the default
+    everywhere is n_seg = 1.  The knob exists for accelerator backends
+    where shorter grids amortize per-step launch cost (the Pallas kernel
+    grid shrinks by the same factor).
+    """
+    best = 1
+    for n in range(2, max_seg + 1):
+        if T % n == 0 and T // n >= W:
+            best = n
+    return best
+
+
+def arena_build_ref(cells0, class_ids, hits, start, valid_counts, *,
+                    lay: ArenaBlockLayout, ptab, finals_sq,
+                    n_seg: int = 1):
+    """Block tECS builder over one chunk — the pure-jnp oracle.
+
+    cells0: four (B, W, S) int32 arrays (chunk-start cell table).
+    class_ids: (T, B) int32.  hits: (T, B, Q) int32/bool.
+    start/valid_counts: (B,) int32.  n_seg: parallel segments
+    (:func:`pick_segments`).  Returns ``(cells_T, valid, left, right,
+    roots)`` with the record arrays (T, B, M) int32 in slot-layout order
+    and roots (T, B, Q), on virtual ids.
+
+    The Pallas kernel path (kernels/arena_update.py) runs the same step
+    over the same segmented operands with the cell table in VMEM; the
+    shared preparation/assembly lives in :func:`segment_operands` /
+    :func:`assemble_records`.
+    """
+    xs, cells0_seg = segment_operands(cells0, class_ids, hits, start,
+                                      valid_counts, lay=lay, n_seg=n_seg)
+    cls_s, hit_s, j_s, live_s, vb_s = xs
+
+    def step(cells, x):
+        cls_t, hit_t, j, live, vb = x
+        out, recs, root = arena_block_step(
+            cells, cls_t, hit_t, j, live, vb, lay=lay, ptab=ptab,
+            finals_sq=finals_sq, sparse_roots=True)
+        return out, recs + (root,)
+
+    cells_fin, ys = jax.lax.scan(
+        step, cells0_seg, (cls_s, hit_s, j_s, live_s, vb_s))
+    return assemble_records(cells_fin, ys[:3], ys[3],
+                            class_ids.shape[0], class_ids.shape[1],
+                            lay=lay, n_seg=n_seg)
+
+
+def segment_operands(cells0, class_ids, hits, start, valid_counts, *,
+                     lay: ArenaBlockLayout, n_seg: int):
+    """Build the (steps, n_seg·B, …) scan operands for segmented execution.
+
+    Segment g owns global steps [g·G, (g+1)·G) and runs W extra replay
+    steps before them (segment 0 replays into the void: those steps are
+    dead, its start cells are the carried chunk-start table; later
+    segments start from empty cells).  Returns ``((cls, hit, j, live,
+    vbase), cells0_seg)``.
+    """
+    T, B = class_ids.shape
+    W = lay.W
+    Q = lay.Q
+    hits = jnp.asarray(hits).astype(jnp.int32)
+    if n_seg == 1:
+        ts = jnp.arange(T, dtype=jnp.int32)
+        j = start[None, :] + ts[:, None]
+        live = ts[:, None] < valid_counts[None, :]
+        vb = jnp.broadcast_to((lay.voffset + ts * lay.M)[:, None], (T, B))
+        return (class_ids, hits, j, live, vb), tuple(cells0)
+    assert T % n_seg == 0 and T // n_seg >= W, (T, n_seg, W)
+    G = T // n_seg
+    steps = W + G
+    t_idx = (jnp.arange(n_seg, dtype=jnp.int32)[:, None] * G - W
+             + jnp.arange(steps, dtype=jnp.int32)[None, :])   # (n_seg, steps)
+    tc = jnp.clip(t_idx, 0, T - 1)
+
+    def seg(x):                    # (T, B, ...) → (steps, n_seg·B, ...)
+        g = x[tc]                  # (n_seg, steps, B, ...)
+        return jnp.moveaxis(g, 0, 1).reshape((steps, n_seg * B)
+                                             + x.shape[2:])
+
+    t_real = jnp.moveaxis(jnp.broadcast_to(
+        t_idx[:, :, None], (n_seg, steps, B)), 0, 1).reshape(steps, -1)
+    live = (t_real >= 0) & (t_real < jnp.tile(valid_counts, n_seg)[None, :])
+    j = jnp.tile(start, n_seg)[None, :] + t_real
+    vb = lay.voffset + t_real * lay.M
+    null_cells = tuple(jnp.full_like(c, ARENA_NULL) for c in cells0)
+    cells0_seg = tuple(
+        jnp.concatenate([c0] + [n0] * (n_seg - 1), axis=0)
+        for c0, n0 in zip(cells0, null_cells))
+    return (seg(class_ids), seg(hits), j, live, vb), cells0_seg
+
+
+def assemble_records(cells_fin, recs, roots, T, B, *,
+                     lay: ArenaBlockLayout, n_seg: int):
+    """Reorder segmented scan emissions back to (T, B, …) record arrays.
+
+    Each segment's first W steps are replay (or dead, for segment 0) and
+    are dropped; segment-owned rows interleave back into stream order.
+    """
+    W = lay.W
+
+    def unseg(y):                  # (steps, n_seg·B, ...) → (T, B, ...)
+        if n_seg == 1:
+            return y
+        steps = y.shape[0]
+        G = steps - W
+        y = y[W:].reshape((G, n_seg, B) + y.shape[2:])
+        return jnp.moveaxis(y, 1, 0).reshape((T, B) + y.shape[3:])
+
+    valid, left, right = (unseg(y) for y in recs)
+    roots = unseg(roots)
+    cells_T = tuple(c[-B:] for c in cells_fin) if n_seg > 1 else cells_fin
+    return cells_T, valid, left, right, roots
+
+
+def arena_slot_starts(sstart0, gpos, start, valid_counts, *,
+                      lay: ArenaBlockLayout):
+    """(T, B, W) per-step slot-start table, in closed form (no scan).
+
+    Slot w at step t was last seeded at step ``t' = t_eff − ((start +
+    t_eff − w) mod W)`` with ``t_eff = min(t, valid−1)`` (dead steps never
+    seed); if that is negative the slot kept its chunk-start label
+    ``sstart0``.  Feeds the ``max_start`` decode of the store update.
+    """
+    T, B = gpos.shape
+    W = lay.W
+    ts = jnp.arange(T, dtype=jnp.int32)[:, None, None]     # (T, 1, 1)
+    t_eff = jnp.minimum(ts, jnp.maximum(valid_counts, 0)[None, :, None] - 1)
+    w = jnp.arange(W, dtype=jnp.int32)[None, None, :]
+    t_seed = t_eff - (start[None, :, None] + t_eff - w) % W
+    g = jnp.take_along_axis(jnp.moveaxis(gpos, 1, 0)[:, None, :],
+                            jnp.moveaxis(jnp.clip(t_seed, 0, T - 1),
+                                         1, 0), axis=2)    # (B, T, W)
+    g = jnp.moveaxis(g, 1, 0)
+    return jnp.where(t_seed >= 0, g, sstart0[None])

@@ -55,7 +55,7 @@ class VectorEngine:
 
     def __init__(self, query: Union[str, CompiledQuery], epsilon: int,
                  use_pallas: bool = True, b_tile: int = 8,
-                 impl: Optional[str] = None):
+                 impl: Optional[str] = None, arena_impl: str = "block"):
         compiled = compile_query(query) if isinstance(query, str) else query
         self.compiled = compiled
         self.symbolic: SymbolicCEA = compile_symbolic(compiled.cea)
@@ -67,6 +67,9 @@ class VectorEngine:
         # impl: None → fused when the device path is on, ref otherwise
         self.impl = impl if impl is not None else (
             "fused" if use_pallas else "ref")
+        # arena_impl: "block" (vectorized allocation, DESIGN.md §8) or
+        # "fold" (per-event reference fold, kept for parity testing)
+        self.arena_impl = tecs_arena.check_arena_impl(arena_impl)
         init_mask = np.zeros(self.symbolic.num_states, np.float32)
         init_mask[self.symbolic.initial] = 1.0
         self.tables = VectorQueryTables(

@@ -49,7 +49,7 @@ class MultiQueryEngine:
 
     def __init__(self, queries: Sequence[str], epsilon: int,
                  use_pallas: bool = True, b_tile: int = 8,
-                 impl: Optional[str] = None):
+                 impl: Optional[str] = None, arena_impl: str = "block"):
         registry = AtomRegistry()   # SHARED across queries
         self.compiled: List[CompiledQuery] = [
             compile_query(q, registry) for q in queries]
@@ -62,6 +62,8 @@ class MultiQueryEngine:
         self.b_tile = b_tile
         self.impl = impl if impl is not None else (
             "fused" if use_pallas else "ref")
+        from . import tecs_arena
+        self.arena_impl = tecs_arena.check_arena_impl(arena_impl)
         self.tables = self._pack()
 
     # ------------------------------------------------------------------

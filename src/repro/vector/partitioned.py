@@ -83,7 +83,8 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
     def __init__(self, engine, key_attrs: Sequence[str], chunk_len: int,
                  num_lanes: int, lane_cap: Optional[int] = None,
                  impl: Optional[str] = None, evict: str = "lru",
-                 arena_capacity: Optional[int] = None):
+                 arena_capacity: Optional[int] = None,
+                 arena_impl: Optional[str] = None):
         """``engine``: a constructed VectorEngine or MultiQueryEngine.
 
         key_attrs: PARTITION BY attributes (need not appear in predicates).
@@ -104,7 +105,8 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         # one shot — no throwaway parent-shaped allocation)
         self.num_lanes = int(num_lanes)
         super().__init__(engine, chunk_len, batch=num_lanes, impl=impl,
-                         arena_capacity=arena_capacity)
+                         arena_capacity=arena_capacity,
+                         arena_impl=arena_impl)
         if evict not in ("lru", "none"):
             raise ValueError(f"evict must be 'lru' or 'none', got {evict!r}")
         self.key_attrs = tuple(key_attrs)
@@ -240,9 +242,11 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
                 jnp.asarray(positions, jnp.int32))
             gpos_lanes = jnp.moveaxis(
                 posbuf[:L * cap].reshape(L, cap), 0, 1)        # (cap, L)
-            arena, roots = tecs_arena.arena_scan(
+            arena, roots = tecs_arena.run_arena_scan(
                 self._arena_tables, arena, trace, gpos_lanes,
-                lane_pos, n, matches > 0.5, epsilon=self.epsilon)
+                lane_pos, n, matches > 0.5, epsilon=self.epsilon,
+                arena_impl=self.arena_impl, use_pallas=self._use_pallas,
+                b_tile=self._b_tile)
             rr = jnp.concatenate(
                 [jnp.moveaxis(roots, 0, 1).reshape(L * cap, NQ),
                  jnp.full((1, NQ), tecs_arena.NULL, jnp.int32)])

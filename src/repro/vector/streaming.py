@@ -66,7 +66,8 @@ class StreamingVectorEngine:
 
     def __init__(self, engine, chunk_len: int, batch: int,
                  impl: Optional[str] = None,
-                 arena_capacity: Optional[int] = None):
+                 arena_capacity: Optional[int] = None,
+                 arena_impl: Optional[str] = None):
         """``engine``: a constructed VectorEngine or MultiQueryEngine.
 
         chunk_len: events per feed() call — fixed for shape-stable compiles.
@@ -76,6 +77,9 @@ class StreamingVectorEngine:
                    DESIGN.md §7) inside the same compiled executable, and
                    hits become *enumerable* via :meth:`enumerate` without
                    any host event replay.
+        arena_impl: "block" (vectorized allocation, DESIGN.md §8) or
+                   "fold" (the per-event reference fold); default inherits
+                   the engine's setting.
         """
         if isinstance(engine, str):
             raise TypeError("pass a constructed VectorEngine/MultiQueryEngine"
@@ -111,6 +115,9 @@ class StreamingVectorEngine:
         self._pos = 0
         self._trace_count = 0  # incremented per trace == per compile
         self.arena_capacity = arena_capacity
+        self.arena_impl = tecs_arena.check_arena_impl(
+            arena_impl if arena_impl is not None
+            else getattr(engine, "arena_impl", "block"))
         self._arena_tables = (engine.arena_tables()
                               if arena_capacity is not None else None)
         self._roots: Dict[Tuple[int, int], np.ndarray] = {}
@@ -153,7 +160,7 @@ class StreamingVectorEngine:
             finals_q=self._finals_q, init_mask=self._init_mask,
             epsilon=self.epsilon, start=start_pos, gbase=gbase,
             impl=self.impl, use_pallas=self._use_pallas,
-            b_tile=self._b_tile)
+            b_tile=self._b_tile, arena_impl=self.arena_impl)
         return counts, {"C": C, "arena": arena}, roots
 
     # ------------------------------------------------------------------

@@ -40,12 +40,17 @@ Allocation
 ----------
 Each lane owns ``capacity`` node slots plus one *sink* slot at index
 ``capacity``.  Per update the number of nodes needed per cell is computed
-(extend: 1; union: 1, or 3 for the union×union gadget), lanes assign ids by
-exclusive cumulative sum from their bump pointer, and writes land with one
-scatter per field.  When a lane's pointer would pass ``capacity`` the lane's
-``ovf`` flag latches and all further writes divert to the sink slot:
-recognition (counts/hits) is unaffected, but enumeration for that lane
-raises until the arena is reset/compacted (overflow policy, DESIGN.md §7).
+(extend: 1; union: 1, or 3 for the union×union gadget) and lanes assign ids
+by exclusive cumulative sum from their bump pointer.  The production path
+(:func:`arena_scan_block`, DESIGN.md §8) batches this over whole chunks: a
+lean scan emits fixed-layout node records on a *virtual* id space, ONE
+chunk-level cumsum assigns real ids, and each SoA field lands with one
+batched store update per chunk; the per-event fold (:func:`arena_scan`) is
+kept as the parity reference.  When a lane's pointer would pass
+``capacity`` the lane's ``ovf`` flag latches and all further writes clamp
+into the sink slot: recognition (counts/hits) is unaffected, but
+enumeration for that lane raises until the arena is reset/compacted
+(overflow policy, DESIGN.md §7).
 
 Node ids are bump-ordered, so children always have smaller ids than their
 parents — fetched arenas are topologically sorted by construction, which the
@@ -62,8 +67,19 @@ import numpy as np
 
 from ..core.events import ComplexEvent
 from ..core.tecs import BOTTOM, OUTPUT, UNION, enumerate_arena
+from ..kernels import ref as kref
 
 NULL = -1  # empty cell / absent child
+
+ARENA_IMPLS = ("block", "fold")  # block: vectorized (default); fold: per-event
+
+
+def check_arena_impl(arena_impl: str) -> str:
+    """Validate an ``arena_impl`` selector (shared by every engine ctor)."""
+    if arena_impl not in ARENA_IMPLS:
+        raise ValueError(
+            f"arena_impl must be one of {ARENA_IMPLS}, got {arena_impl!r}")
+    return arena_impl
 
 
 # ---------------------------------------------------------------------------
@@ -289,7 +305,14 @@ def arena_scan(tables: ArenaTables, arena: dict, class_ids: jnp.ndarray,
                gpos: jnp.ndarray, start: jnp.ndarray, valid: jnp.ndarray,
                hits: jnp.ndarray, *, epsilon: int
                ) -> Tuple[dict, jnp.ndarray]:
-    """Maintain the tECS arena over one chunk; emit enumeration roots.
+    """Maintain the tECS arena over one chunk — per-event reference fold.
+
+    This is the slow-but-obviously-faithful implementation (one traced
+    inner fold and one store scatter chain per event); the production path
+    is :func:`arena_scan_block`, which replays this fold's allocation order
+    with block-level id assignment and one scatter per field per CHUNK
+    (DESIGN.md §8).  Kept as the parity oracle: tests pin the block path's
+    node stores bit-identical against it.
 
     class_ids: (T, B) int32 symbol classes (the kernel's trace operand).
     gpos:      (T, B) int32 *global* stream position per step (node labels);
@@ -413,13 +436,201 @@ def arena_scan(tables: ArenaTables, arena: dict, class_ids: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# block-vectorized arena scan (DESIGN.md §8) — same contract as arena_scan
+# ---------------------------------------------------------------------------
+
+
+def _block_layout(tables: ArenaTables, W: int, epsilon: int, cap: int
+                  ) -> "kref.ArenaBlockLayout":
+    """Static slot layout for (tables, ring, capacity) — cached on tables."""
+    cache = getattr(tables, "_lay_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(tables, "_lay_cache", cache)
+    key = (W, epsilon, cap)
+    lay = cache.get(key)
+    if lay is None:
+        lay = kref.arena_block_layout(
+            W, tables.num_states, tables.max_indegree, tables.num_queries,
+            epsilon, cap, tables.init_states, np.asarray(tables.finals_sq),
+            np.asarray(tables.pred_mark), np.asarray(tables.pred_valid))
+        cache[key] = lay
+    return lay
+
+
+def _ptab(tables: ArenaTables) -> jnp.ndarray:
+    """Packed (C, S, K, 3) predecessor tables — cached on tables."""
+    pt = getattr(tables, "_ptab_cache", None)
+    if pt is None:
+        pt = kref.pack_pred_tables(tables.pred_idx, tables.pred_mark,
+                                   tables.pred_valid)
+        object.__setattr__(tables, "_ptab_cache", pt)
+    return pt
+
+
+def arena_scan_block(tables: ArenaTables, arena: dict,
+                     class_ids: jnp.ndarray, gpos: jnp.ndarray,
+                     start: jnp.ndarray, valid: jnp.ndarray,
+                     hits: jnp.ndarray, *, epsilon: int,
+                     use_pallas: bool = False,
+                     interpret: Optional[bool] = None, b_tile: int = 8,
+                     n_seg: int = 1) -> Tuple[dict, jnp.ndarray]:
+    """Block-vectorized :func:`arena_scan` — same contract, ~1000× less
+    per-event write traffic (DESIGN.md §8).
+
+    The per-event fold above runs three traced inner folds and a store
+    scatter chain per event; each masked scatter materializes a fresh copy
+    of the ``(B, capacity)`` node store inside the scan, which is what made
+    arena-on scans ~1000× slower than counting-only ones.  This path
+    instead:
+
+    1. runs ONE lean scan carrying only the per-cell attribute table
+       (four ``(B, W, S)`` int32 arrays) — per event it folds the
+       statically-tabulated predecessor edges through the union gadgets
+       (unrolled over the fold depth K, the relevant final states and the
+       chain axis — no traced inner scans) and emits fixed-layout node
+       *records* on a virtual id space (``ops.arena_block_update`` — a
+       Pallas kernel on TPU with the table in VMEM, the jnp oracle
+       elsewhere; root folds are skipped at runtime on hitless steps);
+    2. assigns real node ids with ONE chunk-level exclusive cumsum of the
+       record-validity mask (the bump allocator, batched) and translates
+       every virtual reference in one vectorized pass — overflowers clamp
+       into the sink; and
+    3. lands the records with one batched store update per SoA field per
+       chunk: node ids are *monotone* in slot order, so each store id
+       binary-searches its source slot in the cumsum and gathers its
+       record (a scatter would be serial per update on CPU and T·M/cap
+       times wider than the ids that can land).  ``kind``/``pos``/
+       ``max_start`` are never even emitted: they decode from the static
+       slot layout and the closed-form slot-start table.
+
+    ``n_seg > 1`` additionally splits the chunk into overlapping segments
+    scanned as a batch (finite-memory replay, see
+    :func:`repro.kernels.ref.segment_operands`) — shorter, wider scans;
+    measured slower on CPU XLA (the step is bandwidth-bound there), kept
+    as a knob for accelerator backends.
+
+    The slot layout replays the reference fold's allocation order exactly,
+    so non-overflowing lanes produce bit-identical node stores — asserted
+    by tests/test_arena_block.py.
+    """
+    from ..kernels import ops
+    T, B = class_ids.shape
+    W = arena["cell"].shape[1]
+    cap = arena["kind"].shape[1] - 1
+    lay = _block_layout(tables, W, epsilon, cap)
+    ptab = _ptab(tables)
+    M = lay.M
+    Q = lay.Q
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,))
+    valid = jnp.broadcast_to(jnp.asarray(valid, jnp.int32), (B,))
+    gpos = jnp.asarray(gpos, jnp.int32)
+
+    # -- chunk-start cell attributes, gathered from the node store ---------
+    cid0 = arena["cell"]
+    occ = cid0 != NULL
+    b3 = jnp.arange(B)[:, None, None]
+    safe = jnp.clip(cid0, 0, cap)
+    cells0 = (cid0,
+              ((arena["kind"][b3, safe] == UNION) & occ).astype(jnp.int32),
+              arena["left"][b3, safe], arena["right"][b3, safe])
+    sstart0 = jnp.max(jnp.where(occ, arena["maxs"][b3, safe], NULL), axis=2)
+
+    # -- 1+2. builder scan: cell-table recurrence + record emission --------
+    cells_T, rec_valid, rec_left, rec_right, roots_v = \
+        ops.arena_block_update(
+            cells0, class_ids, hits, start, valid, lay=lay, ptab=ptab,
+            finals_sq=tables.finals_sq, n_seg=n_seg,
+            use_pallas=use_pallas, interpret=interpret, b_tile=b_tile)
+
+    # -- 3. bump allocation: one chunk-level cumsum over all T·M slots -----
+    N = T * M
+    need = jnp.moveaxis(rec_valid, 1, 0).reshape(B, N)
+    csum = jnp.cumsum(need, axis=1)
+    base = arena["ptr"][:, None] + (csum - need)               # (B, N)
+    total = csum[:, -1]
+    new_ptr = arena["ptr"] + total
+    out = dict(arena)
+    out["ovf"] = arena["ovf"] | (new_ptr > cap)
+    out["ptr"] = jnp.minimum(new_ptr, cap)
+
+    voff = lay.voffset
+
+    def tr(v):                     # v: (B, n) int32 with virtual references
+        g = jnp.take_along_axis(base, jnp.clip(v - voff, 0, N - 1), axis=1)
+        return jnp.where(v >= voff, jnp.minimum(g, cap), v)
+
+    def flat(r):                   # (T, B, n) → (B, T·n)
+        return jnp.moveaxis(r, 1, 0).reshape(B, -1)
+
+    # -- 4. batched store update: binary-search source slot, gather record -
+    ids_rel = (jnp.arange(cap + 1, dtype=jnp.int32)[None, :]
+               - arena["ptr"][:, None])                       # (B, cap+1)
+    written = (ids_rel >= 0) & (ids_rel < total[:, None])
+    src = jax.vmap(
+        lambda c, q: jnp.searchsorted(c, q, side="right"))(
+            csum, ids_rel).astype(jnp.int32)                  # (B, cap+1)
+    src = jnp.clip(src, 0, N - 1)
+
+    def at_src(rec_fl):            # (B, N) records → (B, cap+1) store image
+        return jnp.take_along_axis(rec_fl, src, axis=1)
+
+    # kind / pos / max_start decode from the slot layout: kind and the ring
+    # slot per layout position are static; slot starts come from the
+    # closed-form (T, B, W) table — none of the three is ever emitted.
+    slot_m = src % M
+    t_of = src // M
+    kind_new = jnp.asarray(lay.kind_static())[slot_m]
+    gpos_src = jnp.take_along_axis(jnp.moveaxis(gpos, 1, 0), t_of, axis=1)
+    pos_new = jnp.where(jnp.asarray(lay.pos_is_event())[slot_m],
+                        gpos_src, NULL)
+    sstart_tr = kref.arena_slot_starts(sstart0, gpos, start, valid, lay=lay)
+    d_m = jnp.asarray(lay.d_static())[slot_m]
+    w_m = jnp.where(d_m >= 0,
+                    (start[:, None] + t_of - d_m) % W,        # chain slots
+                    jnp.asarray(lay.w_static())[slot_m])
+    maxs_new = jnp.take_along_axis(
+        jnp.moveaxis(sstart_tr, 1, 0).reshape(B, T * W),
+        t_of * W + w_m, axis=1)
+    maxs_new = jnp.where(kind_new == BOTTOM, gpos_src, maxs_new)
+    for name, val in (("kind", kind_new), ("pos", pos_new),
+                      ("maxs", maxs_new),
+                      ("left", tr(at_src(flat(rec_left)))),
+                      ("right", tr(at_src(flat(rec_right))))):
+        out[name] = jnp.where(written, val, arena[name])
+    out["cell"] = tr(cells_T[0].reshape(B, -1)).reshape(
+        B, W, tables.num_states)
+    roots = jnp.moveaxis(tr(flat(roots_v)).reshape(B, T, Q), 0, 1)
+    return out, jnp.where(jnp.asarray(hits, bool), roots, NULL)
+
+
+# ---------------------------------------------------------------------------
 # shared chunk step + one-shot driver
 # ---------------------------------------------------------------------------
 
 
+def run_arena_scan(atables: ArenaTables, arena: dict, trace, gpos, start,
+                   valid, hits, *, epsilon: int, arena_impl: str = "block",
+                   use_pallas: bool = False, b_tile: int = 8):
+    """Dispatch one arena chunk to the selected implementation.
+
+    ``arena_impl``: ``"block"`` (vectorized allocation + batched scatters,
+    the default) or ``"fold"`` (the per-event reference fold, kept for
+    parity testing — DESIGN.md §8).
+    """
+    check_arena_impl(arena_impl)
+    if arena_impl == "fold":
+        return arena_scan(atables, arena, trace, gpos, start, valid, hits,
+                          epsilon=epsilon)
+    return arena_scan_block(atables, arena, trace, gpos, start, valid, hits,
+                            epsilon=epsilon, use_pallas=use_pallas,
+                            b_tile=b_tile)
+
+
 def scan_chunk(atables: ArenaTables, arena: dict, attrs, state, *,
                specs, class_of, class_ind, m_all, finals_q, init_mask,
-               epsilon: int, start, gbase, impl, use_pallas, b_tile):
+               epsilon: int, start, gbase, impl, use_pallas, b_tile,
+               arena_impl: str = "block"):
     """One chunk through the fused pipeline + arena at a common offset.
 
     The whole-batch case: every lane advances by the same T events from
@@ -437,9 +648,10 @@ def scan_chunk(atables: ArenaTables, arena: dict, attrs, state, *,
     T, B = trace.shape
     gpos = jnp.broadcast_to(
         gbase + jnp.arange(T, dtype=jnp.int32)[:, None], (T, B))
-    arena, roots = arena_scan(
+    arena, roots = run_arena_scan(
         atables, arena, trace, gpos, start,
-        jnp.full((B,), T, jnp.int32), matches > 0.5, epsilon=epsilon)
+        jnp.full((B,), T, jnp.int32), matches > 0.5, epsilon=epsilon,
+        arena_impl=arena_impl, use_pallas=use_pallas, b_tile=b_tile)
     return matches, state, arena, roots
 
 
@@ -469,13 +681,17 @@ def run_enumerate(engine, streams, start_pos: int = 0,
             m_all=tbl.m_all, finals_q=finals_q, init_mask=tbl.init_mask,
             epsilon=engine.epsilon, start=start, gbase=start,
             impl=engine.impl, use_pallas=engine.use_pallas,
-            b_tile=engine.b_tile)
+            b_tile=engine.b_tile,
+            arena_impl=getattr(engine, "arena_impl", "block"))
         return matches, arena, roots
 
-    jitted = getattr(engine, "_enum_jit", None)
+    cache = getattr(engine, "_enum_jit", None)
+    if cache is None:
+        cache = engine._enum_jit = {}
+    jitted = cache.get(getattr(engine, "arena_impl", "block"))
     if jitted is None:
-        jitted = jax.jit(step)
-        engine._enum_jit = jitted
+        jitted = cache[getattr(engine, "arena_impl", "block")] = \
+            jax.jit(step)
     T, B = attrs.shape[:2]
     state = engine.init_state(B)
     arena = init_arena(B, arena_capacity, engine.ring, atables.num_states)
