@@ -38,15 +38,33 @@ def main() -> None:
     # device engine: same query, batched streams, counting on accelerator
     # ------------------------------------------------------------------
     qtext = ("SELECT * FROM S WHERE SELL AS a ; BUY AS b "
-             "FILTER a[price > 25.0] AND b[price < 10.0] ")
+             "FILTER a[price > 25.0] AND b[price < 10.0] "
+             "WITHIN 100 events")
     streams = [stock_stream(4096, seed=s) for s in range(8)]
-    ve = VectorEngine(qtext, epsilon=100)
+    ve = VectorEngine(qtext)   # the query's WITHIN clause drives the ring
     counts, _ = ve.run(streams)
     print(f"device engine: {int(counts.sum())} matches across "
           f"{len(streams)} parallel streams "
           f"(det states={ve.tables.num_states}, "
           f"classes={ve.tables.num_classes})")
     print(f"hit positions (first 5): {ve.hit_positions(counts)[:5]}")
+
+    # ------------------------------------------------------------------
+    # time windows on both engines (DESIGN.md §9): WITHIN 30 seconds over
+    # a timestamped stream — the device evicts by timestamp mask, with
+    # max_window_events bounding the simultaneously-live starts
+    # ------------------------------------------------------------------
+    qtime = ("SELECT * FROM S WHERE SELL AS a ; BUY AS b "
+             "FILTER a[price > 25.0] AND b[price < 10.0] "
+             "WITHIN 30 seconds")
+    tstream = stock_stream(2048, seed=7, events_per_sec=4.0)  # 0.25 s ticks
+    host_total = sum(1 for _ in compile_query(qtime).run(iter(tstream)))
+    vt = VectorEngine(qtime, max_window_events=256)
+    tcounts, tstate = vt.run([tstream])
+    assert int(tcounts.sum()) == host_total, (tcounts.sum(), host_total)
+    assert not vt.window_overflow(tstate).any()
+    print(f"time window (30 s): host and device agree on "
+          f"{host_total} matches over {len(tstream)} timestamped events")
 
 
 if __name__ == "__main__":

@@ -22,14 +22,24 @@ fi
 python -m pytest -q ${HYP_ARGS[@]+"${HYP_ARGS[@]}"}
 
 if [[ "${1:-}" != "--no-bench" ]]; then
+    # quickstart doubles as the examples smoke step: it asserts host ≡
+    # device match totals for both the count-window and the time-window
+    # (WITHIN 30 seconds) sections before any timing runs.
+    python examples/quickstart.py > /dev/null
+    echo "quickstart smoke OK (count + time windows)"
+
     python -m benchmarks.run --quick --cer-json BENCH_cer.json
     # Regression gates:
-    #  * the streaming / partitioned / enumeration cells must stay
-    #    compile-once — any compile_count > 1 is a recompile regression;
+    #  * the streaming / partitioned / enumeration / time-window cells must
+    #    stay compile-once — any compile_count > 1 is a recompile
+    #    regression;
     #  * arena-ON scan throughput must stay within the floor ratio of
     #    counting-only streaming recorded in BENCH_cer.json — the
     #    pre-block-vectorization fold sat at ~1/1000 (DESIGN.md §8), and a
-    #    regression to per-event store updates would land back there.
+    #    regression to per-event store updates would land back there;
+    #  * count-window streaming_eps must stay above the recorded absolute
+    #    floor — the time-window masking generalization (DESIGN.md §9)
+    #    must not regress the count path's closed-form eviction.
     python - <<'EOF'
 import json, sys
 rec = json.load(open("BENCH_cer.json"))
@@ -49,5 +59,19 @@ if ratio < floor:
              f"arena update has fallen off the block-vectorized path "
              f"(DESIGN.md §8)")
 print(f"arena scan ratio OK: {ratio:.3f} >= floor {floor}")
+sfloor = rec.get("streaming_floor_eps")
+best = max((r["streaming_eps"] for r in rec["streaming"]), default=None)
+if sfloor is None or best is None:
+    sys.exit("record is missing the count-window streaming floor gate "
+             "(streaming_floor_eps / streaming rows)")
+if best < sfloor:
+    sys.exit(f"count-window streaming regression: best streaming_eps "
+             f"{best:.0f} < floor {sfloor:.0f} — the window "
+             f"generalization (DESIGN.md §9) has slowed the count path")
+print(f"count-window streaming OK: {best:.0f} ev/s >= floor {sfloor:.0f}")
+tw = rec.get("time_window", {})
+if tw:
+    print(f"time-window cell: {tw['time_window_eps']:.0f} ev/s "
+          f"({tw['time_vs_count']:.2f}x of count at equal size)")
 EOF
 fi

@@ -190,6 +190,19 @@ class _Parser:
         if t.kind != "num":
             raise SyntaxError(f"CEQL: WITHIN expects a number, got {t}")
         n = float(t.value)
+
+        def event_count() -> WindowSpec:
+            # count windows take whole event counts; silently truncating
+            # `WITHIN 2.5` to 2 events would change query semantics
+            if not n.is_integer():
+                raise SyntaxError(
+                    f"CEQL: WITHIN expects an integer event count, got "
+                    f"{t.value} (time windows need a unit or [time_attr])")
+            if n < 0:
+                raise SyntaxError(
+                    f"CEQL: WITHIN event count must be ≥ 0, got {t.value}")
+            return WindowSpec.events(int(n))
+
         nxt = self.peek()
         if nxt and nxt.kind == "punc" and nxt.value == "[":
             attr = self._bracketed_attr()     # e.g. WITHIN 30000 [stock_time]
@@ -197,9 +210,9 @@ class _Parser:
         if nxt and nxt.kind == "word" and nxt.value.lower() in _UNITS:
             unit = self.next().value.lower()
             if _UNITS[unit] == 1 and unit.startswith("event"):
-                return WindowSpec.events(int(n))
+                return event_count()
             return WindowSpec.time(n * _UNITS[unit])
-        return WindowSpec.events(int(n))      # bare number ⇒ count-based
+        return event_count()                  # bare number ⇒ count-based
 
     # CEL: OR < ';' < postfix(+ / AS)
     def _cel_or(self) -> C.CEL:

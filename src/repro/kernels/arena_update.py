@@ -33,14 +33,24 @@ from jax.experimental.pallas import tpu as pltpu
 from .ref import ArenaBlockLayout, arena_block_step
 
 
-def _arena_update_kernel(cls_ref, hit_ref, j_ref, live_ref, vb_ref,
-                         ptab_ref, finals_ref,
-                         cid0_ref, cisu0_ref, cl0_ref, cr0_ref,
-                         valid_ref, left_ref, right_ref,   # (bt, 1, M)
-                         root_ref,                         # (bt, 1, Q)
-                         fin_cid, fin_cisu, fin_cl, fin_cr,
-                         cid_s, cisu_s, cl_s, cr_s,        # VMEM scratch
-                         *, lay: ArenaBlockLayout, steps: int):
+def _arena_update_kernel(*refs, lay: ArenaBlockLayout, steps: int,
+                         has_expire: bool):
+    """Kernel body; ``refs`` order (expire block only with ``has_expire`` —
+    the precomputed time-window eviction mask, DESIGN.md §9):
+
+    inputs   cls, hit, j, live, vb, [expire], ptab, finals, cells0 ×4
+    outputs  valid, left, right, root, cells_fin ×4
+    scratch  cells ×4
+    """
+    it = iter(refs)
+    cls_ref, hit_ref, j_ref, live_ref, vb_ref = (next(it) for _ in range(5))
+    exp_ref = next(it) if has_expire else None
+    ptab_ref, finals_ref = next(it), next(it)
+    cid0_ref, cisu0_ref, cl0_ref, cr0_ref = (next(it) for _ in range(4))
+    valid_ref, left_ref, right_ref = (next(it) for _ in range(3))
+    root_ref = next(it)
+    fin_cid, fin_cisu, fin_cl, fin_cr = (next(it) for _ in range(4))
+    cid_s, cisu_s, cl_s, cr_s = (next(it) for _ in range(4))
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -55,7 +65,8 @@ def _arena_update_kernel(cls_ref, hit_ref, j_ref, live_ref, vb_ref,
     out, (valid, left, right), root = arena_block_step(
         cells, cls_ref[:, 0], hit_ref[:, 0, :], j_ref[:, 0],
         live_ref[:, 0] > 0, vb_ref[:, 0], lay=lay, ptab=ptab,
-        finals_sq=finals_ref[...])
+        finals_sq=finals_ref[...],
+        expire_t=None if exp_ref is None else exp_ref[:, 0, :])
     cid_s[...], cisu_s[...], cl_s[...], cr_s[...] = out
     valid_ref[:, 0, :] = valid
     left_ref[:, 0, :] = left
@@ -71,12 +82,14 @@ def _arena_update_kernel(cls_ref, hit_ref, j_ref, live_ref, vb_ref,
 
 def arena_update_pallas(cells0, cls_s, hit_s, j_s, live_s, vb_s, *,
                         lay: ArenaBlockLayout, ptab, finals_sq,
-                        b_tile: int = 8, interpret: bool = False):
+                        b_tile: int = 8, interpret: bool = False,
+                        expire_s=None):
     """Raw pallas_call; use :func:`repro.kernels.ops.arena_block_update`.
 
     cells0:  four (B', W, S) int32 arrays — segment-start cell tables.
     cls_s/j_s/live_s/vb_s: (B', steps) int32 segmented operands
-    (lane-major); hit_s: (B', steps, Q).
+    (lane-major); hit_s: (B', steps, Q); expire_s: optional
+    (B', steps, W) int32 precomputed time-eviction masks (DESIGN.md §9).
     Returns ``((valid, left, right), roots, cells_fin)`` with the record
     arrays (B', steps, M), roots (B', steps, Q) and the final cell table
     (four (B', W, S) arrays).
@@ -89,7 +102,8 @@ def arena_update_pallas(cells0, cls_s, hit_s, j_s, live_s, vb_s, *,
     M = lay.M
     assert B % b_tile == 0, (B, b_tile)
     grid = (B // b_tile, steps)
-    kernel = functools.partial(_arena_update_kernel, lay=lay, steps=steps)
+    kernel = functools.partial(_arena_update_kernel, lay=lay, steps=steps,
+                               has_expire=expire_s is not None)
     bt = b_tile
     lane_spec = pl.BlockSpec((bt, 1), lambda b, t: (b, t))
     cell_spec = pl.BlockSpec((bt, W, S), lambda b, t: (b, 0, 0))
@@ -98,10 +112,18 @@ def arena_update_pallas(cells0, cls_s, hit_s, j_s, live_s, vb_s, *,
         lane_spec,                                           # class trace
         pl.BlockSpec((bt, 1, Q), lambda b, t: (b, t, 0)),    # hits
         lane_spec, lane_spec, lane_spec,                     # j / live / vb
+    ]
+    operands = [cls_s, hit_s, j_s, live_s, vb_s]
+    if expire_s is not None:
+        in_specs.append(pl.BlockSpec((bt, 1, W), lambda b, t: (b, t, 0)))
+        operands.append(expire_s)
+    in_specs += [
         pl.BlockSpec((C, S, K * 3), lambda b, t: (0, 0, 0)),  # pred tables
         pl.BlockSpec((S, Q), lambda b, t: (0, 0)),           # finals
         cell_spec, cell_spec, cell_spec, cell_spec,          # cells0
     ]
+    operands += [jnp.asarray(ptab).reshape(C, S, K * 3),
+                 jnp.asarray(finals_sq).astype(jnp.int32), *cells0]
     out_specs = [rec_spec, rec_spec, rec_spec,
                  pl.BlockSpec((bt, 1, Q), lambda b, t: (b, t, 0))]
     out_shape = [jax.ShapeDtypeStruct((B, steps, M), jnp.int32)] * 3 + [
@@ -113,7 +135,5 @@ def arena_update_pallas(cells0, cls_s, hit_s, j_s, live_s, vb_s, *,
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bt, W, S), jnp.int32)] * 4,
         interpret=interpret,
-    )(cls_s, hit_s, j_s, live_s, vb_s,
-      jnp.asarray(ptab).reshape(C, S, K * 3),
-      jnp.asarray(finals_sq).astype(jnp.int32), *cells0)
+    )(*operands)
     return tuple(res[:3]), res[3], tuple(res[4:])

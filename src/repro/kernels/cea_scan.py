@@ -24,6 +24,10 @@ Layout / schedule
   executable serves every chunk of a stream — chunked/streaming callers never
   recompile.  (It used to be a ``functools.partial``-baked static, which
   forced a fresh compile per chunk offset.)
+* Windows: these legacy kernels implement the count-window (events)
+  eviction rule only; time windows (DESIGN.md §9) route through the fused
+  kernel / fused-XLA path, which consume the generalized
+  :func:`_ring_masks_time` mask defined here.
 
 VMEM budget per tile: C-scratch ``B_tile·W·S·4`` + ``M_all C·S·S·4`` +
 blocks; ops.py checks it against ~16 MB before launching.
@@ -68,6 +72,34 @@ def _ring_masks_lanes(j, W: int, epsilon: int):
     expire = (arange_w[None, :]
               == ((j - epsilon - 1) % W)[:, None]).astype(jnp.float32)
     return seed_mask, jnp.maximum(seed_mask, expire)
+
+
+def _ring_masks_time(j, ts_t, ts_ring, W: int, size):
+    """Per-lane *time-window* ring masks (DESIGN.md §9).
+
+    The generalization of :func:`_ring_masks_lanes`: instead of evicting
+    exactly the one start that left a count window, every slot whose start
+    timestamp ``ts_ring[b, w]`` fell below ``ts_t[b] - size`` masks to zero
+    (several may expire at once under non-uniform gaps; never-seeded slots
+    carry ``-inf`` and always read expired).  Count windows are the
+    degenerate case ``ts ≡ position, size = ε`` — this mask then equals the
+    classic rule, which the count path keeps for its closed-form one-hot.
+
+    j: (B_tile,) int32 positions (seeding stays position-driven);
+    ts_t: (B_tile,) f32 event timestamps; ts_ring: (B_tile, W) f32.
+    Returns ``(seed_mask, clear, seed_b, overflow)`` — seed/clear as f32
+    0/1 masks, ``seed_b`` the bool seed mask (for the timestamp-ring
+    update), ``overflow`` (B_tile,) bool: the seed slot's previous start
+    was still inside the window, i.e. more than W starts are
+    simultaneously live (the rate bound; latched by the caller).
+    """
+    arange_w = jax.lax.iota(jnp.int32, W)
+    seed_b = arange_w[None, :] == (j % W)[:, None]          # (B_tile, W)
+    expire_b = ts_ring < ts_t[:, None] - size
+    overflow = jnp.any(seed_b & ~expire_b, axis=1)
+    seed_mask = seed_b.astype(jnp.float32)
+    clear = jnp.maximum(seed_mask, expire_b.astype(jnp.float32))
+    return seed_mask, clear, seed_b, overflow
 
 
 def _cea_scan_kernel(start_ref,                                  # SMEM scalar

@@ -35,6 +35,14 @@ PARTITION BY lanes can sit at independent substream offsets (DESIGN.md §6).
 A companion ``(B, 1)`` valid-count operand marks each lane's dense prefix of
 real events this chunk; steps past it leave the lane's state untouched and
 emit zero matches, so routed chunks with ragged per-lane fills stay exact.
+
+Time windows (DESIGN.md §9, static ``time_size``): the kernel carries a
+``(B_tile, W)`` per-slot start-timestamp ring in VMEM scratch next to the
+count ring, evicts by the ``_ring_masks_time`` mask (any number of slots
+per step) and latches a per-lane rate-bound overflow flag when a seed slot
+is still live.  The count path (``time_size=None``) compiles to exactly
+the classic single-slot-eviction kernel — a static specialization, not a
+runtime branch.
 """
 from __future__ import annotations
 
@@ -47,7 +55,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .bitvector import _CMP
-from .cea_scan import _ring_masks_lanes
+from .cea_scan import _ring_masks_lanes, _ring_masks_time
 
 # Default events per grid step.  The benchmarks/perf_cer.py
 # fused_tile_sweep cell sweeps b_tile × t_tile; on the CPU backend the
@@ -59,24 +67,42 @@ from .cea_scan import _ring_masks_lanes
 DEFAULT_T_TILE = 4
 
 
-def _fused_scan_kernel(start_ref, valid_ref,                     # (B_tile, 1)
-                       attrs_ref, ind_ref, m_all_ref, finals_ref, init_ref,
-                       c_in_ref,                                 # inputs
-                       matches_ref, c_out_ref,                   # outputs
-                       *rest,                                    # [trace_ref,]
-                       specs: Tuple[Tuple[int, int, float], ...],  # + scratch
+def _fused_scan_kernel(*refs,                                    # see below
+                       specs: Tuple[Tuple[int, int, float], ...],
                        V: int, W: int, S: int, NC: int, NQ: int,
                        B_tile: int, T: int, epsilon: int, t_tile: int,
-                       emit_trace: bool):
-    if emit_trace:
-        trace_ref, c_scratch = rest
-    else:
-        (c_scratch,) = rest
+                       emit_trace: bool, time_size):
+    """Kernel body; ``refs`` order (time-mode refs only when ``time_size``
+    is set, trace ref only with ``emit_trace``):
+
+    inputs   start, valid, [ts], attrs, ind, m_all, finals, init, c_in,
+             [ts_ring_in, ovf_in]
+    outputs  matches, c_out, [ts_ring_out, ovf_out], [trace]
+    scratch  c, [ts_ring, ovf]
+    """
+    timed = time_size is not None
+    it = iter(refs)
+    start_ref, valid_ref = next(it), next(it)                  # (B_tile, 1)
+    ts_ref = next(it) if timed else None                       # (B_tile, tt)
+    attrs_ref, ind_ref, m_all_ref = next(it), next(it), next(it)
+    finals_ref, init_ref, c_in_ref = next(it), next(it), next(it)
+    tsr_in_ref = next(it) if timed else None                   # (B_tile, W)
+    ovf_in_ref = next(it) if timed else None                   # (B_tile, 1)
+    matches_ref, c_out_ref = next(it), next(it)
+    tsr_out_ref = next(it) if timed else None
+    ovf_out_ref = next(it) if timed else None
+    trace_ref = next(it) if emit_trace else None
+    c_scratch = next(it)
+    tsr_scratch = next(it) if timed else None
+    ovf_scratch = next(it) if timed else None
     tt = pl.program_id(1)
 
     @pl.when(tt == 0)
     def _init():
         c_scratch[...] = c_in_ref[...]
+        if timed:
+            tsr_scratch[...] = tsr_in_ref[...]
+            ovf_scratch[...] = ovf_in_ref[...]
 
     m_flat = m_all_ref[...].reshape(NC, S * S)
     finals = finals_ref[...]                                   # (NQ, S)
@@ -113,10 +139,23 @@ def _fused_scan_kernel(start_ref, valid_ref,                     # (B_tile, 1)
         # per-lane positions: each PARTITION BY lane sits at its own
         # substream offset, and only the first valid_ref[b] slots of a lane
         # carry real events this chunk (dense-prefix contract) — dead steps
-        # are no-ops.
+        # are no-ops.  Seeding is position-driven in both window modes
+        # (DESIGN.md §9); eviction is the one-hot count rule or the
+        # timestamp-ring mask.
         j = start_ref[:, 0] + t                                # (B_tile,)
-        seed_mask, clear = _ring_masks_lanes(j, W, epsilon)    # (B_tile, W)
-        live = (t < valid_ref[:, 0]).astype(jnp.float32)       # (B_tile,)
+        live_b = t < valid_ref[:, 0]                           # (B_tile,)
+        live = live_b.astype(jnp.float32)
+        if timed:
+            ts_t = ts_ref[:, ti]                               # (B_tile,)
+            tsr = tsr_scratch[...]                             # (B_tile, W)
+            seed_mask, clear, seed_b, over = _ring_masks_time(
+                j, ts_t, tsr, W, jnp.float32(time_size))
+            ovf_scratch[:, 0] = jnp.where(over & live_b, 1,
+                                          ovf_scratch[:, 0])
+            tsr_scratch[...] = jnp.where(seed_b & live_b[:, None],
+                                         ts_t[:, None], tsr)
+        else:
+            seed_mask, clear = _ring_masks_lanes(j, W, epsilon)
         C = c_scratch[...]                                     # (B_tile,W,S)
         C_new = C * (1.0 - clear)[:, :, None] \
             + seed_mask[:, :, None] * init[None, None, :]
@@ -134,6 +173,9 @@ def _fused_scan_kernel(start_ref, valid_ref,                     # (B_tile, 1)
     @pl.when(tt == T // t_tile - 1)
     def _flush():
         c_out_ref[...] = c_scratch[...]
+        if timed:
+            tsr_out_ref[...] = tsr_scratch[...]
+            ovf_out_ref[...] = ovf_scratch[...]
 
 
 def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
@@ -142,7 +184,9 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
                       start_lanes: jnp.ndarray, valid_lanes: jnp.ndarray,
                       *, specs: Sequence[Tuple[int, int, float]],
                       epsilon: int, b_tile: int = 8, t_tile: int = 1,
-                      interpret: bool = False, emit_trace: bool = False):
+                      interpret: bool = False, emit_trace: bool = False,
+                      time_size=None, event_ts=None, ts_ring0=None,
+                      ovf0=None):
     """Raw pallas_call; use :func:`repro.kernels.ops.cer_pipeline` instead.
 
     attrs:       (B, T, A) f32 — raw encoded event attributes
@@ -158,20 +202,28 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
                  and amortizes per-step block bookkeeping
                  (benchmarks/perf_cer.py fused_tile_sweep)
     returns      (matches (B, T, NQ) f32, c_final (B, W, S) f32) — plus,
-                 with ``emit_trace`` (static, per call site), a third
+                 with ``emit_trace`` (static, per call site), a trailing
                  ``(B, T) int32`` output: the per-event symbol class, the
                  tECS-arena trace operand (DESIGN.md §7).  Counting-only
                  callers keep the previous two-output kernel, paying
                  neither the argmax nor the extra HBM write.
+
+    Time windows (``time_size`` set, static; DESIGN.md §9): pass
+    ``event_ts`` (B, T) f32 per-event timestamps, ``ts_ring0`` (B, W) f32
+    per-slot start-timestamp ring and ``ovf0`` (B, 1) int32 latched
+    rate-bound flags; the return gains ``(ts_ring (B, W) f32, ovf (B, 1)
+    int32)`` between ``c_final`` and the trace.  Eviction masks every slot
+    whose start timestamp left the window; ``epsilon`` is ignored.
     """
     B, T, A = attrs.shape
     NC, S, _ = m_all.shape
     V = class_ind.shape[0]
     NQ = finals_q.shape[0]
     W = c0.shape[1]
+    timed = time_size is not None
     assert B % b_tile == 0, (B, b_tile)
     assert T % t_tile == 0, (T, t_tile)
-    assert W >= epsilon + 1, (W, epsilon)
+    assert timed or W >= epsilon + 1, (W, epsilon)
     assert start_lanes.shape == (B, 1), start_lanes.shape
     assert valid_lanes.shape == (B, 1), valid_lanes.shape
     grid = (B // b_tile, T // t_tile)
@@ -179,7 +231,31 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
     kernel = functools.partial(
         _fused_scan_kernel, specs=tuple(specs), V=V, W=W, S=S, NC=NC,
         NQ=NQ, B_tile=b_tile, T=T, epsilon=epsilon, t_tile=t_tile,
-        emit_trace=emit_trace)
+        emit_trace=emit_trace, time_size=time_size)
+
+    lane_col = pl.BlockSpec((b_tile, 1), lambda b, t: (b, 0))
+    ring_spec = pl.BlockSpec((b_tile, W), lambda b, t: (b, 0))
+    in_specs = [
+        lane_col,                                              # start_pos
+        lane_col,                                              # valid
+    ]
+    operands = [start_lanes, valid_lanes]
+    if timed:
+        in_specs.append(pl.BlockSpec((b_tile, t_tile),
+                                     lambda b, t: (b, t)))     # event ts
+        operands.append(event_ts)
+    in_specs += [
+        pl.BlockSpec((b_tile, t_tile, A), lambda b, t: (b, t, 0)),  # attrs
+        pl.BlockSpec((V, NC), lambda b, t: (0, 0)),            # indicator
+        pl.BlockSpec((NC, S, S), lambda b, t: (0, 0, 0)),      # M_all
+        pl.BlockSpec((NQ, S), lambda b, t: (0, 0)),            # finals
+        pl.BlockSpec((1, S), lambda b, t: (0, 0)),             # init
+        pl.BlockSpec((b_tile, W, S), lambda b, t: (b, 0, 0)),  # C0
+    ]
+    operands += [attrs, class_ind, m_all, finals_q, init_mask, c0]
+    if timed:
+        in_specs += [ring_spec, lane_col]                      # ts ring, ovf
+        operands += [ts_ring0, ovf0]
 
     out_specs = [
         pl.BlockSpec((b_tile, t_tile, NQ), lambda b, t: (b, t, 0)),  # matches
@@ -189,27 +265,26 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
         jax.ShapeDtypeStruct((B, T, NQ), jnp.float32),
         jax.ShapeDtypeStruct((B, W, S), jnp.float32),
     ]
+    if timed:
+        out_specs += [ring_spec, lane_col]
+        out_shape += [jax.ShapeDtypeStruct((B, W), jnp.float32),
+                      jax.ShapeDtypeStruct((B, 1), jnp.int32)]
     if emit_trace:
         out_specs.append(pl.BlockSpec((b_tile, t_tile),
                                       lambda b, t: (b, t)))
         out_shape.append(jax.ShapeDtypeStruct((B, T), jnp.int32))
 
+    scratch = [pltpu.VMEM((b_tile, W, S), jnp.float32)]
+    if timed:
+        scratch += [pltpu.VMEM((b_tile, W), jnp.float32),
+                    pltpu.VMEM((b_tile, 1), jnp.int32)]
+
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((b_tile, 1), lambda b, t: (b, 0)),        # start_pos
-            pl.BlockSpec((b_tile, 1), lambda b, t: (b, 0)),        # valid
-            pl.BlockSpec((b_tile, t_tile, A), lambda b, t: (b, t, 0)),  # attrs
-            pl.BlockSpec((V, NC), lambda b, t: (0, 0)),            # indicator
-            pl.BlockSpec((NC, S, S), lambda b, t: (0, 0, 0)),      # M_all
-            pl.BlockSpec((NQ, S), lambda b, t: (0, 0)),            # finals
-            pl.BlockSpec((1, S), lambda b, t: (0, 0)),             # init
-            pl.BlockSpec((b_tile, W, S), lambda b, t: (b, 0, 0)),  # C0
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((b_tile, W, S), jnp.float32)],
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(start_lanes, valid_lanes, attrs, class_ind, m_all, finals_q,
-      init_mask, c0)
+    )(*operands)

@@ -20,6 +20,11 @@ point for the device CER pipeline and routes between
 
 ``start_pos`` is dynamic everywhere: pass a Python int *or* a traced int32
 scalar; one compiled executable serves every chunk offset.
+
+Windows (DESIGN.md §9): :func:`cer_pipeline` takes either the legacy
+count-window ``epsilon=`` or a :class:`repro.kernels.window.DeviceWindow`
+(``window=``) — time windows add a ``(T, B)`` f32 ``event_ts`` operand and
+carry the ``{"C", "ts", "ovf"}`` state pytree through the same signatures.
 """
 from __future__ import annotations
 
@@ -34,6 +39,7 @@ from .arena_update import arena_update_pallas
 from .bitvector import bitvector_pallas
 from .cea_scan import cea_scan_multi_pallas, cea_scan_pallas
 from .fused_scan import DEFAULT_T_TILE, fused_scan_pallas
+from .window import TS_EMPTY, DeviceWindow
 
 VMEM_BYTES = 16 * 1024 * 1024  # v5e VMEM per core (we budget ~16 MB)
 
@@ -225,7 +231,10 @@ def cer_pipeline(attrs: jnp.ndarray,
                  specs: Sequence[Tuple[int, int, float]],
                  class_of: jnp.ndarray, class_ind: jnp.ndarray,
                  m_all: jnp.ndarray, finals_q: jnp.ndarray,
-                 c0: jnp.ndarray, *, init_mask: jnp.ndarray, epsilon: int,
+                 c0, *, init_mask: jnp.ndarray,
+                 epsilon: Optional[int] = None,
+                 window: Optional[DeviceWindow] = None,
+                 event_ts: Optional[jnp.ndarray] = None,
                  start_pos: Union[int, jnp.ndarray] = 0,
                  valid_counts: Optional[jnp.ndarray] = None,
                  impl: str = "fused", use_pallas: bool = True,
@@ -260,30 +269,56 @@ def cer_pipeline(attrs: jnp.ndarray,
     (steps past it are exact no-ops for that lane).  The fused Pallas kernel
     and the fused-XLA/ref path support both; the legacy unfused kernels are
     scalar-only, so per-lane calls on that impl route to the XLA path.
+
+    Windows (DESIGN.md §9): pass either the legacy ``epsilon=`` (count
+    window) or a :class:`repro.kernels.window.DeviceWindow` as ``window=``.
+    Time windows additionally take ``event_ts`` ``(T, B) f32`` per-event
+    timestamps, and ``c0`` is the ``{"C", "ts", "ovf"}`` state pytree
+    (:func:`repro.kernels.window.init_state`) — the returned state has the
+    same form.  Time windows route to the fused Pallas kernel or the
+    fused-XLA computation (the legacy unfused kernels are count-only).
     """
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if window is None:
+        if epsilon is None:
+            raise ValueError("cer_pipeline needs epsilon= or window=")
+        window = DeviceWindow.events(epsilon)
+    timed = window.is_time
+    epsilon = window.epsilon
+    if timed and event_ts is None:
+        raise ValueError("time windows need the event_ts (T, B) operand")
     T, B, A = attrs.shape
+    if timed:
+        event_ts = jnp.asarray(event_ts, jnp.float32)
+        if event_ts.shape != (T, B):
+            # (T, B) like attrs — a transposed operand would fail deep in
+            # the kernel, or silently mis-evict when T == B
+            raise ValueError(f"event_ts must be (T, B) = ({T}, {B}) like "
+                             f"attrs, got {event_ts.shape}")
     # validate before impl routing: the XLA fallbacks ignore t_tile, but a
     # value invalid for the kernel must fail on every backend, not only TPU
     if t_tile is not None and T % t_tile != 0:
         raise ValueError(f"t_tile must divide the chunk length: {t_tile} "
                          f"vs T={T}")
     NC, S, _ = m_all.shape
-    W = c0.shape[1]
+    c_ring = c0["C"] if timed else c0
+    W = c_ring.shape[1]
     per_lane = _is_lane_vector(start_pos) or valid_counts is not None
 
     if impl == "ref" or (impl == "fused" and not use_pallas):
         return _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0,
                              init_mask, epsilon, start_pos, valid_counts,
-                             return_trace)
+                             return_trace, window=window, event_ts=event_ts)
 
     if impl == "unfused":
-        if per_lane:
+        if per_lane or timed:
             # the legacy 3-dispatch kernels take a scalar SMEM offset only
+            # and implement the count eviction rule only
             return _pipeline_xla(attrs, specs, class_of, m_all, finals_q,
                                  c0, init_mask, epsilon, start_pos,
-                                 valid_counts, return_trace)
+                                 valid_counts, return_trace, window=window,
+                                 event_ts=event_ts)
         # legacy 3-dispatch path: bits kernel → gather → scan kernel
         bits = bitvector(attrs.reshape(T * B, A), specs,
                          use_pallas=use_pallas, interpret=interpret)
@@ -312,11 +347,13 @@ def cer_pipeline(attrs: jnp.ndarray,
                 + b_tile * W * NQp             # per_q temp
                 + b_tile * t_tile * (A + NQp)  # attrs + matches blocks
                 + (2 + (t_tile if return_trace else 0))
-                * b_tile)                      # start/valid[/trace block]
+                * b_tile                       # start/valid[/trace block]
+                + (3 * b_tile * W + 4 * b_tile + b_tile * t_tile
+                   if timed else 0))           # ts ring ×3 + ovf + ts block
     if W % 8 != 0 or vmem > VMEM_BYTES:
         return _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0,
                              init_mask, epsilon, start_pos, valid_counts,
-                             return_trace)
+                             return_trace, window=window, event_ts=event_ts)
 
     Bp = _pad_to(B, b_tile)
     a_pad = jnp.pad(jnp.moveaxis(attrs, 0, 1),
@@ -326,24 +363,39 @@ def cer_pipeline(attrs: jnp.ndarray,
     f_pad = jnp.pad(finals_q.astype(jnp.float32),
                     ((0, NQp - NQ), (0, Sp - S)))
     i_pad = jnp.pad(init_mask.astype(jnp.float32), (0, Sp - S))[None, :]
-    c_pad = jnp.pad(c0, ((0, Bp - B), (0, 0), (0, Sp - S)))
+    c_pad = jnp.pad(c_ring, ((0, Bp - B), (0, 0), (0, Sp - S)))
     start_lanes = _lane_arr(start_pos, B, Bp, fill=0)
     valid_lanes = _lane_arr(T if valid_counts is None else valid_counts,
                             B, Bp, fill=0)       # padded lanes are dead
+    time_kw = {}
+    if timed:
+        time_kw = dict(
+            time_size=float(window.size),
+            event_ts=jnp.pad(jnp.asarray(event_ts, jnp.float32).T,
+                             ((0, Bp - B), (0, 0))),
+            ts_ring0=jnp.pad(c0["ts"], ((0, Bp - B), (0, 0)),
+                             constant_values=TS_EMPTY),
+            ovf0=jnp.pad(c0["ovf"].astype(jnp.int32)[:, None],
+                         ((0, Bp - B), (0, 0))))
 
     res = fused_scan_pallas(
         a_pad, ind_pad, m_pad, f_pad, i_pad, c_pad, start_lanes, valid_lanes,
         specs=tuple(specs), epsilon=epsilon, b_tile=b_tile, t_tile=t_tile,
-        interpret=interpret, emit_trace=return_trace)
+        interpret=interpret, emit_trace=return_trace, **time_kw)
     matches, c_fin = res[0], res[1]
-    out = jnp.moveaxis(matches[:B, :, :NQ], 0, 1), c_fin[:B, :, :S]
+    c_out = c_fin[:B, :, :S]
+    if timed:
+        c_out = {"C": c_out, "ts": res[2][:B],
+                 "ovf": res[3][:B, 0].astype(bool)}
+    out = jnp.moveaxis(matches[:B, :, :NQ], 0, 1), c_out
     if return_trace:
-        return out + (res[2][:B].T,)
+        return out + (res[-1][:B].T,)
     return out
 
 
 def arena_block_update(cells0, class_ids, hits, start, valid_counts, *,
                        lay, ptab, finals_sq, n_seg: int = 1,
+                       expire: Optional[jnp.ndarray] = None,
                        use_pallas: bool = False,
                        interpret: Optional[bool] = None, b_tile: int = 8):
     """Block tECS builder over one chunk — Pallas kernel vs jnp oracle.
@@ -353,7 +405,9 @@ def arena_block_update(cells0, class_ids, hits, start, valid_counts, *,
     hits: (T, B, Q) bool/int32.  start/valid_counts: (B,) int32.  ptab:
     (C, S, K, 3) packed predecessor tables
     (:func:`repro.kernels.ref.pack_pred_tables`).  n_seg: parallel chunk
-    segments (:func:`repro.kernels.ref.pick_segments`).  Returns
+    segments (:func:`repro.kernels.ref.pick_segments`).  expire: optional
+    (T, B, W) precomputed time-window eviction masks (DESIGN.md §9; None
+    keeps the count-window single-slot rule).  Returns
     ``(cells_T, valid, left, right, roots)`` — record arrays (T, B, M) on
     virtual node ids; allocation and the store update happen vectorized
     downstream (``tecs_arena.arena_scan_block``).
@@ -372,12 +426,14 @@ def arena_block_update(cells0, class_ids, hits, start, valid_counts, *,
     if not use_pallas or (interpret is None and not _on_tpu()):
         return ref.arena_build_ref(cells0, class_ids, hits, start,
                                    valid_counts, lay=lay, ptab=ptab,
-                                   finals_sq=finals_sq, n_seg=n_seg)
+                                   finals_sq=finals_sq, n_seg=n_seg,
+                                   expire=expire)
     interpret = False if interpret is None else interpret
     xs, cells0_seg = ref.segment_operands(cells0, class_ids, hits, start,
                                           valid_counts, lay=lay,
-                                          n_seg=n_seg)
-    cls_s, hit_s, j_s, live_s, vb_s = xs
+                                          n_seg=n_seg, expire=expire)
+    cls_s, hit_s, j_s, live_s, vb_s = xs[:5]
+    exp_s = xs[5] if len(xs) > 5 else None
     Bn = cls_s.shape[1]
     Bp = _pad_to(Bn, b_tile)
     pads = ((0, Bp - Bn), (0, 0), (0, 0))
@@ -392,7 +448,8 @@ def arena_block_update(cells0, class_ids, hits, start, valid_counts, *,
         lane(cls_s), lane(hit_s), lane(j_s),
         lane(live_s),              # padded lanes are dead (live = 0)
         lane(vb_s), lay=lay, ptab=ptab, finals_sq=finals_sq,
-        b_tile=b_tile, interpret=interpret)
+        b_tile=b_tile, interpret=interpret,
+        expire_s=None if exp_s is None else lane(exp_s))
     recs = tuple(jnp.moveaxis(y[:Bn], 0, 1) for y in recs)
     roots = jnp.moveaxis(roots[:Bn], 0, 1)
     cells_fin = tuple(c[:Bn] for c in cells_fin)
@@ -401,7 +458,8 @@ def arena_block_update(cells0, class_ids, hits, start, valid_counts, *,
 
 
 def _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0, init_mask,
-                  epsilon, start_pos, valid_counts=None, return_trace=False):
+                  epsilon, start_pos, valid_counts=None, return_trace=False,
+                  window=None, event_ts=None):
     """Fused pipeline as one XLA computation (also the ``ref`` oracle).
 
     Same dataflow as the fused kernel: under a single jit the ``bits`` /
@@ -415,7 +473,9 @@ def _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0, init_mask,
     c_fin, matches = ref.cea_scan_multi_ref(c0, m_all, class_ids, finals_q,
                                             init_mask, epsilon,
                                             start_pos=start_pos,
-                                            valid_counts=valid_counts)
+                                            valid_counts=valid_counts,
+                                            window=window,
+                                            event_ts=event_ts)
     if return_trace:
         return matches, c_fin, class_ids
     return matches, c_fin

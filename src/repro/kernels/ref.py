@@ -115,11 +115,11 @@ def cea_scan_ref(C0: jnp.ndarray, M_all: jnp.ndarray, class_ids: jnp.ndarray,
     return C_T, matches
 
 
-def cea_scan_multi_ref(C0: jnp.ndarray, M_all: jnp.ndarray,
+def cea_scan_multi_ref(C0, M_all: jnp.ndarray,
                        class_ids: jnp.ndarray, finals_q: jnp.ndarray,
                        init_mask: jnp.ndarray, epsilon: int,
-                       start_pos=0, valid_counts=None
-                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                       start_pos=0, valid_counts=None,
+                       window=None, event_ts=None):
     """Packed multi-query scan oracle (see vector/multiquery.py).
 
     finals_q: (Q, S) per-query final-state masks; init_mask: (S,) multi-hot
@@ -133,7 +133,69 @@ def cea_scan_multi_ref(C0: jnp.ndarray, M_all: jnp.ndarray,
     each lane that carries real events this chunk: steps ``t ≥ n_b`` are
     no-ops for lane ``b`` (state unchanged, zero matches, position does not
     advance).
+
+    Time windows (DESIGN.md §9): pass ``window`` (a
+    :class:`repro.kernels.window.DeviceWindow` with ``kind='time'``) and
+    ``event_ts`` ``(T, B) f32``; ``C0`` is then the
+    ``{"C", "ts", "ovf"}`` state pytree — eviction masks every slot whose
+    start timestamp left the window, and a seed slot still live inside the
+    window latches the lane's rate-bound ``ovf`` flag.  Count windows keep
+    the classic single-slot eviction (the degenerate case ``ts ≡
+    position``), bare-array state, and this exact code path.
     """
+    timed = window is not None and window.is_time
+    if not timed:
+        return _scan_multi_count_ref(C0, M_all, class_ids, finals_q,
+                                     init_mask, epsilon, start_pos,
+                                     valid_counts)
+    C0_, tsr0, ovf0 = C0["C"], C0["ts"], C0["ovf"]
+    B, W, S = C0_.shape
+    T = class_ids.shape[0]
+    size = jnp.float32(window.size)
+    fq = finals_q.astype(C0_.dtype)
+    im = init_mask.astype(C0_.dtype)
+    start = jnp.broadcast_to(jnp.asarray(start_pos, jnp.int32), (B,))
+    valid = (None if valid_counts is None
+             else jnp.asarray(valid_counts, jnp.int32))
+    arange_w = jnp.arange(W)
+
+    def step(carry, inputs):
+        C, tsr, ovf = carry
+        t, ids, ts_t = inputs
+        M = M_all[ids]
+        j = start + t                                              # (B,)
+        seed = arange_w[None, :] == (j % W)[:, None]               # (B, W)
+        expire = tsr < ts_t[:, None] - size                       # (B, W)
+        # rate-bound overflow: the seed slot's previous start is still live
+        over = jnp.any(seed & ~expire, axis=1)                    # (B,)
+        clear = (seed | expire).astype(C.dtype)
+        C2 = C * (1.0 - clear)[:, :, None] \
+            + seed.astype(C.dtype)[:, :, None] * im[None, None, :]
+        C2 = jnp.einsum("bws,bst->bwt", C2, M)
+        m = jnp.einsum("bws,qs->bq", C2, fq)
+        tsr2 = jnp.where(seed, ts_t[:, None], tsr)
+        if valid is not None:
+            live = t < valid                                       # (B,)
+            lf = live.astype(C.dtype)
+            C2 = C2 * lf[:, None, None] + C * (1.0 - lf)[:, None, None]
+            m = m * lf[:, None]
+            tsr2 = jnp.where(live[:, None], tsr2, tsr)
+            over = over & live
+        return (C2, tsr2, ovf | over), m
+
+    ts_steps = jnp.arange(T, dtype=jnp.int32)
+    ev_ts = jnp.asarray(event_ts, jnp.float32)
+    (C_T, tsr_T, ovf_T), matches = jax.lax.scan(
+        step, (C0_, tsr0, ovf0), (ts_steps, class_ids, ev_ts))
+    return {"C": C_T, "ts": tsr_T, "ovf": ovf_T}, matches
+
+
+def _scan_multi_count_ref(C0: jnp.ndarray, M_all: jnp.ndarray,
+                          class_ids: jnp.ndarray, finals_q: jnp.ndarray,
+                          init_mask: jnp.ndarray, epsilon: int,
+                          start_pos=0, valid_counts=None
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Count-window scan body (the unchanged classic eviction rule)."""
     B, W, S = C0.shape
     assert W >= epsilon + 1
     T = class_ids.shape[0]
@@ -441,19 +503,30 @@ def _state_rank(states, S: int) -> jnp.ndarray:
     return rank
 
 
-def _clear_seed(cells, j, live, vbase, *, lay: ArenaBlockLayout):
+def _clear_seed(cells, j, live, vbase, *, lay: ArenaBlockLayout,
+                expire_t=None):
     """Ring maintenance for one event: expire + seed ``new_bottom(j)``.
 
     cells: ``(cid, cisU, cleft, cright)`` (B, W, S) int32; j/vbase: (B,)
     int32; live: (B,) bool.  Returns the fold-input table (seed bottom
     visible as a predecessor source; non-live lanes untouched).
+
+    ``expire_t`` (optional, (B, W) bool) overrides the count-window
+    single-slot rule with a precomputed eviction mask — the time-window
+    path (DESIGN.md §9): slots whose start timestamp left the window, any
+    number of them per step.  The mask is computed in closed form outside
+    the scan (``repro.vector.tecs_arena`` via :func:`arena_slot_starts`),
+    so the builder recurrence carries no timestamp ring of its own.
     """
     cid, cisU, cleft, cright = cells
     W, S = lay.W, lay.S
     arange_w = jax.lax.iota(jnp.int32, W)
     seed = (arange_w[None, :] == (j % W)[:, None]) & live[:, None]
-    expire = (arange_w[None, :]
-              == ((j - lay.epsilon - 1) % W)[:, None]) & live[:, None]
+    if expire_t is None:
+        expire = (arange_w[None, :]
+                  == ((j - lay.epsilon - 1) % W)[:, None]) & live[:, None]
+    else:
+        expire = (expire_t > 0) & live[:, None]
     cid = jnp.where((seed | expire)[:, :, None], ARENA_NULL, cid)
     iota_s = jax.lax.iota(jnp.int32, S)
     init_oh = jnp.zeros((S,), bool)
@@ -614,21 +687,24 @@ def _roots_step(cells_t, hit_t, j, vbase, *, lay: ArenaBlockLayout,
 
 def arena_block_step(cells, cls_t, hit_t, j, live, vbase, *,
                      lay: ArenaBlockLayout, ptab, finals_sq,
-                     sparse_roots: bool = False):
+                     sparse_roots: bool = False, expire_t=None):
     """One event of the block builder: recurrence + record emission.
 
     cells: four (B, W, S) int32 arrays (id / is-union / left / right).
     cls_t/j/vbase: (B,) int32 (``vbase`` is per-lane: segmented execution
     places lanes at different stream offsets).  hit_t: (B, Q) int32.
-    live: (B,) bool.  Returns ``(cells', (valid, left, right), root)`` —
-    the per-event record rows (B, M) in slot-layout order and root (B, Q).
+    live: (B,) bool.  ``expire_t`` (optional, (B, W)): precomputed
+    time-window eviction mask (see :func:`_clear_seed`).  Returns
+    ``(cells', (valid, left, right), root)`` — the per-event record rows
+    (B, M) in slot-layout order and root (B, Q).
 
     ``sparse_roots`` wraps the root construction in a ``lax.cond``: steps
     without any hit skip the fold/chain work entirely at runtime (hits are
     sparse in most streams).  Pallas kernels keep it off — ``cond`` does
     not lower there — and pay the roots unconditionally.
     """
-    cells_in = _clear_seed(cells, j, live, vbase, lay=lay)
+    cells_in = _clear_seed(cells, j, live, vbase, lay=lay,
+                           expire_t=expire_t)
     acc, pieces = _fold_cells(cells_in, cls_t, live, vbase, lay=lay,
                               ptab=ptab)
     lv = live[:, None, None]
@@ -696,15 +772,18 @@ def pick_segments(T: int, W: int, max_seg: int = 8) -> int:
 
 def arena_build_ref(cells0, class_ids, hits, start, valid_counts, *,
                     lay: ArenaBlockLayout, ptab, finals_sq,
-                    n_seg: int = 1):
+                    n_seg: int = 1, expire=None):
     """Block tECS builder over one chunk — the pure-jnp oracle.
 
     cells0: four (B, W, S) int32 arrays (chunk-start cell table).
     class_ids: (T, B) int32.  hits: (T, B, Q) int32/bool.
     start/valid_counts: (B,) int32.  n_seg: parallel segments
-    (:func:`pick_segments`).  Returns ``(cells_T, valid, left, right,
-    roots)`` with the record arrays (T, B, M) int32 in slot-layout order
-    and roots (T, B, Q), on virtual ids.
+    (:func:`pick_segments`).  ``expire`` (optional, (T, B, W) bool):
+    precomputed per-step time-window eviction masks (DESIGN.md §9; count
+    windows pass None and keep the closed-form single-slot rule).
+    Returns ``(cells_T, valid, left, right, roots)`` with the record
+    arrays (T, B, M) int32 in slot-layout order and roots (T, B, Q), on
+    virtual ids.
 
     The Pallas kernel path (kernels/arena_update.py) runs the same step
     over the same segmented operands with the cell table in VMEM; the
@@ -712,32 +791,35 @@ def arena_build_ref(cells0, class_ids, hits, start, valid_counts, *,
     :func:`assemble_records`.
     """
     xs, cells0_seg = segment_operands(cells0, class_ids, hits, start,
-                                      valid_counts, lay=lay, n_seg=n_seg)
-    cls_s, hit_s, j_s, live_s, vb_s = xs
+                                      valid_counts, lay=lay, n_seg=n_seg,
+                                      expire=expire)
 
     def step(cells, x):
-        cls_t, hit_t, j, live, vb = x
+        cls_t, hit_t, j, live, vb = x[:5]
+        exp_t = x[5] if len(x) > 5 else None
         out, recs, root = arena_block_step(
             cells, cls_t, hit_t, j, live, vb, lay=lay, ptab=ptab,
-            finals_sq=finals_sq, sparse_roots=True)
+            finals_sq=finals_sq, sparse_roots=True, expire_t=exp_t)
         return out, recs + (root,)
 
-    cells_fin, ys = jax.lax.scan(
-        step, cells0_seg, (cls_s, hit_s, j_s, live_s, vb_s))
+    cells_fin, ys = jax.lax.scan(step, cells0_seg, xs)
     return assemble_records(cells_fin, ys[:3], ys[3],
                             class_ids.shape[0], class_ids.shape[1],
                             lay=lay, n_seg=n_seg)
 
 
 def segment_operands(cells0, class_ids, hits, start, valid_counts, *,
-                     lay: ArenaBlockLayout, n_seg: int):
+                     lay: ArenaBlockLayout, n_seg: int, expire=None):
     """Build the (steps, n_seg·B, …) scan operands for segmented execution.
 
     Segment g owns global steps [g·G, (g+1)·G) and runs W extra replay
     steps before them (segment 0 replays into the void: those steps are
     dead, its start cells are the carried chunk-start table; later
-    segments start from empty cells).  Returns ``((cls, hit, j, live,
-    vbase), cells0_seg)``.
+    segments start from empty cells).  ``expire`` (optional, (T, B, W))
+    appends the precomputed time-eviction mask as a sixth operand — it is
+    closed-form in the absolute event index, so segment replays index the
+    same global rows and reproduce the handoff state exactly.  Returns
+    ``((cls, hit, j, live, vbase[, expire]), cells0_seg)``.
     """
     T, B = class_ids.shape
     W = lay.W
@@ -748,7 +830,10 @@ def segment_operands(cells0, class_ids, hits, start, valid_counts, *,
         j = start[None, :] + ts[:, None]
         live = ts[:, None] < valid_counts[None, :]
         vb = jnp.broadcast_to((lay.voffset + ts * lay.M)[:, None], (T, B))
-        return (class_ids, hits, j, live, vb), tuple(cells0)
+        xs = (class_ids, hits, j, live, vb)
+        if expire is not None:
+            xs = xs + (jnp.asarray(expire).astype(jnp.int32),)
+        return xs, tuple(cells0)
     assert T % n_seg == 0 and T // n_seg >= W, (T, n_seg, W)
     G = T // n_seg
     steps = W + G
@@ -770,7 +855,10 @@ def segment_operands(cells0, class_ids, hits, start, valid_counts, *,
     cells0_seg = tuple(
         jnp.concatenate([c0] + [n0] * (n_seg - 1), axis=0)
         for c0, n0 in zip(cells0, null_cells))
-    return (seg(class_ids), seg(hits), j, live, vb), cells0_seg
+    xs = (seg(class_ids), seg(hits), j, live, vb)
+    if expire is not None:
+        xs = xs + (seg(jnp.asarray(expire).astype(jnp.int32)),)
+    return xs, cells0_seg
 
 
 def assemble_records(cells_fin, recs, roots, T, B, *,
@@ -796,17 +884,19 @@ def assemble_records(cells_fin, recs, roots, T, B, *,
     return cells_T, valid, left, right, roots
 
 
-def arena_slot_starts(sstart0, gpos, start, valid_counts, *,
-                      lay: ArenaBlockLayout):
+def arena_slot_starts(sstart0, gpos, start, valid_counts, *, W: int):
     """(T, B, W) per-step slot-start table, in closed form (no scan).
 
     Slot w at step t was last seeded at step ``t' = t_eff − ((start +
     t_eff − w) mod W)`` with ``t_eff = min(t, valid−1)`` (dead steps never
     seed); if that is negative the slot kept its chunk-start label
-    ``sstart0``.  Feeds the ``max_start`` decode of the store update.
+    ``sstart0``.  Feeds the ``max_start`` decode of the store update, and —
+    fed with event *timestamps* instead of positions — the closed-form
+    per-slot timestamp table behind the time-window eviction masks
+    (DESIGN.md §9): seeding is position-driven in both window modes, so
+    the same recurrence-free decode applies.
     """
     T, B = gpos.shape
-    W = lay.W
     ts = jnp.arange(T, dtype=jnp.int32)[:, None, None]     # (T, 1, 1)
     t_eff = jnp.minimum(ts, jnp.maximum(valid_counts, 0)[None, :, None] - 1)
     w = jnp.arange(W, dtype=jnp.int32)[None, None, :]

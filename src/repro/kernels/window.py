@@ -1,0 +1,260 @@
+"""First-class device windows: one `DeviceWindow` drives every layer.
+
+CEQL's ``WITHIN`` clause (paper §2–3) is either count-based (``WITHIN n
+events``) or time-based (``WITHIN 30000 [stock_time]``, ``WITHIN 5
+minutes``).  The host engine always honored both
+(:class:`repro.core.engine.WindowSpec`); the device stack historically only
+understood a count window passed as a manual ``epsilon=`` kwarg that was
+disconnected from the query's parsed clause.  This module closes that gap
+(DESIGN.md §9): a compiled query's ``WindowSpec`` resolves into ONE static
+:class:`DeviceWindow` descriptor that the encoder, all kernel generations,
+the streaming/partitioned runtimes, and the tECS arena consume.
+
+Unified ring semantics
+----------------------
+The state ring ``C[B, W, S]`` is indexed by ``start mod W`` in both modes;
+*seeding* is always position-driven (event ``j`` seeds slot ``j mod W``).
+Only *eviction* differs:
+
+* ``events`` — the classic rule: exactly the start that just left the
+  window, slot ``(j - ε - 1) mod W``, expires each step (with ``W ≥ ε+1``
+  that is the unique start older than ``j - ε``).
+* ``time``  — a per-slot start-timestamp ring ``ts[B, W]`` accompanies the
+  counts; at event ``j`` with timestamp ``τ_j`` every slot with
+  ``ts < τ_j - size`` masks to zero (vectorized, several slots may expire
+  at once under non-uniform gaps).  Count windows are the degenerate case
+  ``ts ≡ position, size = ε`` — the masked rule evicts exactly the same
+  slots, so one kernel serves both (the count specialization keeps the
+  closed-form one-hot and carries no timestamp ring).
+
+``W`` is then a **rate bound** (``max_window_events``): at most ``W`` starts
+can be simultaneously live.  When event ``j`` must seed a slot whose
+previous start is still inside the time window (more than ``W`` live
+starts), the lane's ``ovf`` flag latches and the slot is clobbered —
+recognition continues best-effort, mirroring the tECS arena's overflow
+policy (DESIGN.md §7).  Count windows never overflow (``W ≥ ε+1`` by
+construction).
+
+Timestamps are ``f32`` on device; the host engine compares float64.  Parity
+is exact whenever timestamp values and the window size are exactly
+representable in f32 (e.g. integer ticks below 2^24) — the paper's stock
+benchmarks use integer milliseconds.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass
+from typing import Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+#: default rate bound (ring slots) for time windows when the caller gives
+#: no ``max_window_events`` — sized like a mid-range count window.
+DEFAULT_MAX_WINDOW_EVENTS = 64
+
+
+def _pad8(x: int) -> int:
+    """Pad to the f32 sublane width (shared with ops.ring_size)."""
+    return ((x + 7) // 8) * 8
+
+
+@dataclass(frozen=True)
+class DeviceWindow:
+    """Static window descriptor resolved from a query's ``WindowSpec``.
+
+    kind:       'events' | 'time'
+    size:       ε for count windows; the time span for time windows
+    time_attr:  read timestamps from this attribute (time windows; None ⇒
+                event arrival timestamps, falling back to stream position)
+    ring:       ring slots W (sublane-padded).  For count windows
+                ``W ≥ ε+1``; for time windows W is the rate bound
+                ``max_window_events`` (padding only widens it).
+    """
+
+    kind: str
+    size: float
+    time_attr: Optional[str] = None
+    ring: int = 8
+
+    def __post_init__(self):
+        if self.kind not in ("events", "time"):
+            raise ValueError(f"window kind must be 'events' or 'time', "
+                             f"got {self.kind!r}")
+        if self.kind == "events" and self.ring < int(self.size) + 1:
+            raise ValueError(f"ring {self.ring} < epsilon+1 "
+                             f"({int(self.size) + 1})")
+
+    # ------------------------------------------------------------------
+    @property
+    def is_time(self) -> bool:
+        return self.kind == "time"
+
+    @property
+    def epsilon(self) -> int:
+        """Count bound consumed by ring arithmetic and the arena chain.
+
+        For count windows this is the query's ε.  For time windows it is
+        ``ring - 1``: every live start sits within the last ``ring``
+        positions (the rate bound), so ``ring - 1`` is the correct chain /
+        threshold extent — time eviction itself never uses it.
+        """
+        return int(self.size) if self.kind == "events" else self.ring - 1
+
+    @property
+    def max_window_events(self) -> int:
+        """Most starts that can be simultaneously live (the rate bound)."""
+        return self.ring
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def events(epsilon: int) -> "DeviceWindow":
+        return DeviceWindow("events", float(int(epsilon)),
+                            ring=_pad8(int(epsilon) + 1))
+
+    @staticmethod
+    def time(size: float, time_attr: Optional[str] = None,
+             max_window_events: Optional[int] = None) -> "DeviceWindow":
+        mwe = (DEFAULT_MAX_WINDOW_EVENTS if max_window_events is None
+               else int(max_window_events))
+        if mwe < 1:
+            raise ValueError(f"max_window_events must be ≥ 1, got {mwe}")
+        return DeviceWindow("time", float(size), time_attr, ring=_pad8(mwe))
+
+
+def resolve_window(spec, *, epsilon: Optional[int] = None,
+                   max_window_events: Optional[int] = None) -> DeviceWindow:
+    """Resolve a query's parsed ``WindowSpec`` (+ legacy kwargs) on device.
+
+    The query's ``WITHIN`` clause is authoritative:
+
+    * ``WITHIN n events``  → count window ε = n.  A legacy ``epsilon=`` may
+      still be passed but must agree — a contradiction raises (the old
+      behaviour silently evaluated the kwarg and ignored the clause).
+    * ``WITHIN t [attr]`` / ``WITHIN t seconds`` → time window;
+      ``epsilon=`` contradicts it by *kind* and raises.
+      ``max_window_events`` sizes the rate bound (default
+      ``DEFAULT_MAX_WINDOW_EVENTS``).
+    * no ``WITHIN``        → ``epsilon=`` is accepted as a deprecation shim
+      (warns: put the window in the query); without it there is no bounded
+      window to evaluate and the call raises.
+
+    ``spec`` is a :class:`repro.core.engine.WindowSpec` (or None).
+    """
+    kind = getattr(spec, "kind", "none") if spec is not None else "none"
+    if kind != "time" and max_window_events is not None:
+        raise ValueError(
+            "max_window_events= sizes the rate bound of a TIME window; "
+            "this query's window is count-based (the ring is sized from "
+            "its epsilon) — drop the kwarg or declare a time WITHIN "
+            "(DESIGN.md §9)")
+    if kind == "events":
+        n = int(spec.size)
+        if epsilon is not None and int(epsilon) != n:
+            raise ValueError(
+                f"epsilon={int(epsilon)} contradicts the query's own "
+                f"'WITHIN {n} events' clause — drop the epsilon= kwarg "
+                "(the query window now drives device evaluation; "
+                "DESIGN.md §9)")
+        return DeviceWindow.events(n)
+    if kind == "time":
+        if epsilon is not None:
+            raise ValueError(
+                f"epsilon={int(epsilon)} is a count window but the query "
+                f"declares a time window (WITHIN {spec.size:g}"
+                + (f" [{spec.time_attr}]" if spec.time_attr else " seconds")
+                + ") — drop the epsilon= kwarg; size the ring with "
+                  "max_window_events= instead (DESIGN.md §9)")
+        return DeviceWindow.time(spec.size, spec.time_attr,
+                                 max_window_events)
+    # kind == 'none'
+    if epsilon is None:
+        raise ValueError(
+            "device engines need a bounded window: the query has no WITHIN "
+            "clause and no epsilon= was given.  Add 'WITHIN n events' (or a "
+            "time window) to the query")
+    warnings.warn(
+        "passing epsilon= for a query without a WITHIN clause is "
+        "deprecated — declare the window in the query ('WITHIN "
+        f"{int(epsilon)} events'); the kwarg remains only as a shim",
+        DeprecationWarning, stacklevel=3)
+    return DeviceWindow.events(int(epsilon))
+
+
+# ---------------------------------------------------------------------------
+# window-aware state pytrees
+# ---------------------------------------------------------------------------
+
+#: timestamp-ring fill for never-seeded slots: reads as "expired forever"
+TS_EMPTY = -np.inf
+
+State = Union[jnp.ndarray, dict]
+
+
+def init_state(window: DeviceWindow, batch: int, num_states: int) -> State:
+    """Fresh per-window scan state.
+
+    Count windows keep the bare ``(B, W, S)`` f32 ring (zero churn for the
+    existing engines and tests).  Time windows carry a pytree::
+
+        {"C": (B, W, S) f32, "ts": (B, W) f32, "ovf": (B,) bool}
+
+    ``ts`` is the per-slot start-timestamp ring (``TS_EMPTY`` = never
+    seeded); ``ovf`` the latched per-lane rate-bound overflow flag.
+    """
+    C = jnp.zeros((batch, window.ring, num_states), jnp.float32)
+    if not window.is_time:
+        return C
+    return {"C": C,
+            "ts": jnp.full((batch, window.ring), TS_EMPTY, jnp.float32),
+            "ovf": jnp.zeros((batch,), bool)}
+
+
+def state_counts(state: State) -> jnp.ndarray:
+    """The ``(B, W, S)`` count ring of either state form."""
+    return state["C"] if isinstance(state, dict) else state
+
+
+def window_overflow(state: State) -> np.ndarray:
+    """Per-lane latched rate-bound overflow flags (all-False for count
+    windows, which cannot overflow)."""
+    if isinstance(state, dict):
+        if "ovf" in state:
+            return np.asarray(state["ovf"])
+        # nested engine pytrees ({"C": <window state>, ...})
+        return window_overflow(state["C"])
+    return np.zeros(state.shape[0], bool)
+
+
+def require_count_scan(window: DeviceWindow) -> None:
+    """Guard for the legacy unfused-scan entry points (count-only)."""
+    if window.is_time:
+        raise ValueError("scan() drives the legacy count-window kernels; "
+                         "time-window queries evaluate through "
+                         "pipeline()/run() (DESIGN.md §9)")
+
+
+def audit_monotone_ts(ts: np.ndarray, last: Optional[np.ndarray] = None
+                      ) -> np.ndarray:
+    """Raise unless timestamps are non-decreasing along the T axis.
+
+    The time-eviction rule (and the host engine's binary search) assume
+    stream order = time order; silently accepting a regression would
+    corrupt window semantics, so feeds audit it.  ``ts`` is ``(T, B)`` (or
+    ``(T,)``); ``last`` carries each lane's previous chunk-final timestamp
+    across feeds.  Returns the new ``last`` row.
+    """
+    ts = np.asarray(ts, np.float32)
+    flat = ts.reshape(ts.shape[0], -1)
+    if not np.isfinite(flat).all():
+        raise ValueError("time-window timestamps must be finite")
+    seq = flat if last is None else np.concatenate(
+        [np.asarray(last, np.float32).reshape(1, -1), flat])
+    if (np.diff(seq, axis=0) < 0).any():
+        t_bad, b_bad = np.argwhere(np.diff(seq, axis=0) < 0)[0]
+        raise ValueError(
+            f"time-window streams must be monotone in time (stream order = "
+            f"time order): timestamp decreases at step {int(t_bad)} of lane "
+            f"{int(b_bad)} (chunk-local; previous-chunk boundary = step 0 "
+            "when carrying over)")
+    return flat[-1].copy()

@@ -1,4 +1,5 @@
 """Device (TPU-native) CER engine: symbolic tables + semiring scan + tECS."""
+from ..kernels.window import DeviceWindow, resolve_window, window_overflow
 from .encoder import EventEncoder
 from .engine import VectorEngine, VectorQueryTables
 from .partitioned import PartitionedStreamingEngine, PartitionStats
@@ -6,7 +7,8 @@ from .streaming import StreamingVectorEngine
 from .symbolic import SymbolicCEA, compile_symbolic
 from .tecs_arena import ArenaOverflow, ArenaSnapshot
 
-__all__ = ["EventEncoder", "VectorEngine", "VectorQueryTables",
-           "PartitionedStreamingEngine", "PartitionStats",
-           "StreamingVectorEngine", "SymbolicCEA", "compile_symbolic",
-           "ArenaOverflow", "ArenaSnapshot"]
+__all__ = ["DeviceWindow", "EventEncoder", "VectorEngine",
+           "VectorQueryTables", "PartitionedStreamingEngine",
+           "PartitionStats", "StreamingVectorEngine", "SymbolicCEA",
+           "compile_symbolic", "ArenaOverflow", "ArenaSnapshot",
+           "resolve_window", "window_overflow"]

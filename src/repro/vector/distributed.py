@@ -150,7 +150,8 @@ def route_by_partition(mesh: Mesh, events: jnp.ndarray, keys: jnp.ndarray,
 
 
 def route_partitioned_chunk(mesh: Mesh, attrs: jnp.ndarray,
-                            keys: jnp.ndarray, positions: jnp.ndarray):
+                            keys: jnp.ndarray, positions: jnp.ndarray,
+                            event_ts: "jnp.ndarray" = None):
     """One chunk of an interleaved stream → shard-owned sub-chunks.
 
     The sharded PARTITION BY layout (DESIGN.md §6): the global lane table is
@@ -161,15 +162,18 @@ def route_partitioned_chunk(mesh: Mesh, attrs: jnp.ndarray,
     sub-chunk with zero scan collectives.
 
     attrs (N, A) f32 | keys (N,) uint32 partition hashes | positions (N,)
-    int32 global stream positions.  Returns ``(attrs', keys', positions',
-    valid, keep)`` where row i of every output belongs to the same event and
-    shard s holds the events it owns.  ``valid`` flags the received rows
-    that carry a real event — bucket padding comes back with the NULL key
-    sentinel, so the local lane router drops it either way.  ``keep``
-    (sender-side) flags events that arrived at their owner: NULL-keyed
-    events are dropped before the exchange (they join no substream and must
-    not consume router capacity), and events past the per-bucket capacity
-    spill and retry on the host, as in MoE dispatch.
+    int32 global stream positions | event_ts (N,) f32 per-event timestamps
+    (time windows only, DESIGN.md §9 — shipped as one more bitcast payload
+    column).  Returns ``(attrs', keys', positions', valid, keep)`` — plus
+    ``ts'`` before ``valid`` when ``event_ts`` was given — where row i of
+    every output belongs to the same event and shard s holds the events it
+    owns.  ``valid`` flags the received rows that carry a real event —
+    bucket padding comes back with the NULL key sentinel, so the local
+    lane router drops it either way.  ``keep`` (sender-side) flags events
+    that arrived at their owner: NULL-keyed events are dropped before the
+    exchange (they join no substream and must not consume router
+    capacity), and events past the per-bucket capacity spill and retry on
+    the host, as in MoE dispatch.
     """
     from ..core.partition import NULL_KEY_HASH
 
@@ -180,14 +184,20 @@ def route_partitioned_chunk(mesh: Mesh, attrs: jnp.ndarray,
     # bitcast so hashes ≥ 2³¹ land on their documented owner
     dest_keys = _bitcast_i32(keys % n_shards)
     ones = jnp.ones_like(positions, dtype=jnp.int32)
-    payload = jnp.stack([_bitcast_i32(keys),
-                         positions.astype(jnp.int32), ones], axis=1)
+    cols = [_bitcast_i32(keys), positions.astype(jnp.int32), ones]
+    if event_ts is not None:
+        cols.append(_bitcast_i32(jnp.asarray(event_ts, jnp.float32)))
+    payload = jnp.stack(cols, axis=1)
     routed, routed_pl, keep = route_by_partition(
         mesh, attrs, dest_keys, payload=payload, drop=is_null)
     valid = routed_pl[:, 2] > 0
     keys_out = jnp.where(valid, _bitcast_u32(routed_pl[:, 0]),
                          jnp.uint32(NULL_KEY_HASH))
-    return routed, keys_out, routed_pl[:, 1], valid, keep
+    out = (routed, keys_out, routed_pl[:, 1])
+    if event_ts is not None:
+        ts_out = jax.lax.bitcast_convert_type(routed_pl[:, 3], jnp.float32)
+        out = out + (ts_out,)
+    return out + (valid, keep)
 
 
 def _bitcast_i32(x: jnp.ndarray) -> jnp.ndarray:

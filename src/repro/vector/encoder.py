@@ -9,7 +9,7 @@ predicate specs for the bit-vector kernel and the event matrices.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -75,6 +75,55 @@ class EventEncoder:
                 out[t, b] = self.encode_event(ev)
         return out
 
+    def event_ts(self, ev: Event, time_attr: Optional[str],
+                 fallback: Optional[float]) -> float:
+        """One event's timestamp, mirroring the host engine's clock rule.
+
+        ``time_attr`` set → read that attribute (``WITHIN 30000
+        [stock_time]``); else the event's arrival ``timestamp``; else the
+        stream position ``fallback`` (None ⇒ raise: the caller has no
+        position-derived clock, e.g. PARTITION BY substreams).
+        """
+        if time_attr is not None:
+            v = ev.get(time_attr)
+            if v is None:
+                raise ValueError(
+                    f"time-window event is NULL on time_attr "
+                    f"{time_attr!r}: {ev!r}")
+            return float(v)
+        if ev.timestamp is not None:
+            return float(ev.timestamp)
+        if fallback is None:
+            raise ValueError(
+                "time-window event carries no timestamp and no time_attr "
+                f"was declared: {ev!r} — assign timestamps (e.g. "
+                "core.events.assign_positions) before feeding")
+        return fallback
+
+    def encode_streams_ts(self, streams: Sequence[Sequence[Event]],
+                          time_attr: Optional[str] = None,
+                          base_pos: Optional[int] = 0
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """Time-window variant: → (attrs (T, B, A) f32, ts (T, B) f32).
+
+        The per-event timestamp operand of the device time window
+        (DESIGN.md §9): from ``time_attr``, else the event's own
+        ``timestamp``, else arrival order ``base_pos + t`` — exactly the
+        host engine's clock (``core.engine.Engine.process``).
+        ``base_pos=None`` disables the arrival-order fallback (no
+        position-derived clock exists, e.g. a traced or per-lane start
+        offset): events must then carry timestamps.
+        """
+        attrs = self.encode_streams(streams)
+        T, B = attrs.shape[:2]
+        ts = np.zeros((T, B), dtype=np.float32)
+        for b, s in enumerate(streams):
+            for t, ev in enumerate(s):
+                ts[t, b] = self.event_ts(
+                    ev, time_attr,
+                    None if base_pos is None else float(base_pos + t))
+        return attrs, ts
+
     def encode_stream_with_keys(self, events: Sequence[Event],
                                 key_attrs: Tuple[str, ...]
                                 ) -> Tuple[np.ndarray, np.ndarray]:
@@ -94,3 +143,26 @@ class EventEncoder:
             out[t] = self.encode_event(ev)
             keys[t] = stable_key_hash(partition_key(ev, key_attrs))
         return out, keys
+
+    def encode_stream_keyed_ts(self, events: Sequence[Event],
+                               key_attrs: Tuple[str, ...],
+                               time_attr: Optional[str] = None
+                               ) -> Tuple[np.ndarray, np.ndarray,
+                                          np.ndarray]:
+        """Keyed encoding + the timestamp operand (time-window PARTITION
+        BY, DESIGN.md §9): → (attrs (T, A), keys (T,) uint32, ts (T,)
+        f32).  There is no position fallback here — a partitioned
+        substream's local positions are only known after routing, so
+        events must carry timestamps (or ``time_attr``), exactly like the
+        host ``PartitionedEngine`` fed through ``assign_positions``.
+        NULL-key events join no substream (the host drops them before
+        ever reading a clock), so they get a NaN placeholder instead of
+        raising — the router never scatters it to a lane and the
+        monotonicity audit skips NULL-key rows.
+        """
+        attrs, keys = self.encode_stream_with_keys(events, key_attrs)
+        ts = np.asarray([np.nan
+                         if partition_key(ev, key_attrs) is None
+                         else self.event_ts(ev, time_attr, None)
+                         for ev in events], dtype=np.float32)
+        return attrs, keys, ts

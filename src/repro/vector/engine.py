@@ -31,9 +31,41 @@ import numpy as np
 from ..core.events import ComplexEvent, Event
 from ..core.query import CompiledQuery, compile_query
 from ..kernels import ops
+from ..kernels import window as wkern
 from . import tecs_arena
 from .encoder import EventEncoder
 from .symbolic import SymbolicCEA, compile_symbolic
+
+
+def encode_windowed(encoder: EventEncoder, window: "wkern.DeviceWindow",
+                    streams, base_pos=0):
+    """(attrs, event_ts | None) for one pre-batched feed, per the window.
+
+    Shared by :class:`VectorEngine` and
+    :class:`~repro.vector.multiquery.MultiQueryEngine`.  Time windows
+    encode the ``(T, B) f32`` timestamp operand and audit stream-order
+    monotonicity (DESIGN.md §9).  ``base_pos`` anchors the arrival-order
+    fallback clock; pass ``None`` when no position-derived clock exists
+    (e.g. a traced / per-lane ``start_pos``) — events must then carry
+    timestamps.
+    """
+    if not window.is_time:
+        return jnp.asarray(encoder.encode_streams(streams)), None
+    attrs, ts = encoder.encode_streams_ts(streams, window.time_attr,
+                                          base_pos=base_pos)
+    wkern.audit_monotone_ts(ts)
+    return jnp.asarray(attrs), jnp.asarray(ts)
+
+
+def _fallback_base(window: "wkern.DeviceWindow", start_pos):
+    """Arrival-order clock anchor for one-shot runs: the scalar start
+    position, or None (no fallback clock) when ``start_pos`` is a traced
+    scalar or a per-lane vector."""
+    if not window.is_time:
+        return 0
+    if isinstance(start_pos, (int, np.integer)):
+        return int(start_pos)
+    return None
 
 
 @dataclass
@@ -51,17 +83,31 @@ class VectorQueryTables:
 
 
 class VectorEngine:
-    """End-to-end device evaluation of a windowed CEQL query over B streams."""
+    """End-to-end device evaluation of a windowed CEQL query over B streams.
 
-    def __init__(self, query: Union[str, CompiledQuery], epsilon: int,
+    The window comes from the compiled query's own ``WITHIN`` clause
+    (:class:`repro.kernels.window.DeviceWindow`, DESIGN.md §9) — count
+    *and* time windows.  ``epsilon=`` survives only as a deprecation shim:
+    it must agree with the query's clause (contradictions raise) and is
+    required when the query has no clause at all (with a warning).  For
+    time windows, ``max_window_events`` sizes the ring's rate bound (most
+    starts simultaneously live; overflow latches per-lane ``ovf``).
+    """
+
+    def __init__(self, query: Union[str, CompiledQuery],
+                 epsilon: Optional[int] = None,
                  use_pallas: bool = True, b_tile: int = 8,
-                 impl: Optional[str] = None, arena_impl: str = "block"):
+                 impl: Optional[str] = None, arena_impl: str = "block",
+                 max_window_events: Optional[int] = None):
         compiled = compile_query(query) if isinstance(query, str) else query
         self.compiled = compiled
         self.symbolic: SymbolicCEA = compile_symbolic(compiled.cea)
         self.encoder = EventEncoder.from_registry(compiled.cea.registry)
-        self.epsilon = int(epsilon)
-        self.ring = ops.ring_size(self.epsilon)
+        self.window = wkern.resolve_window(
+            compiled.query.window, epsilon=epsilon,
+            max_window_events=max_window_events)
+        self.epsilon = self.window.epsilon
+        self.ring = self.window.ring
         self.use_pallas = use_pallas
         self.b_tile = b_tile
         # impl: None → fused when the device path is on, ref otherwise
@@ -85,13 +131,26 @@ class VectorEngine:
         )
 
     # ------------------------------------------------------------------
-    def init_state(self, batch: int) -> jnp.ndarray:
-        return jnp.zeros((batch, self.ring, self.tables.num_states),
-                         dtype=jnp.float32)
+    def init_state(self, batch: int):
+        """Fresh scan state: ``(B, W, S)`` f32 ring for count windows, the
+        ``{"C", "ts", "ovf"}`` pytree for time windows (DESIGN.md §9)."""
+        return wkern.init_state(self.window, batch,
+                                self.tables.num_states)
 
     def encode(self, streams: Sequence[Sequence[Event]]) -> jnp.ndarray:
         """B streams of T events → (T, B, A) f32 attribute tensor."""
         return jnp.asarray(self.encoder.encode_streams(streams))
+
+    def encode_ts(self, streams: Sequence[Sequence[Event]],
+                  base_pos: Optional[int] = 0):
+        """→ (attrs (T, B, A), event_ts (T, B) | None) per the window.
+
+        Time windows also audit that timestamps are monotone in stream
+        order (the eviction rule's precondition, shared with the host
+        engine's binary search).
+        """
+        return encode_windowed(self.encoder, self.window, streams,
+                               base_pos=base_pos)
 
     # ------------------------------------------------------------------
     def classify(self, attrs: jnp.ndarray) -> jnp.ndarray:
@@ -105,36 +164,51 @@ class VectorEngine:
     def scan(self, class_ids: jnp.ndarray, state: jnp.ndarray,
              start_pos: Union[int, jnp.ndarray] = 0
              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """(T, B) class ids × (B, W, S) state → (matches (T, B), state')."""
+        """(T, B) class ids × (B, W, S) state → (matches (T, B), state').
+
+        Legacy count-window entry point (the unfused scan kernels);
+        time-window queries evaluate through :meth:`pipeline`.
+        """
+        wkern.require_count_scan(self.window)
         return ops.cea_scan(class_ids, self.tables.m_all, self.tables.finals,
                             state, epsilon=self.epsilon, start_pos=start_pos,
                             use_pallas=self.use_pallas, b_tile=self.b_tile)
 
-    def pipeline(self, attrs: jnp.ndarray, state: jnp.ndarray,
-                 start_pos: Union[int, jnp.ndarray] = 0
+    def pipeline(self, attrs: jnp.ndarray, state,
+                 start_pos: Union[int, jnp.ndarray] = 0,
+                 event_ts: Optional[jnp.ndarray] = None
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Single-dispatch path: (T, B, A) attrs → (matches (T, B), state')."""
+        """Single-dispatch path: (T, B, A) attrs → (matches (T, B), state').
+
+        Time windows additionally take the ``event_ts (T, B) f32`` operand
+        (:meth:`encode_ts`)."""
         t = self.tables
         matches, state = ops.cer_pipeline(
             attrs, self.encoder.specs, t.class_of, t.class_ind, t.m_all,
             t.finals[None, :], state, init_mask=t.init_mask,
-            epsilon=self.epsilon, start_pos=start_pos, impl=self.impl,
-            use_pallas=self.use_pallas, b_tile=self.b_tile)
+            window=self.window, event_ts=event_ts, start_pos=start_pos,
+            impl=self.impl, use_pallas=self.use_pallas, b_tile=self.b_tile)
         return matches[:, :, 0], state
 
     def run(self, streams: Sequence[Sequence[Event]],
-            state: Optional[jnp.ndarray] = None,
-            start_pos: Union[int, jnp.ndarray] = 0
+            state=None, start_pos: Union[int, jnp.ndarray] = 0
             ) -> Tuple[np.ndarray, jnp.ndarray]:
         """Convenience host→device→host path.
 
         Returns (match counts (T, B) int64, final device state).
         """
-        attrs = self.encode(streams)
+        attrs, ts = self.encode_ts(
+            streams, base_pos=_fallback_base(self.window, start_pos))
         if state is None:
             state = self.init_state(attrs.shape[1])
-        matches, state = self.pipeline(attrs, state, start_pos=start_pos)
+        matches, state = self.pipeline(attrs, state, start_pos=start_pos,
+                                       event_ts=ts)
         return np.asarray(matches).astype(np.int64), state
+
+    def window_overflow(self, state) -> np.ndarray:
+        """Per-lane latched rate-bound flags of a returned state (always
+        all-False for count windows — they cannot overflow)."""
+        return wkern.window_overflow(state)
 
     # ------------------------------------------------------------------
     # device tECS arena: enumeration without host event replay (DESIGN §7)

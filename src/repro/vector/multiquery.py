@@ -28,6 +28,7 @@ from ..core.cea import compile_cel
 from ..core.predicates import AtomRegistry
 from ..core.query import CompiledQuery, compile_query
 from ..kernels import ops
+from ..kernels import window as wkern
 from .encoder import EventEncoder
 from .symbolic import SymbolicCEA, compile_symbolic
 
@@ -47,17 +48,30 @@ class PackedTables:
 class MultiQueryEngine:
     """Evaluate several CEQL queries over the same streams in one scan."""
 
-    def __init__(self, queries: Sequence[str], epsilon: int,
+    def __init__(self, queries: Sequence[str],
+                 epsilon: Optional[int] = None,
                  use_pallas: bool = True, b_tile: int = 8,
-                 impl: Optional[str] = None, arena_impl: str = "block"):
+                 impl: Optional[str] = None, arena_impl: str = "block",
+                 max_window_events: Optional[int] = None):
         registry = AtomRegistry()   # SHARED across queries
         self.compiled: List[CompiledQuery] = [
             compile_query(q, registry) for q in queries]
         self.encoder = EventEncoder.from_registry(registry)
         self.symbolics: List[SymbolicCEA] = [
             compile_symbolic(c.cea) for c in self.compiled]
-        self.epsilon = int(epsilon)
-        self.ring = ops.ring_size(self.epsilon)
+        # one scan = one ring = one window: every packed query must declare
+        # the same WITHIN clause (or none, falling back to the epsilon shim)
+        specs = [c.query.window for c in self.compiled]
+        keys = {(w.kind, w.size, w.time_attr) for w in specs}
+        if len(keys) > 1:
+            raise ValueError(
+                "packed queries share one scan and therefore one window; "
+                f"got {len(keys)} distinct WITHIN clauses: "
+                f"{sorted(keys, key=repr)}")
+        self.window = wkern.resolve_window(
+            specs[0], epsilon=epsilon, max_window_events=max_window_events)
+        self.epsilon = self.window.epsilon
+        self.ring = self.window.ring
         self.use_pallas = use_pallas
         self.b_tile = b_tile
         self.impl = impl if impl is not None else (
@@ -107,8 +121,8 @@ class MultiQueryEngine:
     def packed_states(self) -> int:
         return int(self.tables.m_all.shape[1])
 
-    def init_state(self, batch: int) -> jnp.ndarray:
-        return jnp.zeros((batch, self.ring, self.packed_states), jnp.float32)
+    def init_state(self, batch: int):
+        return wkern.init_state(self.window, batch, self.packed_states)
 
     def classify(self, attrs: jnp.ndarray) -> jnp.ndarray:
         T, B, A = attrs.shape
@@ -125,8 +139,10 @@ class MultiQueryEngine:
         cea_scan's init seeding uses a single init_state index, so we run it
         with the joint trick: block-diag M with a virtual shared start is not
         expressible — instead we seed by index per query via the generalized
-        path below).
+        path below).  Count windows only; time windows evaluate through
+        :meth:`pipeline` (DESIGN.md §9).
         """
+        wkern.require_count_scan(self.window)
         # generalized multi-hot seeding: fold the per-query inits into the
         # scan by replacing the kernel's one-hot seed with init_mask — the
         # XLA path supports it directly; the Pallas kernel is invoked with
@@ -137,20 +153,29 @@ class MultiQueryEngine:
             start_pos=start_pos, use_pallas=self.use_pallas,
             b_tile=self.b_tile)
 
-    def pipeline(self, attrs, state, start_pos=0):
+    def pipeline(self, attrs, state, start_pos=0, event_ts=None):
         """Single-dispatch fused path: (T, B, A) → (matches (T, B, Q), st')."""
         t = self.tables
         return ops.cer_pipeline(
             attrs, self.encoder.specs, t.class_of, t.class_ind, t.m_all,
-            t.finals, state, init_mask=t.init_mask, epsilon=self.epsilon,
-            start_pos=start_pos, impl=self.impl, use_pallas=self.use_pallas,
-            b_tile=self.b_tile)
+            t.finals, state, init_mask=t.init_mask, window=self.window,
+            event_ts=event_ts, start_pos=start_pos, impl=self.impl,
+            use_pallas=self.use_pallas, b_tile=self.b_tile)
 
-    def run(self, streams, state=None, start_pos: int = 0):
-        attrs = jnp.asarray(self.encoder.encode_streams(streams))
+    def encode_ts(self, streams, base_pos: Optional[int] = 0):
+        """(attrs, event_ts | None) per the window — see VectorEngine."""
+        from .engine import encode_windowed
+        return encode_windowed(self.encoder, self.window, streams,
+                               base_pos=base_pos)
+
+    def run(self, streams, state=None, start_pos=0):
+        from .engine import _fallback_base
+        attrs, ts = self.encode_ts(
+            streams, base_pos=_fallback_base(self.window, start_pos))
         if state is None:
             state = self.init_state(attrs.shape[1])
-        matches, state = self.pipeline(attrs, state, start_pos=start_pos)
+        matches, state = self.pipeline(attrs, state, start_pos=start_pos,
+                                       event_ts=ts)
         return np.asarray(matches).astype(np.int64), state
 
     # ------------------------------------------------------------------

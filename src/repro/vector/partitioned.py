@@ -51,6 +51,7 @@ from ..core.events import ComplexEvent, Event
 from ..core.partition import EMPTY_LANE, NULL_KEY_HASH, partition_key
 from ..core.selection import apply_strategy
 from ..kernels import ops
+from ..kernels import window as wkern
 from . import tecs_arena
 from .streaming import StreamingVectorEngine, _quiet_donation
 
@@ -137,8 +138,9 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
     # ------------------------------------------------------------------
     def _part_step_impl(self, attrs: jnp.ndarray, keys: jnp.ndarray,
                         state, chunk_idx: jnp.ndarray,
-                        positions: jnp.ndarray):
+                        positions: jnp.ndarray, event_ts=None):
         self._trace_count += 1  # runs only while tracing (i.e. compiling)
+        timed = self.window.is_time
         T, A = attrs.shape
         L, cap = self.num_lanes, self.lane_cap
         lane_ids = jnp.arange(L)
@@ -188,7 +190,14 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         # from scratch if its key ever returns (fresh state, local pos 0)
         evicted = (lane_keys != state["lane_keys"]) & \
             (state["lane_keys"] != jnp.uint32(EMPTY_LANE))
-        C = jnp.where(evicted[:, None, None], 0.0, state["C"])
+        if timed:
+            Cst = state["C"]
+            C = {"C": jnp.where(evicted[:, None, None], 0.0, Cst["C"]),
+                 "ts": jnp.where(evicted[:, None],
+                                 jnp.float32(wkern.TS_EMPTY), Cst["ts"]),
+                 "ovf": jnp.where(evicted, False, Cst["ovf"])}
+        else:
+            C = jnp.where(evicted[:, None, None], 0.0, state["C"])
         lane_pos = jnp.where(evicted, 0, state["lane_pos"])
 
         # --- 2. dense scatter: pack each lane's events in stream order ----
@@ -203,13 +212,24 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         attrs_lanes = jnp.moveaxis(
             buf[:L * cap].reshape(L, cap, A), 0, 1)            # (cap, L, A)
         n = (onehot[:, :L] * keep[:, None].astype(jnp.int32)).sum(0)
+        ts_lanes = None
+        if timed:
+            # per-lane timestamps ride the same routing scatter as the
+            # attributes (DESIGN.md §9); padding rows are dead steps and
+            # never consult their (zero) timestamp
+            tsbuf = jnp.zeros((L * cap + 1,), jnp.float32).at[slot].set(
+                jnp.asarray(event_ts, jnp.float32))
+            ts_lanes = jnp.moveaxis(
+                tsbuf[:L * cap].reshape(L, cap), 0, 1)         # (cap, L)
 
         # --- 3. fused scan at per-lane substream positions ----------------
         with_arena = self.arena_capacity is not None
+        ts_ring0 = C["ts"] if timed else None
         pipe = ops.cer_pipeline(
             attrs_lanes, self._specs, self._class_of, self._class_ind,
             self._m_all, self._finals_q, C, init_mask=self._init_mask,
-            epsilon=self.epsilon, start_pos=lane_pos, valid_counts=n,
+            window=self.window, event_ts=ts_lanes,
+            start_pos=lane_pos, valid_counts=n,
             impl=self.impl, use_pallas=self._use_pallas,
             b_tile=self._b_tile, return_trace=with_arena)      # (cap, L, Q)
         matches, C = pipe[0], pipe[1]
@@ -242,9 +262,13 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
                 jnp.asarray(positions, jnp.int32))
             gpos_lanes = jnp.moveaxis(
                 posbuf[:L * cap].reshape(L, cap), 0, 1)        # (cap, L)
+            expire = (tecs_arena.window_expire_masks(
+                self.window, ts_ring0, ts_lanes, lane_pos, n)
+                if timed else None)
             arena, roots = tecs_arena.run_arena_scan(
                 self._arena_tables, arena, trace, gpos_lanes,
                 lane_pos, n, matches > 0.5, epsilon=self.epsilon,
+                expire=expire,
                 arena_impl=self.arena_impl, use_pallas=self._use_pallas,
                 b_tile=self._b_tile)
             rr = jnp.concatenate(
@@ -269,8 +293,13 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
                 f"partitioned chunk must have chunk_len={self.chunk_len} "
                 f"events; got {len(events)}.  Pad the tail chunk on the host "
                 "— odd shapes would trigger a recompile per shape.")
-        attrs, keys = self.encoder.encode_stream_with_keys(
-            events, self.key_attrs)
+        if self.window.is_time:
+            attrs, keys, ts = self.encoder.encode_stream_keyed_ts(
+                events, self.key_attrs, self.window.time_attr)
+        else:
+            attrs, keys = self.encoder.encode_stream_with_keys(
+                events, self.key_attrs)
+            ts = None
         for ev, h in zip(events, keys):       # audit reuses encoder hashes
             key = partition_key(ev, self.key_attrs)
             if key is None:
@@ -281,11 +310,13 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
                     f"partition hash collision: {prev!r} and {key!r} both "
                     f"hash to {int(h):#x}; routing would merge their "
                     "substreams")
-        return self.feed_keyed(jnp.asarray(attrs), jnp.asarray(keys))
+        return self.feed_keyed(jnp.asarray(attrs), jnp.asarray(keys),
+                               event_ts=None if ts is None
+                               else jnp.asarray(ts))
 
     def feed_keyed(self, attrs: jnp.ndarray, keys: jnp.ndarray,
-                   positions: Optional[np.ndarray] = None
-                   ) -> Tuple[np.ndarray, List[int]]:
+                   positions: Optional[np.ndarray] = None,
+                   event_ts=None) -> Tuple[np.ndarray, List[int]]:
         """Device-tensor entry point: attrs (chunk_len, A) f32 + uint32 keys.
 
         Skips the host-side collision audit — callers hashing their own keys
@@ -293,12 +324,39 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         global stream position of each fed row — the sharded path feeds the
         rows `route_partitioned_chunk` delivered to this shard, which are a
         non-contiguous slice of the stream; hits are labelled from it.
+        ``event_ts`` ((chunk_len,) f32) is required for time windows: each
+        event's timestamp rides the routing scatter to its lane
+        (DESIGN.md §9).  The interleaved stream must be monotone in time
+        (audited across feeds) — which makes every routed substream
+        monotone too, the host PartitionedEngine's assumption.
         """
         T = attrs.shape[0]
         if T != self.chunk_len or keys.shape != (T,):
             raise ValueError(f"expected attrs (chunk_len={self.chunk_len}, "
                              f"A) and keys ({self.chunk_len},); got "
                              f"{attrs.shape} / {keys.shape}")
+        if self.window.is_time:
+            if event_ts is None:
+                raise ValueError("time-window partitioned feeds need the "
+                                 "event_ts (chunk_len,) operand "
+                                 "(DESIGN.md §9)")
+            if positions is None:
+                # routed (sharded) sub-chunks interleave bucket padding and
+                # out-of-order senders — like the collision audit, callers
+                # feeding pre-routed rows own the monotonicity guarantee.
+                # NULL-key rows join no substream (the host drops them
+                # before reading a clock), so they are exempt too — their
+                # placeholder timestamps never reach a lane.
+                ts_np = np.asarray(event_ts, np.float32)
+                keys_np = np.asarray(keys, np.uint32)
+                routed_rows = (keys_np != np.uint32(NULL_KEY_HASH)) & \
+                    (keys_np != np.uint32(EMPTY_LANE))
+                if routed_rows.any():
+                    self._last_ts = wkern.audit_monotone_ts(
+                        ts_np[routed_rows], self._last_ts)
+        elif event_ts is not None:
+            raise ValueError("event_ts was passed but the query window is "
+                             "count-based")
         base = self._pos
         if positions is None:
             pos_arr = base + np.arange(T, dtype=np.int64)
@@ -315,7 +373,7 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
             counts_f, self._state, info = self._step(
                 attrs, keys, self._state,
                 jnp.asarray(self._chunk_idx, jnp.int32),
-                jnp.asarray(pos_arr))
+                jnp.asarray(pos_arr), event_ts)
         self._pos += T
         self._chunk_idx += 1
 
@@ -425,15 +483,27 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         n = int(ev.sum())
         if n == 0:
             return 0
-        C = np.asarray(self._state["C"]).copy()
+        if self.window.is_time:
+            Cst = self._state["C"]
+            Cr = np.asarray(Cst["C"]).copy()
+            tsr = np.asarray(Cst["ts"]).copy()
+            ovf = np.asarray(Cst["ovf"]).copy()
+            Cr[ev] = 0.0
+            tsr[ev] = wkern.TS_EMPTY
+            ovf[ev] = False
+            C = {"C": jnp.asarray(Cr), "ts": jnp.asarray(tsr),
+                 "ovf": jnp.asarray(ovf)}
+        else:
+            Cr = np.asarray(self._state["C"]).copy()
+            Cr[ev] = 0.0
+            C = jnp.asarray(Cr)
         lp = np.asarray(self._state["lane_pos"]).copy()
-        C[ev] = 0.0
         lp[ev] = 0
         lk = lk.copy()
         ll = ll.copy()
         lk[ev] = np.uint32(EMPTY_LANE)
         ll[ev] = -1
-        new_state = {"C": jnp.asarray(C), "lane_keys": jnp.asarray(lk),
+        new_state = {"C": C, "lane_keys": jnp.asarray(lk),
                      "lane_pos": jnp.asarray(lp),
                      "lane_last": jnp.asarray(ll)}
         if self.arena_capacity is not None:
@@ -456,4 +526,5 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         self._chunk_idx = 0
         self._hash_to_key.clear()
         self._roots.clear()
+        self._last_ts = None
         self.stats = PartitionStats()

@@ -29,6 +29,11 @@ as ``engine``; match counts then carry a trailing query axis).
 stream with PARTITION BY keys, the subclass
 :class:`~repro.vector.partitioned.PartitionedStreamingEngine` hash-routes
 events to lanes on device first (DESIGN.md §6).
+
+Time windows (DESIGN.md §9): the engine inherits the query's ``WITHIN``
+clause through the wrapped engine's ``DeviceWindow``; feeds thread the
+per-event timestamp operand, audit cross-chunk monotonicity, and expose
+the latched rate-bound flags as :attr:`window_overflow`.
 """
 from __future__ import annotations
 
@@ -43,6 +48,7 @@ import numpy as np
 from ..core.events import ComplexEvent, Event
 from ..core.selection import apply_strategy
 from ..kernels import ops
+from ..kernels import window as wkern
 from . import tecs_arena
 
 _I32_MAX = np.iinfo(np.int32).max
@@ -87,6 +93,7 @@ class StreamingVectorEngine:
         self.engine = engine
         self.encoder = engine.encoder
         self.epsilon = engine.epsilon
+        self.window = engine.window
         self.chunk_len = int(chunk_len)
         self.batch = int(batch)
         self.impl = impl if impl is not None else getattr(
@@ -121,6 +128,9 @@ class StreamingVectorEngine:
         self._arena_tables = (engine.arena_tables()
                               if arena_capacity is not None else None)
         self._roots: Dict[Tuple[int, int], np.ndarray] = {}
+        # time windows: last timestamp per lane, carried across feeds for
+        # the monotonicity audit (stream order must equal time order)
+        self._last_ts: Optional[np.ndarray] = None
         self._state = self._init_full_state(batch)
         # state ring donated: steady-state streaming allocates nothing new
         self._step = jax.jit(
@@ -136,17 +146,19 @@ class StreamingVectorEngine:
             self._arena_tables.num_states)}
 
     # ------------------------------------------------------------------
-    def _step_impl(self, attrs: jnp.ndarray, state: jnp.ndarray,
-                   start_pos: jnp.ndarray):
+    def _step_impl(self, attrs: jnp.ndarray, state,
+                   start_pos: jnp.ndarray, event_ts=None):
         self._trace_count += 1  # runs only while tracing (i.e. compiling)
         return ops.cer_pipeline(
             attrs, self._specs, self._class_of, self._class_ind, self._m_all,
             self._finals_q, state, init_mask=self._init_mask,
-            epsilon=self.epsilon, start_pos=start_pos, impl=self.impl,
+            window=self.window, event_ts=event_ts,
+            start_pos=start_pos, impl=self.impl,
             use_pallas=self._use_pallas, b_tile=self._b_tile)
 
     def _arena_step_impl(self, attrs: jnp.ndarray, state: dict,
-                         start_pos: jnp.ndarray, gbase: jnp.ndarray):
+                         start_pos: jnp.ndarray, gbase: jnp.ndarray,
+                         event_ts=None):
         """Counting scan + tECS-arena maintenance, one compiled step.
 
         ``gbase`` is the chunk's absolute stream offset (int32): arena node
@@ -158,9 +170,10 @@ class StreamingVectorEngine:
             specs=self._specs, class_of=self._class_of,
             class_ind=self._class_ind, m_all=self._m_all,
             finals_q=self._finals_q, init_mask=self._init_mask,
-            epsilon=self.epsilon, start=start_pos, gbase=gbase,
+            window=self.window, start=start_pos, gbase=gbase,
             impl=self.impl, use_pallas=self._use_pallas,
-            b_tile=self._b_tile, arena_impl=self.arena_impl)
+            b_tile=self._b_tile, arena_impl=self.arena_impl,
+            event_ts=event_ts)
         return counts, {"C": C, "arena": arena}, roots
 
     # ------------------------------------------------------------------
@@ -179,6 +192,15 @@ class StreamingVectorEngine:
         Copy (``jnp.array(se.state)``) before feeding if you need a snapshot.
         """
         return self._state
+
+    @property
+    def window_overflow(self) -> np.ndarray:
+        """Per-lane latched time-window rate-bound flags (DESIGN.md §9).
+
+        All-False for count windows (which cannot overflow).  A latched
+        lane saw more than ``max_window_events`` simultaneously-live starts
+        — its counts are a lower bound until :meth:`reset`."""
+        return wkern.window_overflow(self._state)
 
     @property
     def compile_count(self) -> int:
@@ -200,13 +222,25 @@ class StreamingVectorEngine:
         counts per position (plus a trailing query axis for a multi-query
         engine); hits is the list of absolute ``(position, stream)`` pairs
         with ≥ 1 match, ready for the host tECS enumerator.
+
+        Time windows (DESIGN.md §9): the per-event timestamp operand is
+        encoded from the query's ``time_attr`` / event timestamps (arrival
+        order as the fallback) and audited for monotonicity across feeds.
         """
+        if self.window.is_time:
+            attrs, ts = self.encoder.encode_streams_ts(
+                streams, self.window.time_attr, base_pos=self._pos)
+            return self.feed_attrs(jnp.asarray(attrs), jnp.asarray(ts))
         attrs = jnp.asarray(self.encoder.encode_streams(streams))
         return self.feed_attrs(attrs)
 
-    def feed_attrs(self, attrs: jnp.ndarray
+    def feed_attrs(self, attrs: jnp.ndarray, event_ts=None
                    ) -> Tuple[np.ndarray, List[Tuple[int, int]]]:
-        """Device-tensor entry point: attrs (chunk_len, B, A) f32."""
+        """Device-tensor entry point: attrs (chunk_len, B, A) f32.
+
+        Time windows additionally require ``event_ts (chunk_len, B)`` f32
+        (monotone in stream order — audited, including across feeds).
+        """
         T, B = attrs.shape[0], attrs.shape[1]
         if T != self.chunk_len or B != self.batch:
             raise ValueError(
@@ -214,6 +248,15 @@ class StreamingVectorEngine:
                 f"batch={self.batch}, A); got (T={T}, B={B}).  Pad the tail "
                 "chunk on the host or build a second engine for remainders — "
                 "odd shapes would trigger a recompile per shape.")
+        if self.window.is_time:
+            if event_ts is None:
+                raise ValueError("time-window feeds need the event_ts "
+                                 "(chunk_len, B) operand (DESIGN.md §9)")
+            self._last_ts = wkern.audit_monotone_ts(
+                np.asarray(event_ts), self._last_ts)
+        elif event_ts is not None:
+            raise ValueError("event_ts was passed but the query window is "
+                             "count-based")
         t0 = self._pos
         if self.arena_capacity is not None and self._pos + T > _I32_MAX:
             raise ValueError(
@@ -226,11 +269,12 @@ class StreamingVectorEngine:
                 counts_f, self._state, roots = self._step(
                     attrs, self._state,
                     jnp.asarray(self._pos % self._ring, jnp.int32),
-                    jnp.asarray(self._pos, jnp.int32))
+                    jnp.asarray(self._pos, jnp.int32), event_ts)
             else:
                 counts_f, self._state = self._step(
                     attrs, self._state,
-                    jnp.asarray(self._pos % self._ring, jnp.int32))
+                    jnp.asarray(self._pos % self._ring, jnp.int32),
+                    event_ts)
                 roots = None
         self._pos += T
         if self._single_query:
@@ -309,3 +353,4 @@ class StreamingVectorEngine:
         self._state = self._init_full_state(self.batch)
         self._pos = 0
         self._roots.clear()
+        self._last_ts = None

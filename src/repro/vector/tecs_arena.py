@@ -68,6 +68,7 @@ import numpy as np
 from ..core.events import ComplexEvent
 from ..core.tecs import BOTTOM, OUTPUT, UNION, enumerate_arena
 from ..kernels import ref as kref
+from ..kernels import window as wkern
 
 NULL = -1  # empty cell / absent child
 
@@ -303,7 +304,7 @@ def _union_fold(ar: dict, acc: jnp.ndarray, contrib: jnp.ndarray,
 
 def arena_scan(tables: ArenaTables, arena: dict, class_ids: jnp.ndarray,
                gpos: jnp.ndarray, start: jnp.ndarray, valid: jnp.ndarray,
-               hits: jnp.ndarray, *, epsilon: int
+               hits: jnp.ndarray, *, epsilon: int, expire=None
                ) -> Tuple[dict, jnp.ndarray]:
     """Maintain the tECS arena over one chunk — per-event reference fold.
 
@@ -321,6 +322,13 @@ def arena_scan(tables: ArenaTables, arena: dict, class_ids: jnp.ndarray,
     valid:     (B,) int32 dense prefix of real events per lane this chunk.
     hits:      (T, B, Q) bool — positions with ≥ 1 match (from the counting
                scan); roots are built (and nodes allocated) only there.
+    expire:    optional (T, B, W) bool — precomputed time-window eviction
+               masks (:func:`window_expire_masks`, DESIGN.md §9); cells in
+               expired slots drop before the predecessor folds and root
+               construction, exactly like the counting ring.  ``epsilon``
+               then only sets the root-chain extent (``ring − 1``: every
+               live start is within the last W positions).  None keeps the
+               count-window single-slot rule.
     Returns (arena', roots (T, B, Q) int32) — roots are NULL where no hit.
     """
     T, B = class_ids.shape
@@ -333,12 +341,16 @@ def arena_scan(tables: ArenaTables, arena: dict, class_ids: jnp.ndarray,
     valid = jnp.broadcast_to(jnp.asarray(valid, jnp.int32), (B,))
 
     def step(ar, xs):
-        t, cls_t, gpos_t, hit_t = xs
+        t, cls_t, gpos_t, hit_t = xs[:4]
         j = start + t                                           # (B,)
         live = t < valid
         seed = (arange_w[None, :] == (j % W)[:, None])
-        expire = (arange_w[None, :] == ((j - epsilon - 1) % W)[:, None])
-        clear = (seed | expire) & live[:, None]
+        if expire is None:
+            expire_t = (arange_w[None, :]
+                        == ((j - epsilon - 1) % W)[:, None])
+        else:
+            expire_t = xs[4]
+        clear = (seed | expire_t) & live[:, None]
         cell = jnp.where(clear[:, :, None], NULL, ar["cell"])
 
         # -- new_bottom(j) at the seed slot's initial state(s) --------------
@@ -430,8 +442,10 @@ def arena_scan(tables: ArenaTables, arena: dict, class_ids: jnp.ndarray,
 
     ts = jnp.arange(T, dtype=jnp.int32)
     hits = jnp.asarray(hits, bool)
-    arena, roots = jax.lax.scan(step, arena,
-                                (ts, class_ids, gpos, hits))
+    xs = (ts, class_ids, gpos, hits)
+    if expire is not None:
+        xs = xs + (jnp.asarray(expire, bool),)
+    arena, roots = jax.lax.scan(step, arena, xs)
     return arena, roots
 
 
@@ -471,7 +485,7 @@ def _ptab(tables: ArenaTables) -> jnp.ndarray:
 def arena_scan_block(tables: ArenaTables, arena: dict,
                      class_ids: jnp.ndarray, gpos: jnp.ndarray,
                      start: jnp.ndarray, valid: jnp.ndarray,
-                     hits: jnp.ndarray, *, epsilon: int,
+                     hits: jnp.ndarray, *, epsilon: int, expire=None,
                      use_pallas: bool = False,
                      interpret: Optional[bool] = None, b_tile: int = 8,
                      n_seg: int = 1) -> Tuple[dict, jnp.ndarray]:
@@ -513,6 +527,12 @@ def arena_scan_block(tables: ArenaTables, arena: dict,
     The slot layout replays the reference fold's allocation order exactly,
     so non-overflowing lanes produce bit-identical node stores — asserted
     by tests/test_arena_block.py.
+
+    ``expire`` (optional, (T, B, W) bool): precomputed time-window
+    eviction masks — same contract as :func:`arena_scan` (DESIGN.md §9).
+    They are closed-form in the absolute event index, so segmented
+    execution and the Pallas kernel consume them as one more streamed
+    operand.
     """
     from ..kernels import ops
     T, B = class_ids.shape
@@ -540,7 +560,7 @@ def arena_scan_block(tables: ArenaTables, arena: dict,
     cells_T, rec_valid, rec_left, rec_right, roots_v = \
         ops.arena_block_update(
             cells0, class_ids, hits, start, valid, lay=lay, ptab=ptab,
-            finals_sq=tables.finals_sq, n_seg=n_seg,
+            finals_sq=tables.finals_sq, n_seg=n_seg, expire=expire,
             use_pallas=use_pallas, interpret=interpret, b_tile=b_tile)
 
     # -- 3. bump allocation: one chunk-level cumsum over all T·M slots -----
@@ -584,7 +604,7 @@ def arena_scan_block(tables: ArenaTables, arena: dict,
     gpos_src = jnp.take_along_axis(jnp.moveaxis(gpos, 1, 0), t_of, axis=1)
     pos_new = jnp.where(jnp.asarray(lay.pos_is_event())[slot_m],
                         gpos_src, NULL)
-    sstart_tr = kref.arena_slot_starts(sstart0, gpos, start, valid, lay=lay)
+    sstart_tr = kref.arena_slot_starts(sstart0, gpos, start, valid, W=W)
     d_m = jnp.asarray(lay.d_static())[slot_m]
     w_m = jnp.where(d_m >= 0,
                     (start[:, None] + t_of - d_m) % W,        # chain slots
@@ -609,28 +629,50 @@ def arena_scan_block(tables: ArenaTables, arena: dict,
 # ---------------------------------------------------------------------------
 
 
+def window_expire_masks(window: "wkern.DeviceWindow", ts_ring0, event_ts,
+                        start, valid) -> jnp.ndarray:
+    """(T, B, W) bool time-eviction masks, in closed form (DESIGN.md §9).
+
+    Seeding is position-driven in both window modes, so the per-slot start
+    *timestamp* at every step decodes without a recurrence
+    (:func:`repro.kernels.ref.arena_slot_starts` fed with timestamps):
+    slot ``w`` at step ``t`` carries the timestamp of its last seed (or the
+    carried chunk-start ring ``ts_ring0``), and expires when it falls
+    below ``τ_t − size``.  The counting kernels carry the same ring in
+    VMEM/scan state; both derivations see identical f32 values, so the
+    eviction decisions agree bit-for-bit.
+    """
+    event_ts = jnp.asarray(event_ts, jnp.float32)
+    slot_ts = kref.arena_slot_starts(ts_ring0, event_ts, start, valid,
+                                     W=window.ring)
+    return slot_ts < event_ts[:, :, None] - jnp.float32(window.size)
+
+
 def run_arena_scan(atables: ArenaTables, arena: dict, trace, gpos, start,
-                   valid, hits, *, epsilon: int, arena_impl: str = "block",
+                   valid, hits, *, epsilon: int, expire=None,
+                   arena_impl: str = "block",
                    use_pallas: bool = False, b_tile: int = 8):
     """Dispatch one arena chunk to the selected implementation.
 
     ``arena_impl``: ``"block"`` (vectorized allocation + batched scatters,
     the default) or ``"fold"`` (the per-event reference fold, kept for
-    parity testing — DESIGN.md §8).
+    parity testing — DESIGN.md §8).  ``expire``: precomputed time-window
+    eviction masks, or None for count windows (DESIGN.md §9).
     """
     check_arena_impl(arena_impl)
     if arena_impl == "fold":
         return arena_scan(atables, arena, trace, gpos, start, valid, hits,
-                          epsilon=epsilon)
+                          epsilon=epsilon, expire=expire)
     return arena_scan_block(atables, arena, trace, gpos, start, valid, hits,
-                            epsilon=epsilon, use_pallas=use_pallas,
-                            b_tile=b_tile)
+                            epsilon=epsilon, expire=expire,
+                            use_pallas=use_pallas, b_tile=b_tile)
 
 
 def scan_chunk(atables: ArenaTables, arena: dict, attrs, state, *,
                specs, class_of, class_ind, m_all, finals_q, init_mask,
-               epsilon: int, start, gbase, impl, use_pallas, b_tile,
-               arena_impl: str = "block"):
+               window: "wkern.DeviceWindow", start, gbase, impl,
+               use_pallas, b_tile, arena_impl: str = "block",
+               event_ts=None):
     """One chunk through the fused pipeline + arena at a common offset.
 
     The whole-batch case: every lane advances by the same T events from
@@ -638,19 +680,28 @@ def scan_chunk(atables: ArenaTables, arena: dict, attrs, state, *,
     BY lanes have per-lane offsets and scattered positions — see
     ``PartitionedStreamingEngine._part_step_impl`` instead).  Shared by the
     streaming engine's arena step and the one-shot :func:`run_enumerate`.
+    Time windows take the ``event_ts (T, B)`` operand; the same eviction
+    masks gate the counting ring and the arena cells (DESIGN.md §9).
     Returns ``(matches, state', arena', roots)``.
     """
     from ..kernels import ops
+    ts_ring0 = state["ts"] if window.is_time else None
     matches, state, trace = ops.cer_pipeline(
         attrs, specs, class_of, class_ind, m_all, finals_q, state,
-        init_mask=init_mask, epsilon=epsilon, start_pos=start, impl=impl,
+        init_mask=init_mask, window=window, event_ts=event_ts,
+        start_pos=start, impl=impl,
         use_pallas=use_pallas, b_tile=b_tile, return_trace=True)
     T, B = trace.shape
     gpos = jnp.broadcast_to(
         gbase + jnp.arange(T, dtype=jnp.int32)[:, None], (T, B))
+    start_b = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,))
+    valid_b = jnp.full((B,), T, jnp.int32)
+    expire = (window_expire_masks(window, ts_ring0, event_ts, start_b,
+                                  valid_b)
+              if window.is_time else None)
     arena, roots = run_arena_scan(
-        atables, arena, trace, gpos, start,
-        jnp.full((B,), T, jnp.int32), matches > 0.5, epsilon=epsilon,
+        atables, arena, trace, gpos, start_b, valid_b, matches > 0.5,
+        epsilon=window.epsilon, expire=expire,
         arena_impl=arena_impl, use_pallas=use_pallas, b_tile=b_tile)
     return matches, state, arena, roots
 
@@ -667,22 +718,23 @@ def run_enumerate(engine, streams, start_pos: int = 0,
     {(t, b, q): [ComplexEvent]})`` — single-query callers slice Q = 0.
     """
     from ..core.selection import apply_strategy
-    attrs = jnp.asarray(engine.encoder.encode_streams(streams))
+    attrs, event_ts = engine.encode_ts(streams, base_pos=int(start_pos))
     tbl = engine.tables
     finals = tbl.finals
     finals_q = finals if finals.ndim == 2 else finals[None, :]
     atables = engine.arena_tables()
 
-    def step(attrs, state, arena, start):
+    def step(attrs, state, arena, start, ts):
         # one-shot: absolute positions and ring offsets coincide
         matches, _, arena, roots = scan_chunk(
             atables, arena, attrs, state, specs=engine.encoder.specs,
             class_of=tbl.class_of, class_ind=tbl.class_ind,
             m_all=tbl.m_all, finals_q=finals_q, init_mask=tbl.init_mask,
-            epsilon=engine.epsilon, start=start, gbase=start,
+            window=engine.window, start=start, gbase=start,
             impl=engine.impl, use_pallas=engine.use_pallas,
             b_tile=engine.b_tile,
-            arena_impl=getattr(engine, "arena_impl", "block"))
+            arena_impl=getattr(engine, "arena_impl", "block"),
+            event_ts=ts)
         return matches, arena, roots
 
     cache = getattr(engine, "_enum_jit", None)
@@ -696,7 +748,8 @@ def run_enumerate(engine, streams, start_pos: int = 0,
     state = engine.init_state(B)
     arena = init_arena(B, arena_capacity, engine.ring, atables.num_states)
     matches_f, arena, roots = jitted(attrs, state, arena,
-                                     jnp.asarray(start_pos, jnp.int32))
+                                     jnp.asarray(start_pos, jnp.int32),
+                                     event_ts)
     counts = np.asarray(matches_f).astype(np.int64)
     roots_np = np.asarray(roots)
     snap = ArenaSnapshot(arena)

@@ -92,6 +92,49 @@ def test_events_window():
     assert q.window.kind == "events" and q.window.size == 100
 
 
+def test_bare_number_window_is_count_based():
+    q = ceql.parse("SELECT * FROM S WHERE A ; B WITHIN 100")
+    assert q.window.kind == "events" and q.window.size == 100
+
+
+@pytest.mark.parametrize("clause,size", [
+    ("500 ms", 0.5),
+    ("500 milliseconds", 0.5),
+    ("2 s", 2.0),
+    ("30 seconds", 30.0),
+    ("2 min", 120.0),
+    ("5 minutes", 300.0),
+    ("3 hours", 10800.0),
+    ("1.5 hours", 5400.0),
+])
+def test_time_unit_windows(clause, size):
+    q = ceql.parse(f"SELECT * FROM S WHERE A ; B WITHIN {clause}")
+    assert q.window.kind == "time"
+    assert q.window.size == pytest.approx(size)
+    assert q.window.time_attr is None
+
+
+def test_bracketed_time_attr_window():
+    q = ceql.parse("SELECT * FROM S WHERE A ; B WITHIN 2.5 [clk]")
+    assert q.window.kind == "time" and q.window.size == 2.5
+    assert q.window.time_attr == "clk"
+
+
+def test_non_integer_event_count_raises():
+    # silently truncating `WITHIN 2.5` to a 2-event window changed query
+    # semantics — non-integer counts are a SyntaxError (time windows must
+    # name a unit or a [time_attr])
+    with pytest.raises(SyntaxError, match="integer event count"):
+        ceql.parse("SELECT * FROM S WHERE A ; B WITHIN 2.5")
+    with pytest.raises(SyntaxError, match="integer event count"):
+        ceql.parse("SELECT * FROM S WHERE A ; B WITHIN 2.5 events")
+    with pytest.raises(SyntaxError, match="≥ 0"):
+        ceql.parse("SELECT * FROM S WHERE A ; B WITHIN -3 events")
+    # integral-valued literals stay accepted (2.0 ≡ 2)
+    q = ceql.parse("SELECT * FROM S WHERE A ; B WITHIN 2.0 events")
+    assert q.window.kind == "events" and q.window.size == 2
+
+
 def test_or_filter_shorthand():
     q = ceql.parse("SELECT * FROM S WHERE A as x FILTER x[v > 8] OR x[v < 1]")
     assert isinstance(q.where, C.Or)
