@@ -263,6 +263,77 @@ def streaming_throughput(total_events: int = 8192, batch: int = 16,
     return out
 
 
+def recovery_overhead(total_events: int = 8192, batch: int = 16,
+                      epsilon: int = 95, chunk: int = 256,
+                      every: int = 8, reps: int = 3,
+                      use_pallas: bool = False) -> Dict:
+    """Crash-safe streaming overhead: checkpoint-every-K chunks vs plain.
+
+    The same chunks flow through the same StreamingVectorEngine twice —
+    bare feed_attrs loop, then under :class:`repro.runtime.
+    RecoveringStreamRunner` (durable match log per chunk + an atomic
+    on-disk snapshot of the full donated pytree every ``every`` chunks).
+    The runner is measured in its steady-state production configuration:
+    snapshots are host-side copies between feeds and the disk write runs
+    on the CheckpointManager's async save thread, so neither touches the
+    compiled step — only the log append and the device→host state copy
+    stay on the feed path.  Plain and recovery passes over the chunk
+    list alternate (the stream just keeps running, and every recovery
+    pass sees the same checkpoint cadence) and each side reports its
+    best pass — paired min-of-N timing, so container-load drift hits
+    both sides alike instead of whichever ran second.  Gate: throughput
+    ≥ the recorded floor ratio of plain streaming AND compile_count == 1
+    (DESIGN.md §10).
+    """
+    import tempfile
+
+    from repro.runtime import RecoveringStreamRunner
+
+    types = ["A1", "A2", "A3"]
+    streams = [random_stream(StreamSpec(types, seed=90 + b), total_events)
+               for b in range(batch)]
+    ve = VectorEngine(FUSED_QUERY, epsilon=epsilon, use_pallas=use_pallas,
+                      impl="fused" if use_pallas else None)
+    all_attrs = ve.encode(streams)
+    n_chunks = total_events // chunk
+    chunks = [all_attrs[lo:lo + chunk]
+              for lo in range(0, n_chunks * chunk, chunk)]
+
+    se = StreamingVectorEngine(ve, chunk_len=chunk, batch=batch)
+    for c in chunks:                                   # warm (compile) pass
+        se.feed_attrs(c)
+    se.reset()
+    dt_plain = dt_rec = float("inf")
+    with tempfile.TemporaryDirectory() as d:
+        runner = RecoveringStreamRunner(se, d, every=every,
+                                        feed_method="feed_attrs",
+                                        blocking_saves=False)
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for c in chunks:
+                se.feed_attrs(c)
+            dt_plain = min(dt_plain, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            for c in chunks:
+                runner.process(c)
+            dt_rec = min(dt_rec, time.perf_counter() - t0)
+        runner.close()                       # drains the async save thread
+    assert se.compile_count == 1, se.compile_count
+
+    ev = n_chunks * chunk * batch
+    return {
+        "chunk": chunk,
+        "every": every,
+        "events": ev,
+        "checkpoints": len(chunks) // every,
+        "plain_eps": ev / dt_plain,
+        "recovery_eps": ev / dt_rec,
+        "overhead_ratio": dt_plain / dt_rec,   # recovery : plain throughput
+        "floor": 0.85,
+        "compile_count": se.compile_count,
+    }
+
+
 def time_window_throughput(total_events: int = 4096, batch: int = 8,
                            epsilon: int = 95, chunk: int = 256,
                            use_pallas: bool = False) -> Dict:

@@ -45,6 +45,8 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
         chunk=min(512, n), eps_small=7, eps_large=31 if quick else 63)
     time_window = perf_cer.time_window_throughput(
         total_events=n, batch=batch, chunk=min(256, n))
+    recovery = perf_cer.recovery_overhead(
+        total_events=n, batch=batch, chunk=min(256, n), every=8)
     # arena-scan regression gate data (scripts/check.sh): arena-on scan
     # throughput must stay within a floor RATIO of counting-only streaming
     # (the pre-block-vectorization fold sat at ~1/1000 — see DESIGN.md §8).
@@ -72,6 +74,7 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
         "partitioned": partitioned,
         "enumeration": enumeration,
         "time_window": time_window,
+        "recovery_overhead": recovery,
         "packed_multiquery": {k: v for k, v in packed.items()
                               if k != "single_states"},
         "compile_counts": dict(
@@ -80,7 +83,8 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
             partitioned=partitioned["compile_count"],
             enumeration=enumeration["compile_count"],
             time_window_count=time_window["compile_count_count"],
-            time_window_time=time_window["compile_count_time"]),
+            time_window_time=time_window["compile_count_time"],
+            recovery=recovery["compile_count"]),
     }
 
 

@@ -28,6 +28,13 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     python examples/quickstart.py > /dev/null
     echo "quickstart smoke OK (count + time windows)"
 
+    # crash-recovery smoke (DESIGN.md §10): a worker subprocess is
+    # kill -9'd between chunks, restarted on the same recovery directory,
+    # and the cumulative emitted match set must be bit-identical to an
+    # uninterrupted run (the example exits nonzero otherwise).
+    python examples/crash_recovery.py > /dev/null
+    echo "crash recovery smoke OK (kill -9 + restart, exactly-once)"
+
     python -m benchmarks.run --quick --cer-json BENCH_cer.json
     # Regression gates:
     #  * the streaming / partitioned / enumeration / time-window cells must
@@ -73,5 +80,19 @@ tw = rec.get("time_window", {})
 if tw:
     print(f"time-window cell: {tw['time_window_eps']:.0f} ev/s "
           f"({tw['time_vs_count']:.2f}x of count at equal size)")
+rc = rec.get("recovery_overhead")
+if rc is None:
+    sys.exit("record is missing the recovery_overhead row (DESIGN.md §10)")
+if rc["compile_count"] != 1:
+    sys.exit(f"recovery runner broke compile-once: "
+             f"compile_count={rc['compile_count']}")
+if rc["overhead_ratio"] < rc["floor"]:
+    sys.exit(f"checkpointing overhead regression: recovery_eps / plain_eps "
+             f"= {rc['overhead_ratio']:.3f} < floor {rc['floor']} — "
+             f"checkpoint-every-{rc['every']} must stay off the feed fast "
+             f"path (DESIGN.md §10)")
+print(f"recovery overhead OK: {rc['overhead_ratio']:.3f} >= floor "
+      f"{rc['floor']} ({rc['checkpoints']} checkpoints over "
+      f"{rc['events']} events, compile-once)")
 EOF
 fi

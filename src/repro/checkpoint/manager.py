@@ -115,6 +115,25 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def load_arrays(self, step: Optional[int] = None
+                    ) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Template-free restore: ``(key → array, extra)`` of one step.
+
+        The manifest records each leaf's key/shape/dtype, so a caller that
+        knows its own layout (e.g. the streaming-engine recovery layer,
+        which may *rescale* lanes on restore) can read a checkpoint without
+        first building a shape-identical template tree.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        arrays = {leaf["key"]: np.load(os.path.join(path, leaf["file"]))
+                  for leaf in manifest["leaves"]}
+        return arrays, manifest["extra"]
+
     def restore(self, template: Any, step: Optional[int] = None
                 ) -> Tuple[Any, Dict]:
         """Restore into the structure of `template` (shapes must match)."""

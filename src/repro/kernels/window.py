@@ -54,6 +54,30 @@ import numpy as np
 DEFAULT_MAX_WINDOW_EVENTS = 64
 
 
+class WindowOverflowError(Exception):
+    """A lane's time-window rate bound was exceeded (``strict_overflow``).
+
+    Raised by the streaming engines *after* the chunk was applied when
+    ``strict_overflow=True`` and the per-lane ``ovf`` latch tripped: more
+    than ``max_window_events`` starts were simultaneously live, so counts
+    on the latched lanes are a lower bound from here on (DESIGN.md §9).
+    Deliberately NOT a ``RuntimeError``: retry wrappers treat
+    ``RuntimeError`` as transient, but the latch is persistent —
+    re-feeding the chunk would corrupt state, not clear the condition.
+
+    ``lanes`` carries the latched lane indices.
+    """
+
+    def __init__(self, lanes):
+        self.lanes = [int(l) for l in lanes]
+        super().__init__(
+            f"time-window rate bound exceeded on lane(s) {self.lanes}: more "
+            "than max_window_events starts were simultaneously live; counts "
+            "on these lanes are now a lower bound.  Raise "
+            "max_window_events=, or drop strict_overflow to degrade "
+            "silently (DESIGN.md §9)")
+
+
 def _pad8(x: int) -> int:
     """Pad to the f32 sublane width (shared with ops.ring_size)."""
     return ((x + 7) // 8) * 8

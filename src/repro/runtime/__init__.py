@@ -1,6 +1,8 @@
 from .fault_tolerance import (HeartbeatMonitor, RetryPolicy, StepTimer,
                               run_with_retries)
+from .recovery import MatchLog, RecoveringStreamRunner, cumulative_matches
 from .trainer import Trainer, TrainerConfig
 
 __all__ = ["HeartbeatMonitor", "RetryPolicy", "StepTimer", "run_with_retries",
+           "MatchLog", "RecoveringStreamRunner", "cumulative_matches",
            "Trainer", "TrainerConfig"]

@@ -146,23 +146,38 @@ class EventEncoder:
 
     def encode_stream_keyed_ts(self, events: Sequence[Event],
                                key_attrs: Tuple[str, ...],
-                               time_attr: Optional[str] = None
+                               time_attr: Optional[str] = None,
+                               clock: Optional[Dict[int, int]] = None
                                ) -> Tuple[np.ndarray, np.ndarray,
                                           np.ndarray]:
         """Keyed encoding + the timestamp operand (time-window PARTITION
         BY, DESIGN.md §9): → (attrs (T, A), keys (T,) uint32, ts (T,)
-        f32).  There is no position fallback here — a partitioned
-        substream's local positions are only known after routing, so
-        events must carry timestamps (or ``time_attr``), exactly like the
-        host ``PartitionedEngine`` fed through ``assign_positions``.
+        f32).  The global stream position is NOT a valid fallback clock
+        here — the host engine's clock is the *substream-local* position,
+        only known after routing.  ``clock`` supplies exactly that: a
+        persistent ``{key_hash: next_rank}`` counter table (owned by the
+        caller, carried across chunks and through checkpoints) — each
+        non-NULL-key event draws its substream rank from it, so a
+        timestamp-less event gets ``float(rank)``, bit-identical to the
+        host ``PartitionedEngine``'s per-partition position clock.  With
+        ``clock=None`` events must carry timestamps (or ``time_attr``),
+        like the host fed through ``assign_positions``.
         NULL-key events join no substream (the host drops them before
         ever reading a clock), so they get a NaN placeholder instead of
-        raising — the router never scatters it to a lane and the
-        monotonicity audit skips NULL-key rows.
+        raising — and never consume a rank: the router never scatters
+        them to a lane and the monotonicity audit skips NULL-key rows.
         """
         attrs, keys = self.encode_stream_with_keys(events, key_attrs)
-        ts = np.asarray([np.nan
-                         if partition_key(ev, key_attrs) is None
-                         else self.event_ts(ev, time_attr, None)
-                         for ev in events], dtype=np.float32)
+        ts = np.empty((len(events),), dtype=np.float32)
+        for t, ev in enumerate(events):
+            if partition_key(ev, key_attrs) is None:
+                ts[t] = np.nan
+                continue
+            rank = None
+            if clock is not None:
+                h = int(keys[t])
+                rank = clock.get(h, 0)
+                clock[h] = rank + 1
+            ts[t] = self.event_ts(
+                ev, time_attr, None if rank is None else float(rank))
         return attrs, keys, ts

@@ -40,7 +40,7 @@ per pair) hash collision rather than silently merging substreams.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -53,9 +53,25 @@ from ..core.selection import apply_strategy
 from ..kernels import ops
 from ..kernels import window as wkern
 from . import tecs_arena
-from .streaming import StreamingVectorEngine, _quiet_donation
+from .streaming import (StreamingVectorEngine, _flatten_state, _quiet_donation,
+                        _restore_like)
 
 _I32_MAX = np.iinfo(np.int32).max
+
+_JSON_KEY_TYPES = (str, int, float, bool)
+
+
+def _encode_hash_to_key(hash_to_key: Dict[int, tuple]):
+    """JSON-able form of the collision-audit table, or None when a key
+    carries values JSON cannot round-trip (the audit then restarts fresh
+    after restore — safe: it only loses cross-restart collision detection).
+    """
+    out = []
+    for h, key in hash_to_key.items():
+        if not all(v is None or isinstance(v, _JSON_KEY_TYPES) for v in key):
+            return None
+        out.append([int(h), list(key)])
+    return out
 
 
 @dataclass
@@ -68,6 +84,9 @@ class PartitionStats:
     spilled_table: int = 0       # new key, no free/evictable lane
     spilled_capacity: int = 0    # lane already had lane_cap events this chunk
     evicted_lanes: int = 0       # lanes reassigned to a new key
+    overflow_lanes: int = 0      # lanes with the rate-bound ovf latch SET
+    #                              (current latch state, not cumulative —
+    #                              time windows only, DESIGN.md §9)
 
 
 class PartitionedStreamingEngine(StreamingVectorEngine):
@@ -85,7 +104,8 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
                  num_lanes: int, lane_cap: Optional[int] = None,
                  impl: Optional[str] = None, evict: str = "lru",
                  arena_capacity: Optional[int] = None,
-                 arena_impl: Optional[str] = None):
+                 arena_impl: Optional[str] = None,
+                 strict_overflow: bool = False):
         """``engine``: a constructed VectorEngine or MultiQueryEngine.
 
         key_attrs: PARTITION BY attributes (need not appear in predicates).
@@ -107,7 +127,8 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         self.num_lanes = int(num_lanes)
         super().__init__(engine, chunk_len, batch=num_lanes, impl=impl,
                          arena_capacity=arena_capacity,
-                         arena_impl=arena_impl)
+                         arena_impl=arena_impl,
+                         strict_overflow=strict_overflow)
         if evict not in ("lru", "none"):
             raise ValueError(f"evict must be 'lru' or 'none', got {evict!r}")
         self.key_attrs = tuple(key_attrs)
@@ -115,6 +136,11 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         self.evict = evict
         self.stats = PartitionStats()
         self._hash_to_key: Dict[int, tuple] = {}
+        # substream-local arrival-order clock (time windows with no
+        # time_attr and no event timestamps): events of partition h get
+        # timestamp = their post-routing rank in the substream — exactly
+        # the host engine's per-partition position clock (DESIGN.md §9)
+        self._fallback_clock: Dict[int, int] = {}
         self._chunk_idx = 0
         self._step = jax.jit(self._part_step_impl, donate_argnums=(2,))
 
@@ -293,9 +319,19 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
                 f"partitioned chunk must have chunk_len={self.chunk_len} "
                 f"events; got {len(events)}.  Pad the tail chunk on the host "
                 "— odd shapes would trigger a recompile per shape.")
+        audit_ts = True
         if self.window.is_time:
             attrs, keys, ts = self.encoder.encode_stream_keyed_ts(
-                events, self.key_attrs, self.window.time_attr)
+                events, self.key_attrs, self.window.time_attr,
+                clock=(self._fallback_clock
+                       if self.window.time_attr is None else None))
+            if self.window.time_attr is None and any(
+                    ev.timestamp is None for ev in events
+                    if partition_key(ev, self.key_attrs) is not None):
+                # synthesized substream-local clocks are monotone per lane
+                # by construction but NOT across the interleaved stream —
+                # the global-order audit does not apply (DESIGN.md §9)
+                audit_ts = False
         else:
             attrs, keys = self.encoder.encode_stream_with_keys(
                 events, self.key_attrs)
@@ -312,11 +348,12 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
                     "substreams")
         return self.feed_keyed(jnp.asarray(attrs), jnp.asarray(keys),
                                event_ts=None if ts is None
-                               else jnp.asarray(ts))
+                               else jnp.asarray(ts), audit_ts=audit_ts)
 
     def feed_keyed(self, attrs: jnp.ndarray, keys: jnp.ndarray,
                    positions: Optional[np.ndarray] = None,
-                   event_ts=None) -> Tuple[np.ndarray, List[int]]:
+                   event_ts=None, audit_ts: bool = True
+                   ) -> Tuple[np.ndarray, List[int]]:
         """Device-tensor entry point: attrs (chunk_len, A) f32 + uint32 keys.
 
         Skips the host-side collision audit — callers hashing their own keys
@@ -340,7 +377,7 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
                 raise ValueError("time-window partitioned feeds need the "
                                  "event_ts (chunk_len,) operand "
                                  "(DESIGN.md §9)")
-            if positions is None:
+            if positions is None and audit_ts:
                 # routed (sharded) sub-chunks interleave bucket padding and
                 # out-of-order senders — like the collision audit, callers
                 # feeding pre-routed rows own the monotonicity guarantee.
@@ -385,6 +422,7 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         st.spilled_table += T - int(np.asarray(info["routed"]).sum()) \
             - int(np.asarray(info["nulls"]).sum())
         st.evicted_lanes += int(np.asarray(info["evicted"]).sum())
+        st.overflow_lanes = int(self.window_overflow.sum())  # latch state
 
         counts = np.asarray(counts_f).astype(np.int64)         # (T, Q)
         any_q = counts.sum(axis=-1)
@@ -400,6 +438,7 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
             hits = [base + int(t) for t in np.nonzero(any_q)[0]]
         else:
             hits = sorted(int(positions[t]) for t in np.nonzero(any_q)[0])
+        self._check_overflow()
         return counts, hits
 
     # ------------------------------------------------------------------
@@ -519,12 +558,162 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         self.stats.evicted_lanes += n
         return n
 
+    # ------------------------------------------------------------------
+    # crash-safe snapshots + elastic lane rescale (DESIGN.md §10)
+    # ------------------------------------------------------------------
+    # "batch"/"num_lanes" are deliberately NOT compatibility keys: the lane
+    # count is the *elastic* dimension — restore migrates lane rows instead
+    # of rejecting the snapshot.  lane_cap and the PARTITION BY key set are
+    # load-bearing (they shape routing), so they are.
+    _compat_keys = ("format", "engine", "query_fingerprint", "window",
+                    "chunk_len", "lane_cap", "key_attrs", "num_states",
+                    "num_queries", "arena_capacity")
+
+    def manifest(self) -> dict:
+        m = super().manifest()
+        m.update({
+            "num_lanes": int(self.num_lanes),
+            "lane_cap": int(self.lane_cap),
+            "evict": self.evict,
+            "key_attrs": list(self.key_attrs),
+            "chunk_idx": int(self._chunk_idx),
+            "stats": asdict(self.stats),
+            "hash_to_key": _encode_hash_to_key(self._hash_to_key),
+            "fallback_clock": {str(h): int(n)
+                               for h, n in self._fallback_clock.items()},
+        })
+        return m
+
+    def _snapshot_roots(self, arrays: Dict[str, np.ndarray]) -> None:
+        # keys are bare global positions here; each value carries the lane
+        # the root lives on, which a rescaled restore must remap
+        keys = sorted(self._roots)
+        if keys:
+            arrays["roots_key"] = np.asarray(keys, np.int64)
+            arrays["roots_lane"] = np.asarray(
+                [self._roots[k][0] for k in keys], np.int32)
+            arrays["roots_val"] = np.stack(
+                [np.asarray(self._roots[k][1], np.int32) for k in keys])
+
+    def _restore_roots(self, arrays: Dict[str, np.ndarray],
+                       lane_map: Optional[Dict[int, int]] = None) -> int:
+        self._roots.clear()
+        if "roots_key" not in arrays:
+            return 0
+        dropped = 0
+        for p, l, v in zip(arrays["roots_key"], arrays["roots_lane"],
+                           arrays["roots_val"]):
+            lane = int(l)
+            if lane_map is not None:
+                lane = lane_map.get(lane, -1)
+                if lane < 0:         # root's lane was dropped by the shrink
+                    dropped += 1
+                    continue
+            self._roots[int(p)] = (lane, np.asarray(v, np.int32))
+        return dropped
+
+    def restore(self, snapshot: dict, *,
+                n_lanes: Optional[int] = None) -> None:
+        """Load a :meth:`snapshot`, optionally rescaling to ``n_lanes``.
+
+        The lane count is the elastic dimension: a snapshot taken at L0
+        lanes restores onto L1 ≠ L0 by row-gathering every per-lane state
+        leaf (count/timestamp rings, lane table, LRU ages, arena rows) onto
+        the new lane axis — see :meth:`_migrate_lanes` for the priority
+        order when shrinking.  ``n_lanes`` rebuilds the compiled step for
+        the new geometry (a rescale is a restart event: exactly one fresh
+        compile, after which ``compile_count == 1`` streaming resumes).
+        Everything else in the manifest must match or the call raises
+        without touching state.
+        """
+        meta, arrays = snapshot["meta"], snapshot["arrays"]
+        if n_lanes is not None and int(n_lanes) != self.num_lanes:
+            # lane count is a compiled shape: re-jit for the new geometry
+            self.num_lanes = int(n_lanes)
+            self.batch = int(n_lanes)
+            self._trace_count = 0
+            self._step = jax.jit(self._part_step_impl, donate_argnums=(2,))
+        self._check_manifest(meta)
+        lane_map = None
+        dropped_owned = 0
+        src_lanes = int(meta.get("num_lanes", self.num_lanes))
+        if src_lanes != self.num_lanes:
+            arrays, lane_map, dropped_owned = self._migrate_lanes(
+                arrays, src_lanes)
+        self._state = _restore_like("state", self._init_lane_state(), arrays)
+        self._pos = int(meta["pos"])
+        self._chunk_idx = int(meta["chunk_idx"])
+        self._last_ts = (np.asarray(arrays["last_ts"], np.float32)
+                         if "last_ts" in arrays else None)
+        self.stats = PartitionStats(**meta.get("stats", {}))
+        self.stats.evicted_lanes += dropped_owned
+        htk = meta.get("hash_to_key")
+        self._hash_to_key = ({int(h): tuple(k) for h, k in htk}
+                             if htk else {})
+        self._fallback_clock = {int(h): int(n) for h, n in
+                                meta.get("fallback_clock", {}).items()}
+        self._restore_roots(arrays, lane_map)
+
+    def _migrate_lanes(self, arrays: Dict[str, np.ndarray], src_lanes: int
+                       ) -> Tuple[Dict[str, np.ndarray],
+                                  Dict[int, int], int]:
+        """Row-gather per-lane snapshot leaves onto this engine's lane axis.
+
+        Every state leaf carries the lane as its leading axis (rings, lane
+        table, LRU ages, all arena planes), so a rescale is one gather.
+        Candidates to keep: lanes owned by a partition, then unowned lanes
+        that still hold arena history (``ptr > 0`` — their nodes back
+        already-recorded roots).  When shrinking, owned lanes win by recency
+        (``lane_last`` descending); dropped owned lanes count as evictions —
+        their partitions restart from scratch if the key returns, and their
+        unenumerated roots become unenumerable (DESIGN.md §10).  Kept lanes
+        stay in relative order, so the migration is deterministic.
+        """
+        dst = self.num_lanes
+        lk = arrays.get("state/lane_keys")
+        ll = arrays.get("state/lane_last")
+        if lk is None or ll is None or np.shape(lk) != (src_lanes,):
+            raise ValueError(
+                f"snapshot lane table does not match its manifest "
+                f"num_lanes={src_lanes}")
+        owned = np.asarray(lk) != np.uint32(EMPTY_LANE)
+        hist = np.zeros(src_lanes, bool)
+        ptr = arrays.get("state/arena/ptr")
+        if self.arena_capacity is not None and ptr is not None:
+            hist = np.asarray(ptr) > 0
+        ll = np.asarray(ll)
+        order = sorted(np.nonzero(owned | hist)[0],
+                       key=lambda i: (0 if owned[i] else 1,
+                                      -int(ll[i]), int(i)))
+        keep = sorted(int(i) for i in order[:dst])
+        dropped_owned = int(sum(1 for i in order[dst:] if owned[i]))
+        lane_map = {o: i for i, o in enumerate(keep)}
+        tmpl: Dict[str, np.ndarray] = {}
+        _flatten_state("state", self._init_lane_state(), tmpl)
+        out = {k: v for k, v in arrays.items()
+               if not k.startswith("state/")}
+        idx = np.asarray(keep, np.int64)
+        for key, tv in tmpl.items():
+            old = arrays.get(key)
+            if old is None:
+                raise ValueError(f"snapshot is missing state leaf {key!r}")
+            if old.shape[1:] != tv.shape[1:] or old.dtype != tv.dtype:
+                raise ValueError(
+                    f"snapshot state leaf {key!r} is {old.shape}/"
+                    f"{old.dtype}; rescale expects trailing dims "
+                    f"{tv.shape[1:]}/{tv.dtype}")
+            new = np.array(tv)           # init values on surplus new lanes
+            new[:len(idx)] = old[idx]
+            out[key] = new
+        return out, lane_map, dropped_owned
+
     def reset(self) -> None:
         """Drop all partitions and rewind the stream position."""
         self._state = self._init_lane_state()
         self._pos = 0
         self._chunk_idx = 0
         self._hash_to_key.clear()
+        self._fallback_clock.clear()
         self._roots.clear()
         self._last_ts = None
         self.stats = PartitionStats()

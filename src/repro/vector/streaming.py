@@ -38,6 +38,7 @@ the latched rate-bound flags as :attr:`window_overflow`.
 from __future__ import annotations
 
 import contextlib
+import hashlib
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -52,6 +53,46 @@ from ..kernels import window as wkern
 from . import tecs_arena
 
 _I32_MAX = np.iinfo(np.int32).max
+
+#: snapshot layout version (bumped on incompatible layout changes; restore
+#: refuses a snapshot whose format it does not understand)
+SNAPSHOT_FORMAT = 1
+
+
+def _flatten_state(prefix: str, tree, out: Dict[str, np.ndarray]) -> None:
+    """Flatten a state pytree of (possibly nested) dicts into host arrays.
+
+    Key order is the dict's sorted keys joined with ``/`` — the same rule
+    the checkpoint manager's path flattener applies, so snapshot leaves
+    round-trip through :class:`repro.checkpoint.CheckpointManager` files
+    under stable names.
+    """
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            _flatten_state(f"{prefix}/{k}", tree[k], out)
+    else:
+        out[prefix] = np.asarray(tree)
+
+
+def _restore_like(prefix: str, template, arrays: Dict[str, np.ndarray]):
+    """Rebuild a device pytree shaped like ``template`` from saved leaves.
+
+    Shape/dtype mismatches raise — a snapshot must never restore onto an
+    engine whose compiled shapes differ (silent corruption otherwise).
+    """
+    if isinstance(template, dict):
+        return {k: _restore_like(f"{prefix}/{k}", template[k], arrays)
+                for k in template}
+    arr = arrays.get(prefix)
+    if arr is None:
+        raise ValueError(f"snapshot is missing state leaf {prefix!r}")
+    tmpl = np.asarray(template)
+    if tuple(arr.shape) != tmpl.shape or arr.dtype != tmpl.dtype:
+        raise ValueError(
+            f"snapshot state leaf {prefix!r} is {arr.shape}/{arr.dtype}, "
+            f"this engine expects {tmpl.shape}/{tmpl.dtype} — restore onto "
+            "a matching engine (same query, window, capacities)")
+    return jnp.asarray(arr)
 
 
 @contextlib.contextmanager
@@ -73,7 +114,8 @@ class StreamingVectorEngine:
     def __init__(self, engine, chunk_len: int, batch: int,
                  impl: Optional[str] = None,
                  arena_capacity: Optional[int] = None,
-                 arena_impl: Optional[str] = None):
+                 arena_impl: Optional[str] = None,
+                 strict_overflow: bool = False):
         """``engine``: a constructed VectorEngine or MultiQueryEngine.
 
         chunk_len: events per feed() call — fixed for shape-stable compiles.
@@ -86,6 +128,12 @@ class StreamingVectorEngine:
         arena_impl: "block" (vectorized allocation, DESIGN.md §8) or
                    "fold" (the per-event reference fold); default inherits
                    the engine's setting.
+        strict_overflow: raise :class:`~repro.kernels.window.
+                   WindowOverflowError` (with the latched lane ids) when a
+                   time window's per-lane rate-bound ``ovf`` latch trips,
+                   instead of silently degrading counts to a lower bound.
+                   The raise happens *after* the chunk was applied — the
+                   latch is persistent state, surfaced in snapshots.
         """
         if isinstance(engine, str):
             raise TypeError("pass a constructed VectorEngine/MultiQueryEngine"
@@ -127,6 +175,7 @@ class StreamingVectorEngine:
             else getattr(engine, "arena_impl", "block"))
         self._arena_tables = (engine.arena_tables()
                               if arena_capacity is not None else None)
+        self.strict_overflow = bool(strict_overflow)
         self._roots: Dict[Tuple[int, int], np.ndarray] = {}
         # time windows: last timestamp per lane, carried across feeds for
         # the monotonicity audit (stream order must equal time order)
@@ -214,6 +263,132 @@ class StreamingVectorEngine:
         return self._trace_count
 
     # ------------------------------------------------------------------
+    # crash-safe snapshots (DESIGN.md §10)
+    # ------------------------------------------------------------------
+    _compat_keys = ("format", "engine", "query_fingerprint", "window",
+                    "chunk_len", "batch", "num_states", "num_queries",
+                    "arena_capacity")
+
+    def query_fingerprint(self) -> str:
+        """Deterministic digest of the compiled query + encoder.
+
+        Hashes the device tables (transition matrices, finals, class map,
+        init mask) and the encoder layout (attribute order, predicate
+        specs, string vocabularies) — everything that determines what the
+        donated state *means*.  Stable across processes (unlike ``hash()``
+        or object reprs), so a checkpoint written by one process refuses to
+        restore into an engine compiled from a different query.
+        """
+        h = hashlib.sha256()
+        enc = self.encoder
+        h.update(repr((enc.attrs, enc.specs,
+                       sorted((a, sorted(v.items()))
+                              for a, v in enc.vocab.items()))).encode())
+        for arr in (self._m_all, self._finals_q, self._class_of,
+                    self._init_mask):
+            a = np.asarray(arr)
+            h.update(str((a.shape, str(a.dtype))).encode())
+            h.update(a.tobytes())
+        return h.hexdigest()
+
+    def manifest(self) -> dict:
+        """Restore-compatibility manifest (JSON-able, DESIGN.md §10).
+
+        Recorded as the checkpoint's ``extra`` so :meth:`restore` can
+        verify the snapshot and the engine agree on query, window, chunk
+        geometry, and capacities *before* touching any state.
+        """
+        w = self.window
+        return {
+            "format": SNAPSHOT_FORMAT,
+            "engine": type(self).__name__,
+            "query_fingerprint": self.query_fingerprint(),
+            "window": {"kind": w.kind, "size": float(w.size),
+                       "time_attr": w.time_attr, "ring": int(w.ring)},
+            "chunk_len": int(self.chunk_len),
+            "batch": int(self.batch),
+            "num_states": int(self._finals_q.shape[-1]),
+            "num_queries": int(self._finals_q.shape[0]),
+            "arena_capacity": (None if self.arena_capacity is None
+                               else int(self.arena_capacity)),
+            "strict_overflow": bool(self.strict_overflow),
+            "window_overflow": [int(b) for b in
+                                np.nonzero(self.window_overflow)[0]],
+            "pos": int(self._pos),
+            "num_roots": len(self._roots),
+        }
+
+    def snapshot(self) -> dict:
+        """Host-side snapshot: ``{"arrays": {name: np.ndarray}, "meta"}``.
+
+        Round-trips the full donated pytree — counting ring, timestamp
+        ring, ``ovf`` latches, and the tECS arena (node store, cell table,
+        bump pointers) — plus the stream cursor, the cross-chunk
+        monotonicity carry, and the recorded enumeration roots.  Copies
+        device buffers to host *before* the next :meth:`feed` donates
+        them, reusing the :attr:`state` copy semantics, so snapshotting
+        never breaks compile-once streaming.  Feed the parts to
+        ``CheckpointManager.save(step, snap["arrays"],
+        extra=snap["meta"])`` for an atomic on-disk checkpoint.
+        """
+        arrays: Dict[str, np.ndarray] = {}
+        _flatten_state("state", self._state, arrays)
+        if self._last_ts is not None:
+            arrays["last_ts"] = np.asarray(self._last_ts, np.float32)
+        self._snapshot_roots(arrays)
+        return {"arrays": arrays, "meta": self.manifest()}
+
+    def _snapshot_roots(self, arrays: Dict[str, np.ndarray]) -> None:
+        keys = sorted(self._roots)
+        if keys:
+            arrays["roots_key"] = np.asarray(keys, np.int64)      # (N, 2)
+            arrays["roots_val"] = np.stack(
+                [np.asarray(self._roots[k], np.int32) for k in keys])
+
+    def _restore_roots(self, arrays: Dict[str, np.ndarray]) -> None:
+        self._roots.clear()
+        if "roots_key" in arrays:
+            for k, v in zip(arrays["roots_key"], arrays["roots_val"]):
+                self._roots[(int(k[0]), int(k[1]))] = np.asarray(v, np.int32)
+
+    def _check_manifest(self, meta: dict) -> None:
+        mine = self.manifest()
+        bad = [f"{k}: snapshot {meta.get(k)!r} != engine {mine[k]!r}"
+               for k in self._compat_keys if meta.get(k) != mine[k]]
+        if bad:
+            raise ValueError(
+                "snapshot is incompatible with this engine — restoring "
+                "would silently corrupt state:\n  " + "\n  ".join(bad))
+
+    def restore(self, snapshot: dict) -> None:
+        """Load a :meth:`snapshot` (or a checkpoint read back through
+        ``CheckpointManager.load_arrays``) into this engine.
+
+        Validates the manifest first: query fingerprint, window, chunk
+        geometry, and capacities must all match, or the call raises without
+        touching state.  After a successful restore the engine continues
+        bit-identically to the engine the snapshot was taken from —
+        replaying the same chunks yields the same counts, hits, and
+        enumerable roots.
+        """
+        meta, arrays = snapshot["meta"], snapshot["arrays"]
+        self._check_manifest(meta)
+        self._state = _restore_like(
+            "state", self._init_full_state(self.batch), arrays)
+        self._pos = int(meta["pos"])
+        self._last_ts = (np.asarray(arrays["last_ts"], np.float32)
+                         if "last_ts" in arrays else None)
+        self._restore_roots(arrays)
+
+    def _check_overflow(self) -> None:
+        """Post-feed strict-mode gate on the latched rate-bound flags."""
+        if not self.strict_overflow:
+            return
+        ovf = self.window_overflow
+        if ovf.any():
+            raise wkern.WindowOverflowError(np.nonzero(ovf)[0])
+
+    # ------------------------------------------------------------------
     def feed(self, streams: Sequence[Sequence[Event]]
              ) -> Tuple[np.ndarray, List[Tuple[int, int]]]:
         """Feed one chunk of B streams × chunk_len events.
@@ -287,6 +462,7 @@ class StreamingVectorEngine:
             roots_np = np.asarray(roots)
             for p, b in hits:
                 self._roots[(p, b)] = roots_np[p - t0, b]
+        self._check_overflow()
         return counts, hits
 
     # ------------------------------------------------------------------

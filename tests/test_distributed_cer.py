@@ -64,6 +64,64 @@ def test_sharded_pipeline_matches_local_fused():
     np.testing.assert_allclose(np.asarray(c_sh), np.asarray(c_loc))
 
 
+def test_sharded_time_window_parity_with_host():
+    """ROADMAP known gap: multi-lane `route_partitioned_chunk` with SHIPPED
+    timestamps vs the host oracle, NULL-key rows included (DESIGN.md §9).
+
+    Timestamps ride the router as a bitcast payload column; the local
+    partitioned step must reproduce the host PartitionedEngine's per-
+    substream time windows exactly (integer ticks: f32-exact)."""
+    import random
+
+    from repro.core import Event, compile_query
+    from repro.core.engine import Engine, WindowSpec
+    from repro.core.partition import NULL_KEY_HASH, PartitionedEngine
+    from repro.vector import PartitionedStreamingEngine, VectorEngine
+    from repro.vector.distributed import route_partitioned_chunk
+
+    qtext = "SELECT * FROM S WHERE A ; B+ ; C WITHIN 12 seconds"
+    rng = random.Random(19)
+    t, stream = 0, []
+    for _ in range(64):
+        t += rng.randint(1, 2)
+        stream.append(Event(rng.choice("ABC"),
+                            {} if rng.random() < 0.1
+                            else {"uid": rng.choice(["a", "b", None])},
+                            timestamp=float(t)))
+    q = compile_query(qtext)
+    pe = PartitionedEngine(
+        lambda: Engine(q.cea, window=WindowSpec.time(12.0)), ("uid",))
+    want = [len(pe.process(e)) for e in stream]
+    assert sum(want) > 0
+
+    ve = VectorEngine(qtext, max_window_events=16)
+    pse = PartitionedStreamingEngine(ve, ("uid",), chunk_len=16,
+                                     num_lanes=8)
+    mesh = make_host_mesh()
+    got = np.zeros(len(stream), np.int64)
+    hits = []
+    for lo in range(0, len(stream), 16):
+        attrs, keys, ts = ve.encoder.encode_stream_keyed_ts(
+            stream[lo:lo + 16], ("uid",))
+        pos = np.arange(lo, lo + 16, dtype=np.int32)
+        with use_mesh(mesh):
+            a2, k2, p2, ts2, valid, keep = route_partitioned_chunk(
+                mesh, jnp.asarray(attrs), jnp.asarray(keys),
+                jnp.asarray(pos), jnp.asarray(ts))
+        # NULL-key rows (NULL uid or missing attr) drop sender-side
+        np.testing.assert_array_equal(
+            np.asarray(keep), keys != np.uint32(NULL_KEY_HASH))
+        p2 = np.asarray(p2)
+        counts, h = pse.feed_keyed(a2, k2, positions=p2, event_ts=ts2)
+        got[p2[np.asarray(valid)]] = counts[np.asarray(valid)]
+        hits += h
+    assert got.tolist() == want
+    assert sorted(hits) == [j for j, c in enumerate(want) if c > 0]
+    # mesh-sharded operands respecialize the local step once against the
+    # fresh (unsharded) initial state; it stays compiled thereafter
+    assert pse.compile_count <= 2
+
+
 def test_router_single_shard_identity_up_to_capacity():
     """On one shard the router is a bucket-compaction: every kept event lands
     in a slot of its own hash bucket."""

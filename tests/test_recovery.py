@@ -1,0 +1,435 @@
+"""Crash-safe streaming (DESIGN.md §10): snapshot/restore round-trips,
+exactly-once replay through the RecoveringStreamRunner, elastic lane
+rescaling, the strict-overflow gate, and the PARTITION BY fallback clock.
+
+The recovery contract under test: restore is bit-exact (replaying the same
+chunks yields identical counts, hits, and enumerable matches), a kill -9 at
+any chunk boundary or mid-log-write preserves the cumulative emitted match
+set, and a snapshot refuses to restore onto a mismatched engine.
+"""
+import os
+import random
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import Event, compile_query
+from repro.core.engine import Engine, WindowSpec
+from repro.core.partition import PartitionedEngine
+from repro.kernels.window import WindowOverflowError
+from repro.runtime import (MatchLog, RecoveringStreamRunner,
+                           cumulative_matches)
+from repro.vector import PartitionedStreamingEngine, VectorEngine
+from repro.vector.streaming import StreamingVectorEngine
+
+QTEXT = "SELECT * FROM S WHERE A ; B+ ; C WITHIN 5 events"
+QT_TIME = "SELECT * FROM S WHERE A ; B+ ; C WITHIN 7 seconds"
+
+
+def make_keyed_stream(seed, T, keys=("u1", "u2", 7, None), p_missing=0.05):
+    rng = random.Random(seed)
+    return [Event(rng.choice("ABCX"),
+                  {} if rng.random() < p_missing
+                  else {"uid": rng.choice(keys)})
+            for _ in range(T)]
+
+
+def make_ts_streams(seed, T, B):
+    """B monotone integer-timestamp streams (f32-exact)."""
+    rng = random.Random(seed)
+    out = []
+    for b in range(B):
+        t, s = 0, []
+        for _ in range(T):
+            t += rng.randint(1, 3)
+            s.append(Event(rng.choice("ABCX"), {}, timestamp=float(t)))
+        out.append(s)
+    return out
+
+
+def feed_all(engine, chunks):
+    return [engine.feed(ch) for ch in chunks]
+
+
+def assert_same_results(a, b):
+    assert len(a) == len(b)
+    for (ca, ha), (cb, hb) in zip(a, b):
+        np.testing.assert_array_equal(ca, cb)
+        assert ha == hb
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore round-trips
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_plain_streaming():
+    """Count window, B pre-partitioned streams: restore onto a fresh engine
+    continues bit-identically to the original."""
+    streams = make_ts_streams(1, 48, 2)
+    chunks = [[s[lo:lo + 8] for s in streams] for lo in range(0, 48, 8)]
+    mk = lambda: StreamingVectorEngine(VectorEngine(QTEXT), chunk_len=8,
+                                       batch=2)
+    se = mk()
+    feed_all(se, chunks[:3])
+    snap = se.snapshot()
+    ref = feed_all(se, chunks[3:])
+
+    se2 = mk()
+    se2.restore(snap)
+    assert se2.position == 24
+    assert_same_results(feed_all(se2, chunks[3:]), ref)
+    assert se2.compile_count == 1
+
+
+def test_roundtrip_time_window_carries_audit():
+    """Time window: the ts ring, ovf latches, AND the cross-chunk
+    monotonicity carry all survive — a regressing continuation still
+    raises after restore."""
+    streams = make_ts_streams(2, 32, 2)
+    chunks = [[s[lo:lo + 8] for s in streams] for lo in range(0, 32, 8)]
+    mk = lambda: StreamingVectorEngine(
+        VectorEngine(QT_TIME, use_pallas=False, max_window_events=16),
+        chunk_len=8, batch=2)
+    se = mk()
+    feed_all(se, chunks[:2])
+    snap = se.snapshot()
+    ref = feed_all(se, chunks[2:])
+
+    se2 = mk()
+    se2.restore(snap)
+    assert_same_results(feed_all(se2, chunks[2:]), ref)
+
+    se3 = mk()
+    se3.restore(snap)
+    stale = [[Event("A", {}, timestamp=0.0)] * 8 for _ in range(2)]
+    with pytest.raises(ValueError, match="monotone"):
+        se3.feed(stale)  # restored last-ts carry catches the regression
+
+
+def test_roundtrip_arena_enumeration():
+    """Arena engine: node store, cell table, bump pointers, and recorded
+    roots round-trip — the restored engine enumerates the SAME complex
+    events for pre- and post-snapshot hits."""
+    rng = random.Random(3)
+    stream = [Event(rng.choice("ABC"), {}) for _ in range(64)]
+    chunks = [[stream[lo:lo + 16]] for lo in range(0, 64, 16)]
+    mk = lambda: StreamingVectorEngine(
+        VectorEngine(QTEXT, use_pallas=False), chunk_len=16, batch=1,
+        arena_capacity=1 << 12)
+    se = mk()
+    pre = feed_all(se, chunks[:2])
+    snap = se.snapshot()
+    ref = feed_all(se, chunks[2:])
+    all_hits = [h for _, hs in pre + ref for h in hs]
+    assert all_hits
+
+    se2 = mk()
+    se2.restore(snap)
+    assert_same_results(feed_all(se2, chunks[2:]), ref)
+
+    def norm(d):
+        return {k: {(c.start, c.end, c.data) for c in v}
+                for k, v in d.items()}
+    assert norm(se2.enumerate_hits(all_hits)) == \
+        norm(se.enumerate_hits(all_hits))
+
+
+def test_roundtrip_partitioned_null_keys_through_disk():
+    """PARTITION BY with NULL keys + arena, through the on-disk
+    CheckpointManager (manifest JSON round-trip included)."""
+    stream = make_keyed_stream(4, 96)
+    mk = lambda: PartitionedStreamingEngine(
+        VectorEngine(QTEXT, use_pallas=False), ("uid",), chunk_len=16,
+        num_lanes=8, arena_capacity=1 << 12)
+    pse = mk()
+    for lo in range(0, 48, 16):
+        pse.feed(stream[lo:lo + 16])
+    snap = pse.snapshot()
+    ref = [pse.feed(stream[lo:lo + 16]) for lo in range(48, 96, 16)]
+
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        mgr.save(3, snap["arrays"], extra=dict(snap["meta"], chunk=3))
+        arrays, meta = mgr.load_arrays()
+        assert meta["chunk"] == 3
+        pse2 = mk()
+        pse2.restore({"arrays": arrays, "meta": meta})
+    got = [pse2.feed(stream[lo:lo + 16]) for lo in range(48, 96, 16)]
+    assert_same_results(got, ref)
+    assert pse2.stats.dropped_null == pse.stats.dropped_null
+    assert pse2.compile_count == 1
+
+
+def test_restore_mismatch_raises():
+    """Wrong query / chunk geometry / capacities: restore refuses before
+    touching any state."""
+    se = StreamingVectorEngine(VectorEngine(QTEXT), chunk_len=8, batch=2)
+    se.feed([[Event("A", {})] * 8] * 2)
+    snap = se.snapshot()
+
+    other_q = StreamingVectorEngine(
+        VectorEngine("SELECT * FROM S WHERE A ; C WITHIN 5 events"),
+        chunk_len=8, batch=2)
+    with pytest.raises(ValueError, match="query_fingerprint"):
+        other_q.restore(snap)
+
+    other_chunk = StreamingVectorEngine(VectorEngine(QTEXT), chunk_len=16,
+                                        batch=2)
+    with pytest.raises(ValueError, match="chunk_len"):
+        other_chunk.restore(snap)
+
+    other_arena = StreamingVectorEngine(
+        VectorEngine(QTEXT, use_pallas=False), chunk_len=8, batch=2,
+        arena_capacity=1 << 10)
+    with pytest.raises(ValueError, match="arena_capacity"):
+        other_arena.restore(snap)
+
+    # a PARTITION BY snapshot must not land on a different key set either
+    pse = PartitionedStreamingEngine(VectorEngine(QTEXT), ("uid",),
+                                     chunk_len=8, num_lanes=4)
+    pse.feed(make_keyed_stream(5, 8))
+    psnap = pse.snapshot()
+    other_keys = PartitionedStreamingEngine(VectorEngine(QTEXT),
+                                            ("region",), chunk_len=8,
+                                            num_lanes=4)
+    with pytest.raises(ValueError, match="key_attrs"):
+        other_keys.restore(psnap)
+
+
+# ---------------------------------------------------------------------------
+# exactly-once replay through the runner
+# ---------------------------------------------------------------------------
+
+def test_runner_exactly_once_after_simulated_crash(tmp_path):
+    """Abandon the runner mid-interval (checkpoint behind the log) with a
+    torn tail record — the restarted runner resumes from the checkpoint,
+    suppresses replayed chunks, and the cumulative emitted match set is
+    bit-identical to an uninterrupted run."""
+    stream = make_keyed_stream(9, 320)
+    chunks = [stream[lo:lo + 16] for lo in range(0, 320, 16)]
+    mk = lambda: PartitionedStreamingEngine(
+        VectorEngine(QTEXT, use_pallas=False), ("uid",), chunk_len=16,
+        num_lanes=8, arena_capacity=1 << 12)
+
+    d_ref = str(tmp_path / "uninterrupted")
+    r = RecoveringStreamRunner(mk(), d_ref, every=4)
+    assert not r.resume()                      # fresh directory: no-op
+    for ch in chunks:
+        counts, hits, emitted = r.process(ch)
+        assert emitted
+    r.close()
+    oracle = cumulative_matches(d_ref)
+    assert oracle["hits"]                      # the workload does match
+
+    d = str(tmp_path / "crashed")
+    r1 = RecoveringStreamRunner(mk(), d, every=4)
+    for ch in chunks[:11]:                     # ckpt at 4, 8; log through 10
+        r1.process(ch)
+    # kill -9: no close(), and the log's last record is torn mid-write
+    with open(os.path.join(d, "matches.log"), "a") as f:
+        f.write('{"chunk": 99, "torn')
+
+    r2 = RecoveringStreamRunner(mk(), d, every=4)
+    assert r2.resume()
+    assert r2.chunk_index == 8                 # newest complete checkpoint
+    assert r2.replaying
+    flags = []
+    for i in range(r2.chunk_index, len(chunks)):
+        _, _, emitted = r2.process(chunks[i])
+        flags.append(emitted)
+    r2.close()
+    assert flags == [False] * 3 + [True] * 9   # chunks 8..10 suppressed
+    assert cumulative_matches(d) == oracle
+
+
+def test_runner_detects_divergent_replay(tmp_path):
+    """Replaying DIFFERENT input under the high-water mark raises instead
+    of silently corrupting the exactly-once record."""
+    mk = lambda: PartitionedStreamingEngine(
+        VectorEngine(QTEXT), ("uid",), chunk_len=16, num_lanes=8)
+    d = str(tmp_path / "div")
+    matching = [Event(t, {"uid": "u1"}) for t in "ABCABCABCABCABCA"]
+    chunks = [make_keyed_stream(11, 16), make_keyed_stream(12, 16),
+              matching]
+    r1 = RecoveringStreamRunner(mk(), d, every=2)
+    recorded = [r1.process(ch)[0] for ch in chunks]
+    assert recorded[2].sum() > 0               # chunk 2 durably has matches
+    r1.close()                                 # ckpt at 2, log through 2
+    r2 = RecoveringStreamRunner(mk(), d, every=2)
+    r2.resume()
+    assert r2.chunk_index == 2 and r2.replaying
+    wrong = [Event("X", {"uid": "u1"})] * 16   # recomputes to zero matches
+    with pytest.raises(ValueError, match="diverged"):
+        r2.process(wrong)
+    r2.close()
+
+
+def test_matchlog_torn_tail_and_high_water(tmp_path):
+    path = str(tmp_path / "m.log")
+    log = MatchLog(path)
+    log.append(0, np.asarray([0, 2, 0]), [1])
+    log.append(1, np.asarray([1, 0, 0]), [(3, 0)])
+    log.close()
+    with open(path, "a") as f:
+        f.write('{"chunk": 2, "shape": [3], "cou')   # torn mid-write
+    log2 = MatchLog(path)
+    assert log2.high_water() == 1                    # torn record invisible
+    cum = log2.cumulative()
+    assert cum["hits"] == [1, (3, 0)]
+    assert cum["counts"] == {(0, 1): 2, (1, 0): 1}
+    log2.append(2, np.asarray([0, 0, 3]), [5])       # appends after repair
+    log2.close()
+    assert MatchLog(path).high_water() == 2
+
+
+# ---------------------------------------------------------------------------
+# elastic lane rescaling
+# ---------------------------------------------------------------------------
+
+def test_rescale_8_16_8_match_parity():
+    """Mid-stream 8→16 and 16→8 lane changes preserve the match set: the
+    rescaled engines produce the same counts/hits/enumerations as an
+    uninterrupted 8-lane run."""
+    stream = make_keyed_stream(21, 128)
+    chunks = [stream[lo:lo + 16] for lo in range(0, 128, 16)]
+    mk = lambda lanes: PartitionedStreamingEngine(
+        VectorEngine(QTEXT, use_pallas=False), ("uid",), chunk_len=16,
+        num_lanes=lanes, arena_capacity=1 << 12)
+
+    base = mk(8)
+    ref = feed_all(base, chunks)
+    all_hits = [h for _, hs in ref for h in hs]
+    assert all_hits
+
+    def norm(d):
+        return {k: {(c.start, c.end, c.data) for c in v}
+                for k, v in d.items()}
+
+    # 8 lanes → 16 lanes at chunk 3, → back to 8 at chunk 6
+    e8 = mk(8)
+    got = feed_all(e8, chunks[:3])
+    e16 = mk(16)
+    e16.restore(e8.snapshot())                 # grow: fresh engine, 16 lanes
+    got += feed_all(e16, chunks[3:6])
+    e16.restore(e16.snapshot(), n_lanes=8)     # shrink: in-place re-jit
+    assert e16.num_lanes == 8
+    got += feed_all(e16, chunks[6:])
+    assert_same_results(got, ref)
+    assert e16.compile_count == 1              # one compile per geometry
+    post = [h for _, hs in got[6:] for h in hs]
+    assert norm(e16.enumerate_hits(post)) == norm(base.enumerate_hits(post))
+
+
+def test_rescale_shrink_evicts_lru_lanes():
+    """Shrinking below the live partition count keeps the most recently
+    active lanes and counts the dropped ones as evictions."""
+    mk = lambda u: [Event("A", {"uid": u})] * 4
+    pse = PartitionedStreamingEngine(VectorEngine(QTEXT), ("uid",),
+                                     chunk_len=4, num_lanes=8)
+    for u in ("a", "b", "c", "d"):             # d most recent, a oldest
+        pse.feed(mk(u))
+    assert pse.num_active_lanes == 4
+    small = PartitionedStreamingEngine(VectorEngine(QTEXT), ("uid",),
+                                       chunk_len=4, num_lanes=2)
+    small.restore(pse.snapshot())
+    assert small.num_active_lanes == 2
+    assert small.stats.evicted_lanes == pse.stats.evicted_lanes + 2
+    # the survivors are the two most recently active partitions (c, d)
+    from repro.core.partition import stable_key_hash
+    kept = set(np.asarray(small._state["lane_keys"]).tolist())
+    assert stable_key_hash(("c",)) in kept
+    assert stable_key_hash(("d",)) in kept
+    # evicted partitions restart from scratch; survivors continue exactly
+    c, _ = small.feed(mk("d"))
+    assert small.compile_count == 1
+
+
+# ---------------------------------------------------------------------------
+# strict overflow (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_strict_overflow_raises_with_lane_ids():
+    dense = [[Event("A", {}, timestamp=i * 0.1) for i in range(16)]]
+    strict = StreamingVectorEngine(
+        VectorEngine(QT_TIME, use_pallas=False, max_window_events=8),
+        chunk_len=16, batch=1, strict_overflow=True)
+    with pytest.raises(WindowOverflowError) as ei:
+        strict.feed(dense)
+    assert ei.value.lanes == [0]
+    # NOT a RuntimeError: run_with_retries must never re-feed the chunk
+    assert not isinstance(ei.value, RuntimeError)
+    # the raise happened AFTER the chunk applied: latch is in the manifest
+    assert strict.manifest()["window_overflow"] == [0]
+
+    # default mode: same stream degrades silently, latch still surfaced
+    lax_e = StreamingVectorEngine(
+        VectorEngine(QT_TIME, use_pallas=False, max_window_events=8),
+        chunk_len=16, batch=1)
+    lax_e.feed(dense)
+    assert lax_e.window_overflow.tolist() == [True]
+
+
+def test_strict_overflow_partitioned_stats_and_manifest():
+    dense = [Event("A", {"uid": "a"}, timestamp=i * 0.1) for i in range(16)]
+    pse = PartitionedStreamingEngine(
+        VectorEngine(QT_TIME, use_pallas=False, max_window_events=8),
+        ("uid",), chunk_len=16, num_lanes=4, strict_overflow=True)
+    with pytest.raises(WindowOverflowError) as ei:
+        pse.feed(dense)
+    assert pse.stats.overflow_lanes == len(ei.value.lanes) == 1
+    assert pse.manifest()["window_overflow"] == ei.value.lanes
+    # count windows cannot overflow: strict mode is inert there
+    cse = PartitionedStreamingEngine(VectorEngine(QTEXT), ("uid",),
+                                     chunk_len=16, num_lanes=4,
+                                     strict_overflow=True)
+    cse.feed(make_keyed_stream(7, 16))
+    assert cse.stats.overflow_lanes == 0
+
+
+# ---------------------------------------------------------------------------
+# PARTITION BY fallback clock (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_fallback_clock_matches_host_partitioned_engine():
+    """Timestamp-less events + time window + PARTITION BY: the device must
+    reproduce the host's *substream-local* arrival-order clock (per-
+    partition position), not the global stream position."""
+    stream = make_keyed_stream(31, 64, keys=("a", "b", None))
+    q = compile_query(QT_TIME)
+    pe = PartitionedEngine(
+        lambda: Engine(q.cea, window=WindowSpec.time(7.0)), ("uid",))
+    want = [len(pe.process(e)) for e in stream]
+    assert sum(want) > 0
+
+    pse = PartitionedStreamingEngine(
+        VectorEngine(QT_TIME, max_window_events=16), ("uid",),
+        chunk_len=16, num_lanes=8)
+    got = []
+    for lo in range(0, 64, 16):
+        c, _ = pse.feed(stream[lo:lo + 16])
+        got += c.tolist()
+    assert got == want
+    assert pse.compile_count == 1
+
+
+def test_fallback_clock_survives_checkpoint():
+    """The per-partition rank counters are part of the manifest: a restored
+    engine continues the clock where the snapshot left it (a reset clock
+    would time-shift every substream and change window contents)."""
+    stream = make_keyed_stream(33, 96, keys=("a", "b", None))
+    mk = lambda: PartitionedStreamingEngine(
+        VectorEngine(QT_TIME, max_window_events=16), ("uid",),
+        chunk_len=16, num_lanes=8)
+    pse = mk()
+    for lo in range(0, 48, 16):
+        pse.feed(stream[lo:lo + 16])
+    snap = pse.snapshot()
+    assert any(int(n) > 0 for n in snap["meta"]["fallback_clock"].values())
+    ref = [pse.feed(stream[lo:lo + 16]) for lo in range(48, 96, 16)]
+
+    pse2 = mk()
+    pse2.restore(snap)
+    got = [pse2.feed(stream[lo:lo + 16]) for lo in range(48, 96, 16)]
+    assert_same_results(got, ref)
