@@ -677,6 +677,133 @@ def compare(num_events: int = 4096, batch: int = 16, epsilon: int = 95,
     }
 
 
+def fleet_churn(total_events: int = 4096, batch: int = 8, chunk: int = 256,
+                churn_ops: int = 100, reps: int = 3) -> Dict:
+    """Dynamic query fleet (DESIGN.md §11): churn compile amplification and
+    steady-state overhead vs hand-built static engines.
+
+    Phase 1 churns ``churn_ops`` add/remove operations over a pool of
+    queries spanning two WITHIN windows (two buckets), feeding a chunk
+    every few ops so each repack migrates real in-flight state, and
+    records how many XLA traces that cost — the compile cache must hold
+    it to at most one per distinct bucket geometry no matter how many
+    repacks happen.  Phase 2 reconciles the fleet to a canonical
+    steady-state set whose packings sit near their pow2 state buckets
+    (the regime the bucketing is designed for — occupancy is recorded so
+    a packing-density regression surfaces) and times a full pass of the
+    stream through the fleet vs one hand-built MultiQueryEngine +
+    StreamingVectorEngine per window group (same ref dataflow, minimal
+    padding), asserting count parity per query — the ratio is the
+    bucketed packing's padding overhead at steady-state occupancy, gated
+    at >= 0.9x in scripts/check.sh.
+    """
+    from repro.runtime.fleet import QueryFleet
+
+    rng = random.Random(11)
+    pool = [f"{q} WITHIN {(48, 64)[i % 2]} events"
+            for i, q in enumerate(QUERIES)]
+    # canonical steady-state set: 7 queries at 59 packed states fill the
+    # 64-state bucket to 92%, 2 queries at 16 fill the 16-state bucket
+    # exactly (state counts per query: 7,8,9,7,5,7,12,9)
+    steady = ([f"{QUERIES[i]} WITHIN 64 events" for i in (0, 1, 2, 3, 5, 6, 7)]
+              + [f"{QUERIES[i]} WITHIN 48 events" for i in (3, 7)])
+    types = ["A1", "A2", "A3"]
+    streams = [random_stream(StreamSpec(types, seed=70 + b), total_events)
+               for b in range(batch)]
+    n_chunks = total_events // chunk
+    chunks = [[s[lo:lo + chunk] for s in streams]
+              for lo in range(0, n_chunks * chunk, chunk)]
+
+    # -- phase 1: churn -------------------------------------------------
+    fleet = QueryFleet(chunk_len=chunk, batch=batch)
+    live, ci = [], 0
+    t0 = time.perf_counter()
+    for op in range(churn_ops):
+        if len(live) <= 2 or (len(live) < 8 and rng.random() < 0.6):
+            live.append(fleet.add_query(pool[op % len(pool)]))
+        else:
+            fleet.remove_query(live.pop(rng.randrange(len(live))))
+        if op % 5 == 4:
+            fleet.feed(chunks[ci % n_chunks])
+            ci += 1
+    churn_dt = time.perf_counter() - t0
+    assert fleet.compile_count <= fleet.distinct_geometries, (
+        fleet.compile_count, fleet.distinct_geometries)
+
+    # -- phase 2: steady state vs static baselines ----------------------
+    # reconcile to the canonical set (more churn through the same cache),
+    # then measure from a clean stream position
+    for qid in list(fleet.live_qids):
+        fleet.remove_query(qid)
+    for q in steady:
+        fleet.add_query(q)
+    fleet.reset()
+    texts = {qid: fleet.query_text(qid) for qid in fleet.live_qids}
+    fleet_counts = [fleet.feed(c)[0] for c in chunks]  # warm + correctness
+
+    groups: Dict[tuple, list] = {}
+    for qid in fleet.live_qids:
+        groups.setdefault(fleet.bucket_of(qid), []).append(qid)
+    statics = []
+    for key in sorted(groups, key=lambda k: (k[0], k[1], k[2] or "")):
+        qids = groups[key]
+        eng = MultiQueryEngine([texts[q] for q in qids],
+                               use_pallas=False, impl="ref")
+        se = StreamingVectorEngine(eng, chunk, batch, impl="ref")
+        outs = [se.feed(c)[0] for c in chunks]
+        for j, qid in enumerate(qids):
+            col = fleet.live_qids.index(qid)
+            for fc, oc in zip(fleet_counts, outs):
+                np.testing.assert_array_equal(fc[:, :, col], oc[:, :, j])
+        statics.append(se)
+    compiles_after_warm = fleet.compile_count
+
+    def run_fleet():
+        fleet.reset()
+        for c in chunks:
+            fleet.feed(c)
+
+    def run_static():
+        for se in statics:
+            se.reset()
+        for c in chunks:
+            for se in statics:
+                se.feed(c)
+
+    dts_fleet, dts_static = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run_fleet()
+        dts_fleet.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_static()
+        dts_static.append(time.perf_counter() - t0)
+    dt_fleet, dt_static = min(dts_fleet), min(dts_static)
+    assert fleet.compile_count == compiles_after_warm, (
+        "steady-state feeds recompiled", fleet.compile_count)
+
+    ev = n_chunks * chunk * batch
+    occupancy = {
+        f"{b.key[0]}/{b.key[1]:g}":
+            {"states": b.packing.num_states,
+             "padded_states": b.packing.padded_states}
+        for b in fleet._sorted_buckets()}
+    return {
+        "churn_ops": churn_ops,
+        "live_queries": len(fleet.live_qids),
+        "buckets": fleet.num_buckets,
+        "occupancy": occupancy,
+        "compile_count": fleet.compile_count,
+        "distinct_geometries": fleet.distinct_geometries,
+        "cache_hits": fleet.cache_hits,
+        "churn_ops_per_s": churn_ops / churn_dt,
+        "fleet_eps": ev / dt_fleet,
+        "static_eps": ev / dt_static,
+        "ratio": dt_static / dt_fleet,
+        "floor": 0.9,
+    }
+
+
 def main() -> None:
     r = compare_fused()
     print(f"fused pipeline: 3-dispatch {r['unfused_s']*1e3:.1f} ms → "
@@ -709,6 +836,12 @@ def main() -> None:
               f"baseline {r['baseline_s']*1e3:.1f} ms → "
               f"packed {r['packed_s']*1e3:.1f} ms "
               f"({r['speedup']:.2f}×, {r['packed_eps']:.0f} query-events/s)")
+    r = fleet_churn()
+    print(f"fleet churn: {r['churn_ops']} ops → {r['compile_count']} compiles"
+          f" ({r['distinct_geometries']} distinct geometries, "
+          f"{r['cache_hits']} cache hits, {r['churn_ops_per_s']:.1f} ops/s); "
+          f"steady state {r['fleet_eps']:.0f} events/s vs static "
+          f"{r['static_eps']:.0f} ({r['ratio']:.2f}×)")
 
 
 if __name__ == "__main__":

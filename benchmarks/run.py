@@ -57,6 +57,14 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
                 enumeration["large"]["scan_eps"]) / best_stream)
         enumeration["scan_vs_streaming_floor"] = 0.02
     packed = perf_cer.compare(num_events=n, batch=batch, n_queries=4)
+    # dynamic-fleet churn gate data (scripts/check.sh): the compile cache
+    # must hold traces to <= distinct bucket geometries across the whole
+    # churn, and the bucketed packing's steady-state throughput must stay
+    # within the floor ratio of hand-built static engines.  NOT part of
+    # compile_counts: the fleet legitimately compiles once per geometry.
+    fleet = perf_cer.fleet_churn(
+        total_events=n, batch=batch, chunk=min(256, n),
+        churn_ops=60 if quick else 120)
     # count-window streaming floor (scripts/check.sh): the time-window
     # masking generalization must not regress the count path.  The floor is
     # an absolute conservative constant — measured ~300k ev/s on this
@@ -77,6 +85,7 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
         "recovery_overhead": recovery,
         "packed_multiquery": {k: v for k, v in packed.items()
                               if k != "single_states"},
+        "fleet_churn": fleet,
         "compile_counts": dict(
             {f"chunk_{row['chunk']}": row["compile_count"]
              for row in streaming},
@@ -117,6 +126,12 @@ def main() -> None:
               f"us/match (delay ratio {enum_['delay_ratio']:.2f}, "
               f"{enum_['large']['enum_speedup']:.2f}× over replay), "
               f"compiles={rec['compile_counts']}")
+        fl = rec["fleet_churn"]
+        print(f"# fleet churn: {fl['churn_ops']} ops → "
+              f"{fl['compile_count']} compiles "
+              f"({fl['distinct_geometries']} geometries, "
+              f"{fl['cache_hits']} cache hits), steady state "
+              f"{fl['fleet_eps']:.0f} ev/s = {fl['ratio']:.2f}× static")
         return
 
     from benchmarks import cer_paper

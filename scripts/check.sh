@@ -35,6 +35,13 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     python examples/crash_recovery.py > /dev/null
     echo "crash recovery smoke OK (kill -9 + restart, exactly-once)"
 
+    # dynamic query fleet smoke (DESIGN.md §11): hot add/remove queries
+    # mid-stream; every query lifetime must stay bit-identical to a fresh
+    # engine fed the same events, with at most one compile per distinct
+    # bucket geometry (the example exits nonzero otherwise).
+    python examples/fleet_churn.py > /dev/null
+    echo "fleet churn smoke OK (hot add/remove, migration parity)"
+
     python -m benchmarks.run --quick --cer-json BENCH_cer.json
     # Regression gates:
     #  * the streaming / partitioned / enumeration / time-window cells must
@@ -46,7 +53,11 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     #    regression to per-event store updates would land back there;
     #  * count-window streaming_eps must stay above the recorded absolute
     #    floor — the time-window masking generalization (DESIGN.md §9)
-    #    must not regress the count path's closed-form eviction.
+    #    must not regress the count path's closed-form eviction;
+    #  * the dynamic fleet's churn must compile at most once per distinct
+    #    bucket geometry, and its steady-state throughput must stay within
+    #    the recorded floor ratio of hand-built static engines
+    #    (DESIGN.md §11).
     python - <<'EOF'
 import json, sys
 rec = json.load(open("BENCH_cer.json"))
@@ -94,5 +105,21 @@ if rc["overhead_ratio"] < rc["floor"]:
 print(f"recovery overhead OK: {rc['overhead_ratio']:.3f} >= floor "
       f"{rc['floor']} ({rc['checkpoints']} checkpoints over "
       f"{rc['events']} events, compile-once)")
+fl = rec.get("fleet_churn")
+if fl is None:
+    sys.exit("record is missing the fleet_churn row (DESIGN.md §11)")
+if fl["compile_count"] > fl["distinct_geometries"]:
+    sys.exit(f"fleet compile-cache regression: {fl['churn_ops']} churn ops "
+             f"cost {fl['compile_count']} compiles for only "
+             f"{fl['distinct_geometries']} distinct bucket geometries — "
+             f"repacks are re-tracing (DESIGN.md §11)")
+if fl["ratio"] < fl["floor"]:
+    sys.exit(f"fleet steady-state regression: fleet_eps / static_eps = "
+             f"{fl['ratio']:.3f} < floor {fl['floor']} — the bucketed "
+             f"packing's padding overhead has grown past what geometry "
+             f"bucketing should cost (DESIGN.md §11)")
+print(f"fleet churn OK: {fl['compile_count']} compiles <= "
+      f"{fl['distinct_geometries']} geometries over {fl['churn_ops']} ops; "
+      f"steady state {fl['ratio']:.2f}x static >= floor {fl['floor']}")
 EOF
 fi

@@ -1,8 +1,10 @@
 from .fault_tolerance import (HeartbeatMonitor, RetryPolicy, StepTimer,
                               run_with_retries)
+from .fleet import CompileCache, QueryFleet
 from .recovery import MatchLog, RecoveringStreamRunner, cumulative_matches
 from .trainer import Trainer, TrainerConfig
 
 __all__ = ["HeartbeatMonitor", "RetryPolicy", "StepTimer", "run_with_retries",
+           "CompileCache", "QueryFleet",
            "MatchLog", "RecoveringStreamRunner", "cumulative_matches",
            "Trainer", "TrainerConfig"]

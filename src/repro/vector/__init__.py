@@ -2,13 +2,18 @@
 from ..kernels.window import DeviceWindow, resolve_window, window_overflow
 from .encoder import EventEncoder
 from .engine import VectorEngine, VectorQueryTables
+from .multiquery import (MultiQueryEngine, Packing, PackingInvariantError,
+                         build_packing, check_packing_invariants)
 from .partitioned import PartitionedStreamingEngine, PartitionStats
-from .streaming import StreamingVectorEngine
+from .streaming import StreamingVectorEngine, migrate_packed_arrays
 from .symbolic import SymbolicCEA, compile_symbolic
 from .tecs_arena import ArenaOverflow, ArenaSnapshot
 
 __all__ = ["DeviceWindow", "EventEncoder", "VectorEngine",
-           "VectorQueryTables", "PartitionedStreamingEngine",
-           "PartitionStats", "StreamingVectorEngine", "SymbolicCEA",
+           "VectorQueryTables", "MultiQueryEngine", "Packing",
+           "PackingInvariantError", "build_packing",
+           "check_packing_invariants", "PartitionedStreamingEngine",
+           "PartitionStats", "StreamingVectorEngine",
+           "migrate_packed_arrays", "SymbolicCEA",
            "compile_symbolic", "ArenaOverflow", "ArenaSnapshot",
            "resolve_window", "window_overflow"]

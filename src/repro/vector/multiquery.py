@@ -15,11 +15,22 @@ We pack q queries into one scan:
 Runs/counts are exact per query (blocks don't interact).  Speed-up ≈ the
 lane-fill ratio: q queries of S=16 in one 128-wide pack ≈ 8× fewer MXU ops
 than q padded scans — measured in benchmarks/perf_cer.py.
+
+The packing itself is a first-class :class:`Packing` descriptor
+(DESIGN.md §11): per-query state offsets/sizes, the joint-class tables, and
+optional *dead padding* of every query-dependent dimension (states, query
+slots, classes, predicate bits) up to bucket sizes.  Padded states receive
+no transitions, no seeds, and no finals mass — they are provably dead
+(:func:`check_packing_invariants`) — so engines built from two packings of
+the same bucket geometry share compiled executables.  That is what the
+dynamic :class:`repro.runtime.fleet.QueryFleet` builds on: hot add/remove
+of queries re-*packs* (host work) without re-*compiling* (device work).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+import hashlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 import jax.numpy as jnp
@@ -32,17 +43,330 @@ from ..kernels import window as wkern
 from .encoder import EventEncoder
 from .symbolic import SymbolicCEA, compile_symbolic
 
+#: a padding target: an explicit size, or a policy mapping the live size to
+#: the padded size (the fleet passes power-of-two bucket policies)
+PadSpec = Optional[Union[int, Callable[[int], int]]]
+
 
 @dataclass
 class PackedTables:
-    m_all: jnp.ndarray          # (C, Ŝ, Ŝ)
-    finals: jnp.ndarray         # (Q, Ŝ) one mask row per query
-    class_of: jnp.ndarray       # (2^k,)
-    class_ind: jnp.ndarray      # (≥2^k, C) one-hot indicator (fused path)
-    init_mask: jnp.ndarray      # (Ŝ,) 1.0 at each query's initial state
+    m_all: jnp.ndarray          # (C_pad, Ŝ_pad, Ŝ_pad)
+    finals: jnp.ndarray         # (Q_pad, Ŝ_pad) one mask row per query slot
+    class_of: jnp.ndarray       # (2^k_pad,)
+    class_ind: jnp.ndarray      # (≥2^k_pad, C_pad) one-hot (fused path)
+    init_mask: jnp.ndarray      # (Ŝ_pad,) 1.0 at each query's initial state
     offsets: List[int]          # block start per query
     sizes: List[int]
     reps: np.ndarray            # (C,) representative bit-vector per class
+
+
+class PackingInvariantError(ValueError):
+    """A packing violates the dead-padding / block-diagonal contract."""
+
+
+@dataclass
+class Packing:
+    """First-class descriptor of a packed multi-query automaton.
+
+    Everything an engine (or the fleet's migration path) needs to interpret
+    a block-diagonal state space: which query owns which state range
+    (``offsets``/``sizes`` — the de-pack map), the joint-class tables, and
+    the padded *bucket* dimensions the device arrays were allocated at.
+    ``qids`` are caller-chosen stable identifiers — state migration between
+    two packings matches queries by qid, not by slot position.
+    """
+    qids: Tuple[str, ...]
+    queries: Tuple[str, ...]             # CEQL text, aligned with qids
+    compiled: List[CompiledQuery]
+    symbolics: List[SymbolicCEA]
+    encoder: EventEncoder
+    tables: PackedTables
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    num_states: int                      # live Ŝ = Σ sizes
+    padded_states: int
+    num_queries: int
+    padded_queries: int
+    num_classes: int                     # live joint classes C
+    padded_classes: int
+    num_bits: int                        # k (shared registry width)
+    padded_bits: int
+    _fingerprint: Optional[str] = field(default=None, repr=False)
+
+    # -- de-pack maps ---------------------------------------------------
+    def slot_of(self, qid: str) -> int:
+        return self.qids.index(qid)
+
+    def state_range(self, slot: int) -> Tuple[int, int]:
+        """``[start, end)`` packed-state range owned by query ``slot``."""
+        return self.offsets[slot], self.offsets[slot] + self.sizes[slot]
+
+    def query_of_state(self) -> np.ndarray:
+        """(Ŝ_pad,) int32 de-pack map: owning query slot, -1 for padding."""
+        q = np.full(self.padded_states, -1, np.int32)
+        for qi, (off, sz) in enumerate(zip(self.offsets, self.sizes)):
+            q[off:off + sz] = qi
+        return q
+
+    # -- manifests ------------------------------------------------------
+    def spec(self) -> dict:
+        """JSON-able packing spec recorded in snapshot manifests; the
+        repack-aware restore path migrates state between two specs."""
+        return {
+            "qids": list(self.qids),
+            "offsets": list(map(int, self.offsets)),
+            "sizes": list(map(int, self.sizes)),
+            "num_states": int(self.num_states),
+            "padded_states": int(self.padded_states),
+            "num_queries": int(self.num_queries),
+            "padded_queries": int(self.padded_queries),
+        }
+
+    def _hash_tables(self, h) -> None:
+        enc = self.encoder
+        h.update(repr((enc.attrs, enc.specs,
+                       sorted((a, sorted(v.items()))
+                              for a, v in enc.vocab.items()))).encode())
+        t = self.tables
+        for arr in (t.m_all, t.finals, t.class_of, t.init_mask):
+            a = np.asarray(arr)
+            h.update(str((a.shape, str(a.dtype))).encode())
+            h.update(a.tobytes())
+
+    @property
+    def table_fingerprint(self) -> str:
+        """Digest of the packed automaton + encoder layout ONLY (no qids).
+
+        Two packings with equal table fingerprints produce bit-identical
+        device behaviour regardless of what the queries are *named* — the
+        fleet keys arena-step reuse on this, so removing a query and
+        re-adding it under a fresh qid still reuses the compiled step.
+        """
+        h = hashlib.sha256()
+        self._hash_tables(h)
+        return h.hexdigest()
+
+    @property
+    def fingerprint(self) -> str:
+        """Deterministic digest of the packed automaton + encoder layout
+        + query identities.
+
+        Extends :attr:`table_fingerprint` with ``qids``: equal fingerprints
+        mean the packed state is *interchangeable* (same device behaviour
+        AND the same membership interpretation) — crash-restore
+        verification keys on it.
+        """
+        if self._fingerprint is None:
+            h = hashlib.sha256()
+            h.update(repr(self.qids).encode())
+            self._hash_tables(h)
+            object.__setattr__(self, "_fingerprint", h.hexdigest())
+        return self._fingerprint
+
+
+def _resolve_pad(pad: PadSpec, live: int, what: str) -> int:
+    if pad is None:
+        return live
+    n = pad(live) if callable(pad) else int(pad)
+    if n < live:
+        raise ValueError(f"pad_{what}={n} is below the live size {live}")
+    return n
+
+
+def build_packing(queries: Sequence[str], *,
+                  qids: Optional[Sequence[str]] = None,
+                  pad_states: PadSpec = None,
+                  pad_queries: PadSpec = None,
+                  pad_classes: PadSpec = None,
+                  pad_bits: PadSpec = None) -> Packing:
+    """Compile ``queries`` against one shared registry into a :class:`Packing`.
+
+    ``pad_*`` grow the corresponding device-array dimension to a bucket
+    size (an int, or a policy callable ``live → padded``).  All padding is
+    *dead*: padded states get no transitions/seeds/finals, padded query
+    slots have all-zero finals rows, padded classes have all-zero
+    transition matrices, and padded predicate bits can never be set (the
+    engines' padded spec rows evaluate to constant-false) — verified by
+    :func:`check_packing_invariants`.
+    """
+    queries = list(queries)
+    if not queries:
+        raise ValueError("a packing needs at least one query")
+    if qids is None:
+        qids = tuple(f"q{i}" for i in range(len(queries)))
+    qids = tuple(qids)
+    if len(qids) != len(queries) or len(set(qids)) != len(qids):
+        raise ValueError("qids must be unique and aligned with queries")
+
+    registry = AtomRegistry()   # SHARED across queries
+    compiled = [compile_query(q, registry) for q in queries]
+    encoder = EventEncoder.from_registry(registry)
+    symbolics = [compile_symbolic(c.cea) for c in compiled]
+
+    # NOTE: every symbolic shares num_bits (shared registry), but each
+    # computed its own class partition; combine into joint classes.
+    k = symbolics[0].num_bits
+    n_vec = 1 << k
+    joint = np.stack([s.class_of for s in symbolics])        # (Q, 2^k)
+    _, class_of = np.unique(joint, axis=1, return_inverse=True)
+    n_classes = int(class_of.max()) + 1
+    # representative bitvec per joint class
+    reps = np.zeros(n_classes, dtype=np.int64)
+    for v in range(n_vec - 1, -1, -1):
+        reps[class_of[v]] = v
+
+    sizes = [s.num_states for s in symbolics]
+    S_hat = sum(sizes)
+    offsets = list(np.cumsum([0] + sizes[:-1]))
+
+    kp = _resolve_pad(pad_bits, k, "bits")
+    Sp = _resolve_pad(pad_states, S_hat, "states")
+    Qp = _resolve_pad(pad_queries, len(sizes), "queries")
+    Cp = _resolve_pad(pad_classes, n_classes, "classes")
+
+    class_of_p = np.zeros(1 << kp, np.int32)
+    class_of_p[:n_vec] = class_of.astype(np.int32)
+
+    m_all = np.zeros((Cp, Sp, Sp), np.float32)
+    finals = np.zeros((Qp, Sp), np.float32)
+    init_mask = np.zeros((Sp,), np.float32)
+    for qi, sym in enumerate(symbolics):
+        off = offsets[qi]
+        Mq = sym.transition_matrices()                       # (Cq, S, S)
+        for c in range(n_classes):
+            cq = sym.class_of[reps[c]]
+            m_all[c, off:off + sizes[qi], off:off + sizes[qi]] = Mq[cq]
+        finals[qi, off:off + sizes[qi]] = sym.finals.astype(np.float32)
+        init_mask[off + sym.initial] = 1.0
+
+    tables = PackedTables(
+        m_all=jnp.asarray(m_all), finals=jnp.asarray(finals),
+        class_of=jnp.asarray(class_of_p),
+        class_ind=ops.class_indicator(class_of_p, Cp),
+        init_mask=jnp.asarray(init_mask),
+        offsets=[int(o) for o in offsets], sizes=list(sizes), reps=reps)
+    return Packing(
+        qids=qids, queries=tuple(queries), compiled=compiled,
+        symbolics=symbolics, encoder=encoder, tables=tables,
+        offsets=tuple(int(o) for o in offsets), sizes=tuple(sizes),
+        num_states=S_hat, padded_states=Sp,
+        num_queries=len(sizes), padded_queries=Qp,
+        num_classes=n_classes, padded_classes=Cp,
+        num_bits=k, padded_bits=kp)
+
+
+def check_packing_invariants(packing: Packing) -> None:
+    """Verify the dead-padding / block-diagonal contract (DESIGN.md §11).
+
+    Raises :class:`PackingInvariantError` when any of these fail:
+
+    1. **Padded dimensions are dead** — no transitions into/out of states
+       beyond ``num_states``, no init seeding there, no finals mass on
+       padded states/query slots, all-zero matrices for padded classes,
+       and padded ``class_of`` entries map to class 0 (unreachable: padded
+       predicate bits are constant-false).
+    2. **De-pack maps partition Ŝ** — the per-query ``[offset, offset+size)``
+       ranges tile ``[0, num_states)`` exactly, without gaps or overlaps.
+    3. **Joint classes are consistent with each query's own classifier** —
+       for every bit-vector ``v`` and every query, ``v`` behaves exactly
+       like the representative of its joint class, and the block of
+       ``m_all`` owned by the query equals that query's own transition
+       matrix for the class.
+
+    The fleet runs this on every repack; it is cheap (host numpy over
+    small tables) relative to query compilation.
+    """
+    t = packing.tables
+    m = np.asarray(t.m_all)
+    fin = np.asarray(t.finals)
+    im = np.asarray(t.init_mask)
+    cof = np.asarray(t.class_of)
+    S, Sp = packing.num_states, packing.padded_states
+    Q, Qp = packing.num_queries, packing.padded_queries
+    C, Cp = packing.num_classes, packing.padded_classes
+    n_vec = 1 << packing.num_bits
+
+    def fail(msg: str):
+        raise PackingInvariantError(f"packing invariant violated: {msg}")
+
+    if m.shape != (Cp, Sp, Sp) or fin.shape != (Qp, Sp) or im.shape != (Sp,):
+        fail(f"table shapes {m.shape}/{fin.shape}/{im.shape} do not match "
+             f"the declared geometry (C_pad={Cp}, S_pad={Sp}, Q_pad={Qp})")
+    # 1. dead padding
+    if m[:, S:, :].any() or m[:, :, S:].any():
+        fail("padded states have transitions (rows/cols beyond Ŝ not zero)")
+    if m[C:].any():
+        fail("padded classes have non-zero transition matrices")
+    if im[S:].any():
+        fail("padded states are seeded by init_mask")
+    if fin[:, S:].any():
+        fail("padded states carry finals mass")
+    if fin[Q:].any():
+        fail("padded query slots carry finals mass")
+    if cof[n_vec:].any():
+        fail("padded class_of entries must map to class 0")
+    if cof[:n_vec].min() < 0 or cof[:n_vec].max() >= C:
+        fail("class_of values outside [0, num_classes)")
+    # 2. de-pack maps partition [0, Ŝ)
+    cursor = 0
+    for qi, (off, sz) in enumerate(zip(packing.offsets, packing.sizes)):
+        if off != cursor:
+            fail(f"query block {qi} starts at {off}, expected {cursor} — "
+                 "offsets must tile Ŝ contiguously")
+        if sz != packing.symbolics[qi].num_states:
+            fail(f"query block {qi} size {sz} != its automaton's "
+                 f"{packing.symbolics[qi].num_states} states")
+        cursor += sz
+    if cursor != S:
+        fail(f"blocks cover {cursor} states, packing declares Ŝ={S}")
+    if im[:S].sum() != Q:
+        fail("init_mask must seed exactly one state per live query")
+    # 3. joint classes consistent with each query's own classifier
+    reps = t.reps
+    for qi, sym in enumerate(packing.symbolics):
+        own = sym.class_of                              # (2^k,) per-query
+        if not np.array_equal(own[:n_vec],
+                              own[reps[cof[:n_vec].astype(np.int64)]]):
+            fail(f"query {qi}: some bit-vector disagrees with its joint "
+                 "class representative under the query's own classifier")
+        off, sz = packing.offsets[qi], packing.sizes[qi]
+        Mq = sym.transition_matrices()
+        for c in range(C):
+            cq = int(own[reps[c]])
+            if not np.array_equal(m[c, off:off + sz, off:off + sz], Mq[cq]):
+                fail(f"query {qi}: m_all block for joint class {c} != the "
+                     f"query's own matrix for its class {cq}")
+        if not np.array_equal(fin[qi, off:off + sz],
+                              sym.finals.astype(np.float32)):
+            fail(f"query {qi}: finals row disagrees with its automaton")
+        if im[off + sym.initial] != 1.0:
+            fail(f"query {qi}: initial state not seeded")
+
+
+def resolve_query_window(spec, *, epsilon: Optional[int] = None,
+                         max_window_events: Optional[int] = None
+                         ) -> "wkern.DeviceWindow":
+    """Resolve one query's window with fleet-style *default* kwargs.
+
+    :func:`repro.kernels.window.resolve_window` treats ``epsilon=`` /
+    ``max_window_events=`` as authoritative and raises when they contradict
+    the query's own WITHIN clause.  The fleet (and :meth:`MultiQueryEngine.
+    from_packing`) instead treats them as defaults: ``epsilon`` applies
+    only to clause-free queries, ``max_window_events`` only to time
+    windows — each query's own clause always wins.
+    """
+    import warnings as _w
+    kind = getattr(spec, "kind", "none") if spec is not None else "none"
+    with _w.catch_warnings():
+        # the clause-free shim warns per resolution; a fleet repack would
+        # repeat it on every churn op — once per process is plenty
+        _w.filterwarnings("ignore",
+                          message=".*epsilon= for a query without.*")
+        return wkern.resolve_window(
+            spec,
+            epsilon=epsilon if kind == "none" else None,
+            max_window_events=(max_window_events if kind == "time"
+                               else None))
 
 
 class MultiQueryEngine:
@@ -53,23 +377,66 @@ class MultiQueryEngine:
                  use_pallas: bool = True, b_tile: int = 8,
                  impl: Optional[str] = None, arena_impl: str = "block",
                  max_window_events: Optional[int] = None):
-        registry = AtomRegistry()   # SHARED across queries
-        self.compiled: List[CompiledQuery] = [
-            compile_query(q, registry) for q in queries]
-        self.encoder = EventEncoder.from_registry(registry)
-        self.symbolics: List[SymbolicCEA] = [
-            compile_symbolic(c.cea) for c in self.compiled]
+        self._init_from_packing(
+            build_packing(queries), epsilon=epsilon, use_pallas=use_pallas,
+            b_tile=b_tile, impl=impl, arena_impl=arena_impl,
+            max_window_events=max_window_events, strict_windows=True)
+
+    @classmethod
+    def from_packing(cls, packing: Packing,
+                     epsilon: Optional[int] = None,
+                     use_pallas: bool = True, b_tile: int = 8,
+                     impl: Optional[str] = None, arena_impl: str = "block",
+                     max_window_events: Optional[int] = None
+                     ) -> "MultiQueryEngine":
+        """Build an engine over a prebuilt (possibly padded) packing.
+
+        Window compatibility is checked on the *resolved*
+        :class:`~repro.kernels.window.DeviceWindow` (two syntactically
+        different WITHIN clauses that resolve identically may pack) — the
+        fleet routes queries into buckets by resolved window, then builds
+        each bucket's engine through here.
+        """
+        self = cls.__new__(cls)
+        self._init_from_packing(
+            packing, epsilon=epsilon, use_pallas=use_pallas, b_tile=b_tile,
+            impl=impl, arena_impl=arena_impl,
+            max_window_events=max_window_events, strict_windows=False)
+        return self
+
+    def _init_from_packing(self, packing: Packing, *, epsilon, use_pallas,
+                           b_tile, impl, arena_impl, max_window_events,
+                           strict_windows: bool):
+        self.packing = packing
+        self.compiled = list(packing.compiled)
+        self.encoder = packing.encoder
+        self.symbolics = list(packing.symbolics)
         # one scan = one ring = one window: every packed query must declare
         # the same WITHIN clause (or none, falling back to the epsilon shim)
         specs = [c.query.window for c in self.compiled]
-        keys = {(w.kind, w.size, w.time_attr) for w in specs}
-        if len(keys) > 1:
-            raise ValueError(
-                "packed queries share one scan and therefore one window; "
-                f"got {len(keys)} distinct WITHIN clauses: "
-                f"{sorted(keys, key=repr)}")
-        self.window = wkern.resolve_window(
-            specs[0], epsilon=epsilon, max_window_events=max_window_events)
+        if strict_windows:
+            keys = {(w.kind, w.size, w.time_attr) for w in specs}
+            if len(keys) > 1:
+                raise ValueError(
+                    "packed queries share one scan and therefore one "
+                    f"window; got {len(keys)} distinct WITHIN clauses: "
+                    f"{sorted(keys, key=repr)} — to mix windows, use "
+                    "repro.runtime.fleet.QueryFleet, which routes queries "
+                    "into per-window buckets instead of one pack")
+            self.window = wkern.resolve_window(
+                specs[0], epsilon=epsilon,
+                max_window_events=max_window_events)
+        else:
+            windows = {resolve_query_window(
+                s, epsilon=epsilon, max_window_events=max_window_events)
+                for s in specs}
+            if len(windows) > 1:
+                raise ValueError(
+                    "packed queries share one scan and therefore one "
+                    f"window; the packing resolves {len(windows)} distinct "
+                    "device windows — route mixed-window queries through "
+                    "repro.runtime.fleet.QueryFleet's per-window buckets")
+            self.window = windows.pop()
         self.epsilon = self.window.epsilon
         self.ring = self.window.ring
         self.use_pallas = use_pallas
@@ -78,43 +445,7 @@ class MultiQueryEngine:
             "fused" if use_pallas else "ref")
         from . import tecs_arena
         self.arena_impl = tecs_arena.check_arena_impl(arena_impl)
-        self.tables = self._pack()
-
-    # ------------------------------------------------------------------
-    def _pack(self) -> PackedTables:
-        # NOTE: every symbolic shares num_bits (shared registry), but each
-        # computed its own class partition; combine into joint classes.
-        k = self.symbolics[0].num_bits
-        n_vec = 1 << k
-        joint = np.stack([s.class_of for s in self.symbolics])   # (Q, 2^k)
-        _, class_of = np.unique(joint, axis=1, return_inverse=True)
-        n_classes = int(class_of.max()) + 1
-        # representative bitvec per joint class
-        reps = np.zeros(n_classes, dtype=np.int64)
-        for v in range(n_vec - 1, -1, -1):
-            reps[class_of[v]] = v
-
-        sizes = [s.num_states for s in self.symbolics]
-        S_hat = sum(sizes)
-        offsets = list(np.cumsum([0] + sizes[:-1]))
-        m_all = np.zeros((n_classes, S_hat, S_hat), np.float32)
-        finals = np.zeros((len(sizes), S_hat), np.float32)
-        init_mask = np.zeros((S_hat,), np.float32)
-        for qi, sym in enumerate(self.symbolics):
-            off = offsets[qi]
-            Mq = sym.transition_matrices()                       # (Cq, S, S)
-            for c in range(n_classes):
-                cq = sym.class_of[reps[c]]
-                m_all[c, off:off + sizes[qi], off:off + sizes[qi]] = Mq[cq]
-            finals[qi, off:off + sizes[qi]] = sym.finals.astype(np.float32)
-            init_mask[off + sym.initial] = 1.0
-        return PackedTables(
-            m_all=jnp.asarray(m_all), finals=jnp.asarray(finals),
-            class_of=jnp.asarray(class_of.astype(np.int32)),
-            class_ind=ops.class_indicator(class_of.astype(np.int32),
-                                          n_classes),
-            init_mask=jnp.asarray(init_mask), offsets=offsets, sizes=sizes,
-            reps=reps)
+        self.tables = packing.tables
 
     # ------------------------------------------------------------------
     @property

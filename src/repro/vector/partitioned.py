@@ -463,7 +463,9 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
                 f"position must be a global stream position (int), got "
                 f"{position!r} — the partitioned engine has no stream axis")
         rec = self._roots.get(int(position))
-        if rec is None:
+        if rec is None or int(rec[1][query]) < 0:
+            # NULL root slots appear when a repack migration adds a query
+            # after this hit was recorded — nothing to enumerate for it
             return []
         lane, roots_row = rec
         snap = snapshot if snapshot is not None else self.arena_snapshot()
@@ -613,7 +615,8 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         return dropped
 
     def restore(self, snapshot: dict, *,
-                n_lanes: Optional[int] = None) -> None:
+                n_lanes: Optional[int] = None,
+                migrate_packing: bool = False) -> None:
         """Load a :meth:`snapshot`, optionally rescaling to ``n_lanes``.
 
         The lane count is the elastic dimension: a snapshot taken at L0
@@ -623,8 +626,12 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         order when shrinking.  ``n_lanes`` rebuilds the compiled step for
         the new geometry (a rescale is a restart event: exactly one fresh
         compile, after which ``compile_count == 1`` streaming resumes).
-        Everything else in the manifest must match or the call raises
-        without touching state.
+        ``migrate_packing=True`` additionally remaps the packed state axis
+        between query packings (repack-aware restore, DESIGN.md §11) — it
+        composes with a lane rescale: the state-axis migration runs first
+        (it preserves the lane axis), then lanes are gathered.  Everything
+        else in the manifest must match or the call raises without
+        touching state.
         """
         meta, arrays = snapshot["meta"], snapshot["arrays"]
         if n_lanes is not None and int(n_lanes) != self.num_lanes:
@@ -633,7 +640,12 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
             self.batch = int(n_lanes)
             self._trace_count = 0
             self._step = jax.jit(self._part_step_impl, donate_argnums=(2,))
-        self._check_manifest(meta)
+        if migrate_packing:
+            self._check_manifest(meta, skip=self._packing_elastic_keys)
+            arrays = self._migrated_arrays(
+                {"meta": meta, "arrays": arrays})
+        else:
+            self._check_manifest(meta)
         lane_map = None
         dropped_owned = 0
         src_lanes = int(meta.get("num_lanes", self.num_lanes))

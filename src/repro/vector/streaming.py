@@ -74,6 +74,75 @@ def _flatten_state(prefix: str, tree, out: Dict[str, np.ndarray]) -> None:
         out[prefix] = np.asarray(tree)
 
 
+#: snapshot leaves whose LAST axis is the packed state dimension — the
+#: block-diagonal count rings of the plain / arena / time-window / lane
+#: state layouts.  ``…/arena/cell`` is handled separately (its state axis
+#: is the arena's unpadded Ŝ and its fill value is the NULL node id).
+_PACKED_STATE_LEAVES = ("state", "state/C", "state/C/C")
+
+
+def migrate_packed_arrays(arrays: Dict[str, np.ndarray], old: dict,
+                          new: dict) -> Dict[str, np.ndarray]:
+    """Slice/scatter per-query state regions between two packings.
+
+    ``old``/``new`` are :meth:`repro.vector.multiquery.Packing.spec` dicts.
+    Queries are matched by qid: each surviving query's block-diagonal state
+    region (count/time ring columns, tECS arena cell columns, enumeration
+    root slots) is copied from its old offset to its new offset; regions of
+    removed queries are dropped; regions of new queries start empty (zeros
+    for rings, NULL for arena cells/roots).  Leaves without a packed state
+    axis (timestamp rings, ovf latches, lane tables, arena node stores,
+    bump pointers) migrate verbatim — they are per-lane, not per-state.
+
+    Exactness: blocks don't interact in the packed scan, so a surviving
+    query's migrated ring continues bit-identically to an engine that
+    evaluated only that query from the start (DESIGN.md §11).
+    """
+    from .tecs_arena import NULL as _ANULL
+    o_idx = {q: i for i, q in enumerate(old["qids"])}
+    n_idx = {q: i for i, q in enumerate(new["qids"])}
+    common = [q for q in new["qids"] if q in o_idx]
+    for q in common:
+        if old["sizes"][o_idx[q]] != new["sizes"][n_idx[q]]:
+            raise ValueError(
+                f"query {q!r} changed state count across the repack "
+                f"({old['sizes'][o_idx[q]]} → {new['sizes'][n_idx[q]]}) — "
+                "its live runs cannot be migrated; remove and re-add it")
+    out: Dict[str, np.ndarray] = {}
+    for name, arr in arrays.items():
+        if name in _PACKED_STATE_LEAVES:
+            if arr.shape[-1] != old["padded_states"]:
+                raise ValueError(
+                    f"snapshot leaf {name!r} has state axis {arr.shape[-1]},"
+                    f" its packing spec declares {old['padded_states']}")
+            new_arr = np.zeros(arr.shape[:-1] + (new["padded_states"],),
+                               arr.dtype)
+        elif name.endswith("/arena/cell"):
+            if arr.shape[-1] != old["num_states"]:
+                raise ValueError(
+                    f"snapshot leaf {name!r} has state axis {arr.shape[-1]},"
+                    f" its packing spec declares {old['num_states']}")
+            new_arr = np.full(arr.shape[:-1] + (new["num_states"],),
+                              _ANULL, arr.dtype)
+        elif name == "roots_val":
+            new_arr = np.full((arr.shape[0], new["num_queries"]),
+                              _ANULL, arr.dtype)
+            for q in common:
+                new_arr[:, n_idx[q]] = arr[:, o_idx[q]]
+            out[name] = new_arr
+            continue
+        else:
+            out[name] = arr
+            continue
+        for q in common:
+            oo = old["offsets"][o_idx[q]]
+            no = new["offsets"][n_idx[q]]
+            sz = old["sizes"][o_idx[q]]
+            new_arr[..., no:no + sz] = arr[..., oo:oo + sz]
+        out[name] = new_arr
+    return out
+
+
 def _restore_like(prefix: str, template, arrays: Dict[str, np.ndarray]):
     """Rebuild a device pytree shaped like ``template`` from saved leaves.
 
@@ -316,6 +385,11 @@ class StreamingVectorEngine:
                                 np.nonzero(self.window_overflow)[0]],
             "pos": int(self._pos),
             "num_roots": len(self._roots),
+            # not a compat key: the repack-aware restore path reads it to
+            # migrate state between packings (DESIGN.md §11)
+            "packing": (self.engine.packing.spec()
+                        if getattr(self.engine, "packing", None) is not None
+                        else None),
         }
 
     def snapshot(self) -> dict:
@@ -351,16 +425,36 @@ class StreamingVectorEngine:
             for k, v in zip(arrays["roots_key"], arrays["roots_val"]):
                 self._roots[(int(k[0]), int(k[1]))] = np.asarray(v, np.int32)
 
-    def _check_manifest(self, meta: dict) -> None:
+    #: compat keys waived by a ``migrate_packing`` restore — the packing
+    #: (and therefore the fingerprint and packed dims) is *expected* to
+    #: differ; everything else still has to match exactly
+    _packing_elastic_keys = ("query_fingerprint", "num_states",
+                             "num_queries")
+
+    def _check_manifest(self, meta: dict, skip: Sequence[str] = ()) -> None:
         mine = self.manifest()
         bad = [f"{k}: snapshot {meta.get(k)!r} != engine {mine[k]!r}"
-               for k in self._compat_keys if meta.get(k) != mine[k]]
+               for k in self._compat_keys
+               if k not in skip and meta.get(k) != mine[k]]
         if bad:
             raise ValueError(
                 "snapshot is incompatible with this engine — restoring "
                 "would silently corrupt state:\n  " + "\n  ".join(bad))
 
-    def restore(self, snapshot: dict) -> None:
+    def _migrated_arrays(self, snapshot: dict) -> Dict[str, np.ndarray]:
+        """The repack path: remap the snapshot's packed-state leaves onto
+        this engine's packing (queries matched by qid)."""
+        old = (snapshot["meta"] or {}).get("packing")
+        pk = getattr(self.engine, "packing", None)
+        if old is None or pk is None:
+            raise ValueError(
+                "migrate_packing restore needs packing specs on both sides "
+                "— the snapshot predates packed manifests or the engine is "
+                "not packing-backed")
+        return migrate_packed_arrays(snapshot["arrays"], old, pk.spec())
+
+    def restore(self, snapshot: dict, *, migrate_packing: bool = False
+                ) -> None:
         """Load a :meth:`snapshot` (or a checkpoint read back through
         ``CheckpointManager.load_arrays``) into this engine.
 
@@ -370,9 +464,21 @@ class StreamingVectorEngine:
         bit-identically to the engine the snapshot was taken from —
         replaying the same chunks yields the same counts, hits, and
         enumerable roots.
+
+        ``migrate_packing=True`` is the repack-aware path (DESIGN.md §11),
+        mirroring the elastic ``restore(n_lanes=…)`` idiom: the snapshot
+        may come from an engine over a *different packing* of overlapping
+        queries — surviving queries' state regions are slice/scattered to
+        their new offsets (:func:`migrate_packed_arrays`), so a live fleet
+        repack loses no in-flight runs.  Window, chunk geometry and arena
+        capacity must still match.
         """
         meta, arrays = snapshot["meta"], snapshot["arrays"]
-        self._check_manifest(meta)
+        if migrate_packing:
+            self._check_manifest(meta, skip=self._packing_elastic_keys)
+            arrays = self._migrated_arrays(snapshot)
+        else:
+            self._check_manifest(meta)
         self._state = _restore_like(
             "state", self._init_full_state(self.batch), arrays)
         self._pos = int(meta["pos"])
@@ -487,7 +593,9 @@ class StreamingVectorEngine:
         hits to fetch the arena once.
         """
         rec = self._roots.get((int(position), int(stream)))
-        if rec is None:
+        if rec is None or int(rec[query]) < 0:
+            # NULL root slots appear when a repack migration adds a query
+            # after this hit was recorded — nothing to enumerate for it
             return []
         snap = snapshot if snapshot is not None else self.arena_snapshot()
         ces = list(snap.enumerate(int(stream), int(rec[query]),
