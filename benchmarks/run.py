@@ -71,6 +71,13 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
     # container (±30% noise); falling below 50k means the count path lost
     # its closed-form eviction (or compile-once), not noise.
     streaming_floor = 50_000.0
+    # compiled-semantics gate data (scripts/check.sh): device-native
+    # LAST/NXT enumeration (strategy compiled into the automaton, D2)
+    # must stay at least `floor`x faster than the legacy host post-filter
+    # over an ALL arena, and both selection engines must compile once.
+    selection = perf_cer.selection_throughput(
+        total_events=min(n, 2048) if quick else n,
+        chunk=min(512, n), eps_last=63, eps_nxt=10)
     return {
         "bench": "cer_perf",
         "events": n,
@@ -86,6 +93,7 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
         "packed_multiquery": {k: v for k, v in packed.items()
                               if k != "single_states"},
         "fleet_churn": fleet,
+        "selection": selection,
         "compile_counts": dict(
             {f"chunk_{row['chunk']}": row["compile_count"]
              for row in streaming},
@@ -93,7 +101,8 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
             enumeration=enumeration["compile_count"],
             time_window_count=time_window["compile_count_count"],
             time_window_time=time_window["compile_count_time"],
-            recovery=recovery["compile_count"]),
+            recovery=recovery["compile_count"],
+            selection=selection["compile_count"]),
     }
 
 
@@ -132,6 +141,13 @@ def main() -> None:
               f"({fl['distinct_geometries']} geometries, "
               f"{fl['cache_hits']} cache hits), steady state "
               f"{fl['fleet_eps']:.0f} ev/s = {fl['ratio']:.2f}× static")
+        sel = rec["selection"]
+        print(f"# selection: native LAST "
+              f"{sel['last']['native_vs_post']:.1f}× / NXT "
+              f"{sel['nxt']['native_vs_post']:.1f}× over host post-filter "
+              f"(kept {sel['last']['kept_matches']}/"
+              f"{sel['last']['all_matches']} and "
+              f"{sel['nxt']['kept_matches']}/{sel['nxt']['all_matches']})")
         return
 
     from benchmarks import cer_paper

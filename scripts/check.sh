@@ -121,5 +121,19 @@ if fl["ratio"] < fl["floor"]:
 print(f"fleet churn OK: {fl['compile_count']} compiles <= "
       f"{fl['distinct_geometries']} geometries over {fl['churn_ops']} ops; "
       f"steady state {fl['ratio']:.2f}x static >= floor {fl['floor']}")
+sel = rec.get("selection")
+if sel is None:
+    sys.exit("record is missing the selection row (DESIGN.md D2)")
+if sel["compile_count"] != 1:
+    sys.exit(f"compiled-semantics engines broke compile-once: "
+             f"compile_count={sel['compile_count']}")
+if sel["native_vs_post"] < sel["floor"]:
+    sys.exit(f"compiled-semantics enumeration regression: native / "
+             f"post-filter = {sel['native_vs_post']:.2f}x < floor "
+             f"{sel['floor']} — LAST/NXT enumeration has fallen back to "
+             f"walking the full ALL arena (DESIGN.md D2)")
+print(f"selection OK: native LAST {sel['last']['native_vs_post']:.1f}x / "
+      f"NXT {sel['nxt']['native_vs_post']:.1f}x over post-filter "
+      f">= floor {sel['floor']}, compile-once")
 EOF
 fi

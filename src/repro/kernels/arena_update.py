@@ -34,17 +34,21 @@ from .ref import ArenaBlockLayout, arena_block_step
 
 
 def _arena_update_kernel(*refs, lay: ArenaBlockLayout, steps: int,
-                         has_expire: bool):
+                         has_expire: bool, has_consume: bool):
     """Kernel body; ``refs`` order (expire block only with ``has_expire`` —
-    the precomputed time-window eviction mask, DESIGN.md §9):
+    the precomputed time-window eviction mask, DESIGN.md §9; consume block
+    only with ``has_consume`` — the CONSUME BY ANY clear mask, applied to
+    the VMEM cell table after each event's roots):
 
-    inputs   cls, hit, j, live, vb, [expire], ptab, finals, cells0 ×4
+    inputs   cls, hit, j, live, vb, [expire], [consume], ptab, finals,
+             cells0 ×4
     outputs  valid, left, right, root, cells_fin ×4
     scratch  cells ×4
     """
     it = iter(refs)
     cls_ref, hit_ref, j_ref, live_ref, vb_ref = (next(it) for _ in range(5))
     exp_ref = next(it) if has_expire else None
+    con_ref = next(it) if has_consume else None
     ptab_ref, finals_ref = next(it), next(it)
     cid0_ref, cisu0_ref, cl0_ref, cr0_ref = (next(it) for _ in range(4))
     valid_ref, left_ref, right_ref = (next(it) for _ in range(3))
@@ -66,7 +70,8 @@ def _arena_update_kernel(*refs, lay: ArenaBlockLayout, steps: int,
         cells, cls_ref[:, 0], hit_ref[:, 0, :], j_ref[:, 0],
         live_ref[:, 0] > 0, vb_ref[:, 0], lay=lay, ptab=ptab,
         finals_sq=finals_ref[...],
-        expire_t=None if exp_ref is None else exp_ref[:, 0, :])
+        expire_t=None if exp_ref is None else exp_ref[:, 0, :],
+        consume_t=None if con_ref is None else con_ref[:, 0, :])
     cid_s[...], cisu_s[...], cl_s[...], cr_s[...] = out
     valid_ref[:, 0, :] = valid
     left_ref[:, 0, :] = left
@@ -83,13 +88,15 @@ def _arena_update_kernel(*refs, lay: ArenaBlockLayout, steps: int,
 def arena_update_pallas(cells0, cls_s, hit_s, j_s, live_s, vb_s, *,
                         lay: ArenaBlockLayout, ptab, finals_sq,
                         b_tile: int = 8, interpret: bool = False,
-                        expire_s=None):
+                        expire_s=None, consume_s=None):
     """Raw pallas_call; use :func:`repro.kernels.ops.arena_block_update`.
 
     cells0:  four (B', W, S) int32 arrays — segment-start cell tables.
     cls_s/j_s/live_s/vb_s: (B', steps) int32 segmented operands
     (lane-major); hit_s: (B', steps, Q); expire_s: optional
-    (B', steps, W) int32 precomputed time-eviction masks (DESIGN.md §9).
+    (B', steps, W) int32 precomputed time-eviction masks (DESIGN.md §9);
+    consume_s: optional (B', steps, S) int32 CONSUME BY ANY clear masks
+    (cleared after each event's roots).
     Returns ``((valid, left, right), roots, cells_fin)`` with the record
     arrays (B', steps, M), roots (B', steps, Q) and the final cell table
     (four (B', W, S) arrays).
@@ -103,7 +110,8 @@ def arena_update_pallas(cells0, cls_s, hit_s, j_s, live_s, vb_s, *,
     assert B % b_tile == 0, (B, b_tile)
     grid = (B // b_tile, steps)
     kernel = functools.partial(_arena_update_kernel, lay=lay, steps=steps,
-                               has_expire=expire_s is not None)
+                               has_expire=expire_s is not None,
+                               has_consume=consume_s is not None)
     bt = b_tile
     lane_spec = pl.BlockSpec((bt, 1), lambda b, t: (b, t))
     cell_spec = pl.BlockSpec((bt, W, S), lambda b, t: (b, 0, 0))
@@ -117,6 +125,9 @@ def arena_update_pallas(cells0, cls_s, hit_s, j_s, live_s, vb_s, *,
     if expire_s is not None:
         in_specs.append(pl.BlockSpec((bt, 1, W), lambda b, t: (b, t, 0)))
         operands.append(expire_s)
+    if consume_s is not None:
+        in_specs.append(pl.BlockSpec((bt, 1, S), lambda b, t: (b, t, 0)))
+        operands.append(consume_s)
     in_specs += [
         pl.BlockSpec((C, S, K * 3), lambda b, t: (0, 0, 0)),  # pred tables
         pl.BlockSpec((S, Q), lambda b, t: (0, 0)),           # finals

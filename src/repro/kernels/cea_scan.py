@@ -102,6 +102,49 @@ def _ring_masks_time(j, ts_t, ts_ring, W: int, size):
     return seed_mask, clear, seed_b, overflow
 
 
+def latest_slot_counts(C2, fq, j, latest_q):
+    """Per-query counts with LAST queries reduced to the latest live seed slot.
+
+    Slots and seed positions biject inside the window, so LAST's
+    "latest start" is "the youngest slot with a positive count".  Queries
+    with ``latest_q == 0`` keep the plain sum over slots.
+
+    C2: (B, W, S) f32 post-transition ring; fq: (Q, S) f32 final masks;
+    j: (B,) int32 current positions; latest_q: (Q,) f32 0/1.
+    Returns m: (B, Q) f32.
+    """
+    W = C2.shape[1]
+    mw = jnp.einsum("bws,qs->bwq", C2, fq)                     # (B, W, Q)
+    arange_w = jax.lax.iota(jnp.int32, W)
+    age = (j[:, None] - arange_w[None, :]) % W                  # (B, W)
+    posm = (mw > 0).astype(C2.dtype)
+    younger = (age[:, :, None] < age[:, None, :]).astype(C2.dtype)
+    blocked = jnp.einsum("bvw,bvq->bwq", younger, posm)         # (B, W, Q)
+    keep = posm * (1.0 - jnp.minimum(blocked, 1.0))
+    m_latest = jnp.sum(mw * keep, axis=1)                       # (B, Q)
+    m_all = jnp.sum(mw, axis=1)
+    lq = latest_q.astype(C2.dtype)[None, :]
+    return m_all * (1.0 - lq) + m_latest * lq
+
+
+def consume_clear(C2, m, consume_sq):
+    """CONSUME BY ANY's emit-then-clear, device form (DESIGN.md D2).
+
+    After a position emits for a consuming query, the host engine drops its
+    whole run set (``T = {}``), including the run seeded that very step.
+    Here: any query with a positive (already live-masked) count zeroes the
+    ring over the states it owns — ``consume_sq[q, s] = 1`` iff query ``q``
+    consumes and owns packed state ``s`` (zero rows = non-consuming).
+
+    C2: (B, W, S); m: (B, Q) live-masked counts; consume_sq: (Q, S).
+    Returns the cleared ring.
+    """
+    trig = (m > 0).astype(C2.dtype)                             # (B, Q)
+    clear_s = jnp.minimum(
+        jnp.einsum("bq,qs->bs", trig, consume_sq.astype(C2.dtype)), 1.0)
+    return C2 * (1.0 - clear_s)[:, None, :]
+
+
 def _cea_scan_kernel(start_ref,                                  # SMEM scalar
                      ids_ref, m_all_ref, finals_ref, c_in_ref,   # inputs
                      matches_ref, c_out_ref,                     # outputs

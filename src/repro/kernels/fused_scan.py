@@ -71,12 +71,14 @@ def _fused_scan_kernel(*refs,                                    # see below
                        specs: Tuple[Tuple[int, int, float], ...],
                        V: int, W: int, S: int, NC: int, NQ: int,
                        B_tile: int, T: int, epsilon: int, t_tile: int,
-                       emit_trace: bool, time_size):
+                       emit_trace: bool, time_size,
+                       has_latest: bool, has_consume: bool):
     """Kernel body; ``refs`` order (time-mode refs only when ``time_size``
-    is set, trace ref only with ``emit_trace``):
+    is set, trace ref only with ``emit_trace``, selection/consumption refs
+    only with their static flags):
 
-    inputs   start, valid, [ts], attrs, ind, m_all, finals, init, c_in,
-             [ts_ring_in, ovf_in]
+    inputs   start, valid, [ts], attrs, ind, m_all, finals, init,
+             [latest], [consume], c_in, [ts_ring_in, ovf_in]
     outputs  matches, c_out, [ts_ring_out, ovf_out], [trace]
     scratch  c, [ts_ring, ovf]
     """
@@ -85,7 +87,10 @@ def _fused_scan_kernel(*refs,                                    # see below
     start_ref, valid_ref = next(it), next(it)                  # (B_tile, 1)
     ts_ref = next(it) if timed else None                       # (B_tile, tt)
     attrs_ref, ind_ref, m_all_ref = next(it), next(it), next(it)
-    finals_ref, init_ref, c_in_ref = next(it), next(it), next(it)
+    finals_ref, init_ref = next(it), next(it)
+    latest_ref = next(it) if has_latest else None              # (1, NQ)
+    consume_ref = next(it) if has_consume else None            # (NQ, S)
+    c_in_ref = next(it)
     tsr_in_ref = next(it) if timed else None                   # (B_tile, W)
     ovf_in_ref = next(it) if timed else None                   # (B_tile, 1)
     matches_ref, c_out_ref = next(it), next(it)
@@ -168,7 +173,36 @@ def _fused_scan_kernel(*refs,                                    # see below
         per_q = jax.lax.dot_general(
             C.reshape(B_tile * W, S), finals.T, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32).reshape(B_tile, W, NQ)
-        matches_ref[:, ti, :] = jnp.sum(per_q, axis=1) * live[:, None]
+        if has_latest:
+            # LAST (DESIGN.md D2): reduce per-slot counts to the youngest
+            # live slot — slots and seed positions biject in the window, so
+            # "latest start" is "smallest (j - w) mod W with a positive
+            # count".  Queries with latest flag 0 keep the plain slot sum.
+            lq = latest_ref[0, :]                              # (NQ,)
+            arange_w = jax.lax.iota(jnp.int32, W)
+            age = (j[:, None] - arange_w[None, :]) % W         # (B_tile, W)
+            posm = (per_q > 0).astype(jnp.float32)
+            younger = (age[:, :, None] < age[:, None, :]
+                       ).astype(jnp.float32)                   # (B, v, w)
+            blocked = jax.lax.dot_general(
+                younger, posm, (((1,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32)            # (B, W, NQ)
+            keep = posm * (1.0 - jnp.minimum(blocked, 1.0))
+            m_t = (jnp.sum(per_q, axis=1) * (1.0 - lq)[None, :]
+                   + jnp.sum(per_q * keep, axis=1) * lq[None, :])
+        else:
+            m_t = jnp.sum(per_q, axis=1)
+        m_t = m_t * live[:, None]
+        matches_ref[:, ti, :] = m_t
+        if has_consume:
+            # CONSUME BY ANY's emit-then-clear: after the counts are out,
+            # any consuming query with a hit zeroes the states it owns —
+            # including the run seeded this very step, as the host does.
+            trig = (m_t > 0).astype(jnp.float32)               # (B_tile, NQ)
+            clear_s = jnp.minimum(
+                jnp.dot(trig, consume_ref[...],
+                        preferred_element_type=jnp.float32), 1.0)
+            c_scratch[...] = C * (1.0 - clear_s)[:, None, :]
 
     @pl.when(tt == T // t_tile - 1)
     def _flush():
@@ -186,7 +220,7 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
                       epsilon: int, b_tile: int = 8, t_tile: int = 1,
                       interpret: bool = False, emit_trace: bool = False,
                       time_size=None, event_ts=None, ts_ring0=None,
-                      ovf0=None):
+                      ovf0=None, latest_q=None, consume_sq=None):
     """Raw pallas_call; use :func:`repro.kernels.ops.cer_pipeline` instead.
 
     attrs:       (B, T, A) f32 — raw encoded event attributes
@@ -214,6 +248,13 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
     rate-bound flags; the return gains ``(ts_ring (B, W) f32, ovf (B, 1)
     int32)`` between ``c_final`` and the trace.  Eviction masks every slot
     whose start timestamp left the window; ``epsilon`` is ignored.
+
+    Selection/consumption (DESIGN.md D2, both static per call site):
+    ``latest_q`` (1, NQ) f32 flags LAST queries (per-slot counts reduce to
+    the youngest live slot); ``consume_sq`` (NQ, S) f32 maps CONSUME BY ANY
+    queries to the states they clear after an emitting step.  ``None``
+    compiles the classic ANY kernel — a static specialization, like the
+    window modes.
     """
     B, T, A = attrs.shape
     NC, S, _ = m_all.shape
@@ -231,7 +272,9 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
     kernel = functools.partial(
         _fused_scan_kernel, specs=tuple(specs), V=V, W=W, S=S, NC=NC,
         NQ=NQ, B_tile=b_tile, T=T, epsilon=epsilon, t_tile=t_tile,
-        emit_trace=emit_trace, time_size=time_size)
+        emit_trace=emit_trace, time_size=time_size,
+        has_latest=latest_q is not None,
+        has_consume=consume_sq is not None)
 
     lane_col = pl.BlockSpec((b_tile, 1), lambda b, t: (b, 0))
     ring_spec = pl.BlockSpec((b_tile, W), lambda b, t: (b, 0))
@@ -250,9 +293,18 @@ def fused_scan_pallas(attrs: jnp.ndarray, class_ind: jnp.ndarray,
         pl.BlockSpec((NC, S, S), lambda b, t: (0, 0, 0)),      # M_all
         pl.BlockSpec((NQ, S), lambda b, t: (0, 0)),            # finals
         pl.BlockSpec((1, S), lambda b, t: (0, 0)),             # init
-        pl.BlockSpec((b_tile, W, S), lambda b, t: (b, 0, 0)),  # C0
     ]
-    operands += [attrs, class_ind, m_all, finals_q, init_mask, c0]
+    operands += [attrs, class_ind, m_all, finals_q, init_mask]
+    if latest_q is not None:
+        assert latest_q.shape == (1, NQ), (latest_q.shape, NQ)
+        in_specs.append(pl.BlockSpec((1, NQ), lambda b, t: (0, 0)))
+        operands.append(latest_q)
+    if consume_sq is not None:
+        assert consume_sq.shape == (NQ, S), (consume_sq.shape, NQ, S)
+        in_specs.append(pl.BlockSpec((NQ, S), lambda b, t: (0, 0)))
+        operands.append(consume_sq)
+    in_specs.append(pl.BlockSpec((b_tile, W, S), lambda b, t: (b, 0, 0)))
+    operands.append(c0)                                        # C0
     if timed:
         in_specs += [ring_spec, lane_col]                      # ts ring, ovf
         operands += [ts_ring0, ovf0]

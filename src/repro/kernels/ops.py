@@ -240,7 +240,9 @@ def cer_pipeline(attrs: jnp.ndarray,
                  impl: str = "fused", use_pallas: bool = True,
                  interpret: Optional[bool] = None, b_tile: int = 8,
                  t_tile: Optional[int] = None,
-                 return_trace: bool = False
+                 return_trace: bool = False,
+                 latest_q: Optional[jnp.ndarray] = None,
+                 consume_sq: Optional[jnp.ndarray] = None
                  ) -> Tuple[jnp.ndarray, ...]:
     """Full device CER pipeline: raw attributes → per-position match counts.
 
@@ -269,6 +271,14 @@ def cer_pipeline(attrs: jnp.ndarray,
     (steps past it are exact no-ops for that lane).  The fused Pallas kernel
     and the fused-XLA/ref path support both; the legacy unfused kernels are
     scalar-only, so per-lane calls on that impl route to the XLA path.
+
+    Selection/consumption (DESIGN.md D2): ``latest_q`` ``(Q,)`` f32 marks
+    LAST queries (their counts reduce to the latest live seed slot);
+    ``consume_sq`` ``(Q, S)`` f32 maps each CONSUME BY ANY query to the
+    packed states it clears after an emitting position.  Both default to
+    ``None`` — the classic ANY graph, bit-identical to before.  The legacy
+    unfused kernels are count-only ANY; either operand routes that impl to
+    the fused-XLA path (like ``timed``/``per_lane`` do).
 
     Windows (DESIGN.md §9): pass either the legacy ``epsilon=`` (count
     window) or a :class:`repro.kernels.window.DeviceWindow` as ``window=``.
@@ -305,20 +315,23 @@ def cer_pipeline(attrs: jnp.ndarray,
     c_ring = c0["C"] if timed else c0
     W = c_ring.shape[1]
     per_lane = _is_lane_vector(start_pos) or valid_counts is not None
+    semantic = latest_q is not None or consume_sq is not None
 
     if impl == "ref" or (impl == "fused" and not use_pallas):
         return _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0,
                              init_mask, epsilon, start_pos, valid_counts,
-                             return_trace, window=window, event_ts=event_ts)
+                             return_trace, window=window, event_ts=event_ts,
+                             latest_q=latest_q, consume_sq=consume_sq)
 
     if impl == "unfused":
-        if per_lane or timed:
+        if per_lane or timed or semantic:
             # the legacy 3-dispatch kernels take a scalar SMEM offset only
-            # and implement the count eviction rule only
+            # and implement the count eviction rule under ANY semantics only
             return _pipeline_xla(attrs, specs, class_of, m_all, finals_q,
                                  c0, init_mask, epsilon, start_pos,
                                  valid_counts, return_trace, window=window,
-                                 event_ts=event_ts)
+                                 event_ts=event_ts, latest_q=latest_q,
+                                 consume_sq=consume_sq)
         # legacy 3-dispatch path: bits kernel → gather → scan kernel
         bits = bitvector(attrs.reshape(T * B, A), specs,
                          use_pallas=use_pallas, interpret=interpret)
@@ -349,11 +362,16 @@ def cer_pipeline(attrs: jnp.ndarray,
                 + (2 + (t_tile if return_trace else 0))
                 * b_tile                       # start/valid[/trace block]
                 + (3 * b_tile * W + 4 * b_tile + b_tile * t_tile
-                   if timed else 0))           # ts ring ×3 + ovf + ts block
+                   if timed else 0)            # ts ring ×3 + ovf + ts block
+                + (b_tile * W * W + b_tile * W * NQp + NQp
+                   if latest_q is not None else 0)   # age cmp + keep + flags
+                + (NQp * Sp + b_tile * Sp
+                   if consume_sq is not None else 0))  # map + clear temp
     if W % 8 != 0 or vmem > VMEM_BYTES:
         return _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0,
                              init_mask, epsilon, start_pos, valid_counts,
-                             return_trace, window=window, event_ts=event_ts)
+                             return_trace, window=window, event_ts=event_ts,
+                             latest_q=latest_q, consume_sq=consume_sq)
 
     Bp = _pad_to(B, b_tile)
     a_pad = jnp.pad(jnp.moveaxis(attrs, 0, 1),
@@ -377,11 +395,19 @@ def cer_pipeline(attrs: jnp.ndarray,
                              constant_values=TS_EMPTY),
             ovf0=jnp.pad(c0["ovf"].astype(jnp.int32)[:, None],
                          ((0, Bp - B), (0, 0))))
+    sem_kw = {}
+    if latest_q is not None:
+        sem_kw["latest_q"] = jnp.pad(
+            jnp.asarray(latest_q, jnp.float32), (0, NQp - NQ))[None, :]
+    if consume_sq is not None:
+        sem_kw["consume_sq"] = jnp.pad(
+            jnp.asarray(consume_sq, jnp.float32),
+            ((0, NQp - NQ), (0, Sp - S)))
 
     res = fused_scan_pallas(
         a_pad, ind_pad, m_pad, f_pad, i_pad, c_pad, start_lanes, valid_lanes,
         specs=tuple(specs), epsilon=epsilon, b_tile=b_tile, t_tile=t_tile,
-        interpret=interpret, emit_trace=return_trace, **time_kw)
+        interpret=interpret, emit_trace=return_trace, **time_kw, **sem_kw)
     matches, c_fin = res[0], res[1]
     c_out = c_fin[:B, :, :S]
     if timed:
@@ -396,6 +422,7 @@ def cer_pipeline(attrs: jnp.ndarray,
 def arena_block_update(cells0, class_ids, hits, start, valid_counts, *,
                        lay, ptab, finals_sq, n_seg: int = 1,
                        expire: Optional[jnp.ndarray] = None,
+                       consume: Optional[jnp.ndarray] = None,
                        use_pallas: bool = False,
                        interpret: Optional[bool] = None, b_tile: int = 8):
     """Block tECS builder over one chunk — Pallas kernel vs jnp oracle.
@@ -407,7 +434,10 @@ def arena_block_update(cells0, class_ids, hits, start, valid_counts, *,
     (:func:`repro.kernels.ref.pack_pred_tables`).  n_seg: parallel chunk
     segments (:func:`repro.kernels.ref.pick_segments`).  expire: optional
     (T, B, W) precomputed time-window eviction masks (DESIGN.md §9; None
-    keeps the count-window single-slot rule).  Returns
+    keeps the count-window single-slot rule).  consume: optional
+    (T, B, S) CONSUME BY ANY clear masks, precomputed from the counting
+    scan's matches — cells of the flagged states drop after each event's
+    roots (emit-then-clear, mirroring the counting kernels).  Returns
     ``(cells_T, valid, left, right, roots)`` — record arrays (T, B, M) on
     virtual node ids; allocation and the store update happen vectorized
     downstream (``tecs_arena.arena_scan_block``).
@@ -427,13 +457,16 @@ def arena_block_update(cells0, class_ids, hits, start, valid_counts, *,
         return ref.arena_build_ref(cells0, class_ids, hits, start,
                                    valid_counts, lay=lay, ptab=ptab,
                                    finals_sq=finals_sq, n_seg=n_seg,
-                                   expire=expire)
+                                   expire=expire, consume=consume)
     interpret = False if interpret is None else interpret
     xs, cells0_seg = ref.segment_operands(cells0, class_ids, hits, start,
                                           valid_counts, lay=lay,
-                                          n_seg=n_seg, expire=expire)
+                                          n_seg=n_seg, expire=expire,
+                                          consume=consume)
     cls_s, hit_s, j_s, live_s, vb_s = xs[:5]
-    exp_s = xs[5] if len(xs) > 5 else None
+    extra = list(xs[5:])
+    exp_s = extra.pop(0) if expire is not None else None
+    con_s = extra.pop(0) if consume is not None else None
     Bn = cls_s.shape[1]
     Bp = _pad_to(Bn, b_tile)
     pads = ((0, Bp - Bn), (0, 0), (0, 0))
@@ -449,7 +482,8 @@ def arena_block_update(cells0, class_ids, hits, start, valid_counts, *,
         lane(live_s),              # padded lanes are dead (live = 0)
         lane(vb_s), lay=lay, ptab=ptab, finals_sq=finals_sq,
         b_tile=b_tile, interpret=interpret,
-        expire_s=None if exp_s is None else lane(exp_s))
+        expire_s=None if exp_s is None else lane(exp_s),
+        consume_s=None if con_s is None else lane(con_s))
     recs = tuple(jnp.moveaxis(y[:Bn], 0, 1) for y in recs)
     roots = jnp.moveaxis(roots[:Bn], 0, 1)
     cells_fin = tuple(c[:Bn] for c in cells_fin)
@@ -459,7 +493,7 @@ def arena_block_update(cells0, class_ids, hits, start, valid_counts, *,
 
 def _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0, init_mask,
                   epsilon, start_pos, valid_counts=None, return_trace=False,
-                  window=None, event_ts=None):
+                  window=None, event_ts=None, latest_q=None, consume_sq=None):
     """Fused pipeline as one XLA computation (also the ``ref`` oracle).
 
     Same dataflow as the fused kernel: under a single jit the ``bits`` /
@@ -475,7 +509,9 @@ def _pipeline_xla(attrs, specs, class_of, m_all, finals_q, c0, init_mask,
                                             start_pos=start_pos,
                                             valid_counts=valid_counts,
                                             window=window,
-                                            event_ts=event_ts)
+                                            event_ts=event_ts,
+                                            latest_q=latest_q,
+                                            consume_sq=consume_sq)
     if return_trace:
         return matches, c_fin, class_ids
     return matches, c_fin

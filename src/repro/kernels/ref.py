@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.tecs import BOTTOM, OUTPUT, UNION
+from .cea_scan import consume_clear, latest_slot_counts
 
 # op codes shared with the bit-vector kernel
 OP_EQ, OP_NE, OP_LT, OP_LE, OP_GT, OP_GE = range(6)
@@ -119,7 +120,8 @@ def cea_scan_multi_ref(C0, M_all: jnp.ndarray,
                        class_ids: jnp.ndarray, finals_q: jnp.ndarray,
                        init_mask: jnp.ndarray, epsilon: int,
                        start_pos=0, valid_counts=None,
-                       window=None, event_ts=None):
+                       window=None, event_ts=None,
+                       latest_q=None, consume_sq=None):
     """Packed multi-query scan oracle (see vector/multiquery.py).
 
     finals_q: (Q, S) per-query final-state masks; init_mask: (S,) multi-hot
@@ -134,6 +136,12 @@ def cea_scan_multi_ref(C0, M_all: jnp.ndarray,
     no-ops for lane ``b`` (state unchanged, zero matches, position does not
     advance).
 
+    Selection/consumption semantics (DESIGN.md D2): ``latest_q`` (``(Q,)``
+    f32, optional) reduces LAST queries' counts to the latest live seed
+    slot; ``consume_sq`` (``(Q, S)`` f32, optional) applies CONSUME BY
+    ANY's emit-then-clear over each consuming query's states.  ``None``
+    (the default) leaves the classic graph untouched.
+
     Time windows (DESIGN.md §9): pass ``window`` (a
     :class:`repro.kernels.window.DeviceWindow` with ``kind='time'``) and
     ``event_ts`` ``(T, B) f32``; ``C0`` is then the
@@ -147,7 +155,7 @@ def cea_scan_multi_ref(C0, M_all: jnp.ndarray,
     if not timed:
         return _scan_multi_count_ref(C0, M_all, class_ids, finals_q,
                                      init_mask, epsilon, start_pos,
-                                     valid_counts)
+                                     valid_counts, latest_q, consume_sq)
     C0_, tsr0, ovf0 = C0["C"], C0["ts"], C0["ovf"]
     B, W, S = C0_.shape
     T = class_ids.shape[0]
@@ -172,7 +180,10 @@ def cea_scan_multi_ref(C0, M_all: jnp.ndarray,
         C2 = C * (1.0 - clear)[:, :, None] \
             + seed.astype(C.dtype)[:, :, None] * im[None, None, :]
         C2 = jnp.einsum("bws,bst->bwt", C2, M)
-        m = jnp.einsum("bws,qs->bq", C2, fq)
+        if latest_q is None:
+            m = jnp.einsum("bws,qs->bq", C2, fq)
+        else:
+            m = latest_slot_counts(C2, fq, j, latest_q)
         tsr2 = jnp.where(seed, ts_t[:, None], tsr)
         if valid is not None:
             live = t < valid                                       # (B,)
@@ -181,6 +192,8 @@ def cea_scan_multi_ref(C0, M_all: jnp.ndarray,
             m = m * lf[:, None]
             tsr2 = jnp.where(live[:, None], tsr2, tsr)
             over = over & live
+        if consume_sq is not None:
+            C2 = consume_clear(C2, m, consume_sq)
         return (C2, tsr2, ovf | over), m
 
     ts_steps = jnp.arange(T, dtype=jnp.int32)
@@ -193,7 +206,8 @@ def cea_scan_multi_ref(C0, M_all: jnp.ndarray,
 def _scan_multi_count_ref(C0: jnp.ndarray, M_all: jnp.ndarray,
                           class_ids: jnp.ndarray, finals_q: jnp.ndarray,
                           init_mask: jnp.ndarray, epsilon: int,
-                          start_pos=0, valid_counts=None
+                          start_pos=0, valid_counts=None,
+                          latest_q=None, consume_sq=None
                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Count-window scan body (the unchanged classic eviction rule)."""
     B, W, S = C0.shape
@@ -217,11 +231,16 @@ def _scan_multi_count_ref(C0: jnp.ndarray, M_all: jnp.ndarray,
         C2 = C * (1.0 - clear)[:, :, None] \
             + seed[:, :, None] * im[None, None, :]
         C2 = jnp.einsum("bws,bst->bwt", C2, M)
-        m = jnp.einsum("bws,qs->bq", C2, fq)
+        if latest_q is None:
+            m = jnp.einsum("bws,qs->bq", C2, fq)
+        else:
+            m = latest_slot_counts(C2, fq, j, latest_q)
         if valid is not None:
             live = (t < valid).astype(C.dtype)                     # (B,)
             C2 = C2 * live[:, None, None] + C * (1.0 - live)[:, None, None]
             m = m * live[:, None]
+        if consume_sq is not None:
+            C2 = consume_clear(C2, m, consume_sq)
         return C2, m
 
     ts = jnp.arange(T, dtype=jnp.int32)
@@ -687,14 +706,21 @@ def _roots_step(cells_t, hit_t, j, vbase, *, lay: ArenaBlockLayout,
 
 def arena_block_step(cells, cls_t, hit_t, j, live, vbase, *,
                      lay: ArenaBlockLayout, ptab, finals_sq,
-                     sparse_roots: bool = False, expire_t=None):
+                     sparse_roots: bool = False, expire_t=None,
+                     consume_t=None):
     """One event of the block builder: recurrence + record emission.
 
     cells: four (B, W, S) int32 arrays (id / is-union / left / right).
     cls_t/j/vbase: (B,) int32 (``vbase`` is per-lane: segmented execution
     places lanes at different stream offsets).  hit_t: (B, Q) int32.
     live: (B,) bool.  ``expire_t`` (optional, (B, W)): precomputed
-    time-window eviction mask (see :func:`_clear_seed`).  Returns
+    time-window eviction mask (see :func:`_clear_seed`).  ``consume_t``
+    (optional, (B, S)): CONSUME BY ANY clear mask — after the event's
+    roots are recorded, cells of the flagged states drop across every
+    ring slot (the host's emit-then-clear order: the counting kernels
+    zero the same states in the count ring, this is the node-level
+    mirror).  Clearing allocates nothing, so the record layout and the
+    chunk-level id assignment are untouched.  Returns
     ``(cells', (valid, left, right), root)`` — the per-event record rows
     (B, M) in slot-layout order and root (B, Q).
 
@@ -729,6 +755,10 @@ def arena_block_step(cells, cls_t, hit_t, j, live, vbase, *,
                                          no_roots, None)
     else:
         root_pieces, root = roots(None)
+
+    if consume_t is not None:
+        clr = (consume_t > 0) & live[:, None]                  # (B, S)
+        out = (jnp.where(clr[:, None, :], ARENA_NULL, out[0]),) + out[1:]
 
     all_pieces = pieces + list(root_pieces)
     nullcol = jnp.full((cls_t.shape[0], 1), ARENA_NULL, jnp.int32)
@@ -772,7 +802,7 @@ def pick_segments(T: int, W: int, max_seg: int = 8) -> int:
 
 def arena_build_ref(cells0, class_ids, hits, start, valid_counts, *,
                     lay: ArenaBlockLayout, ptab, finals_sq,
-                    n_seg: int = 1, expire=None):
+                    n_seg: int = 1, expire=None, consume=None):
     """Block tECS builder over one chunk — the pure-jnp oracle.
 
     cells0: four (B, W, S) int32 arrays (chunk-start cell table).
@@ -781,7 +811,10 @@ def arena_build_ref(cells0, class_ids, hits, start, valid_counts, *,
     (:func:`pick_segments`).  ``expire`` (optional, (T, B, W) bool):
     precomputed per-step time-window eviction masks (DESIGN.md §9; count
     windows pass None and keep the closed-form single-slot rule).
-    Returns ``(cells_T, valid, left, right, roots)`` with the record
+    ``consume`` (optional, (T, B, S) bool): per-step CONSUME BY ANY clear
+    masks (precomputed from the counting scan's matches) — applied after
+    each event's roots, see :func:`arena_block_step`.  Returns
+    ``(cells_T, valid, left, right, roots)`` with the record
     arrays (T, B, M) int32 in slot-layout order and roots (T, B, Q), on
     virtual ids.
 
@@ -792,14 +825,17 @@ def arena_build_ref(cells0, class_ids, hits, start, valid_counts, *,
     """
     xs, cells0_seg = segment_operands(cells0, class_ids, hits, start,
                                       valid_counts, lay=lay, n_seg=n_seg,
-                                      expire=expire)
+                                      expire=expire, consume=consume)
 
     def step(cells, x):
         cls_t, hit_t, j, live, vb = x[:5]
-        exp_t = x[5] if len(x) > 5 else None
+        extra = list(x[5:])
+        exp_t = extra.pop(0) if expire is not None else None
+        con_t = extra.pop(0) if consume is not None else None
         out, recs, root = arena_block_step(
             cells, cls_t, hit_t, j, live, vb, lay=lay, ptab=ptab,
-            finals_sq=finals_sq, sparse_roots=True, expire_t=exp_t)
+            finals_sq=finals_sq, sparse_roots=True, expire_t=exp_t,
+            consume_t=con_t)
         return out, recs + (root,)
 
     cells_fin, ys = jax.lax.scan(step, cells0_seg, xs)
@@ -809,7 +845,8 @@ def arena_build_ref(cells0, class_ids, hits, start, valid_counts, *,
 
 
 def segment_operands(cells0, class_ids, hits, start, valid_counts, *,
-                     lay: ArenaBlockLayout, n_seg: int, expire=None):
+                     lay: ArenaBlockLayout, n_seg: int, expire=None,
+                     consume=None):
     """Build the (steps, n_seg·B, …) scan operands for segmented execution.
 
     Segment g owns global steps [g·G, (g+1)·G) and runs W extra replay
@@ -818,8 +855,11 @@ def segment_operands(cells0, class_ids, hits, start, valid_counts, *,
     segments start from empty cells).  ``expire`` (optional, (T, B, W))
     appends the precomputed time-eviction mask as a sixth operand — it is
     closed-form in the absolute event index, so segment replays index the
-    same global rows and reproduce the handoff state exactly.  Returns
-    ``((cls, hit, j, live, vbase[, expire]), cells0_seg)``.
+    same global rows and reproduce the handoff state exactly.  ``consume``
+    (optional, (T, B, S)) appends the CONSUME BY ANY clear masks the same
+    way (also indexed by absolute step, so replays reproduce the clears).
+    Returns ``((cls, hit, j, live, vbase[, expire][, consume]),
+    cells0_seg)``.
     """
     T, B = class_ids.shape
     W = lay.W
@@ -833,6 +873,8 @@ def segment_operands(cells0, class_ids, hits, start, valid_counts, *,
         xs = (class_ids, hits, j, live, vb)
         if expire is not None:
             xs = xs + (jnp.asarray(expire).astype(jnp.int32),)
+        if consume is not None:
+            xs = xs + (jnp.asarray(consume).astype(jnp.int32),)
         return xs, tuple(cells0)
     assert T % n_seg == 0 and T // n_seg >= W, (T, n_seg, W)
     G = T // n_seg
@@ -858,6 +900,8 @@ def segment_operands(cells0, class_ids, hits, start, valid_counts, *,
     xs = (seg(class_ids), seg(hits), j, live, vb)
     if expire is not None:
         xs = xs + (seg(jnp.asarray(expire).astype(jnp.int32)),)
+    if consume is not None:
+        xs = xs + (seg(jnp.asarray(consume).astype(jnp.int32)),)
     return xs, cells0_seg
 
 

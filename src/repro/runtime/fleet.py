@@ -136,10 +136,15 @@ def _make_data_step(cache: CompileCache, key: tuple,
         class_ids = ref.class_trace_ref(
             attrs, tables["idx"], tables["ops"], tables["thr"],
             tables["class_of"])
+        # semantic operands (DESIGN.md D2) ride the traced-tables dict only
+        # when non-trivial; their presence is part of the geometry key, so
+        # ALL-only packings keep sharing the pre-semantics executable
         c_fin, matches = ref.cea_scan_multi_ref(
             state, tables["m_all"], class_ids, tables["finals_q"],
             tables["init_mask"], window.epsilon, start_pos=start_pos,
-            window=window, event_ts=event_ts)
+            window=window, event_ts=event_ts,
+            latest_q=tables.get("latest_q"),
+            consume_sq=tables.get("consume_sq"))
         return matches, c_fin
 
     return jax.jit(step, donate_argnums=(2,))
@@ -148,7 +153,7 @@ def _make_data_step(cache: CompileCache, key: tuple,
 def _make_arena_step(cache: CompileCache, key: tuple, atables, specs,
                      class_of, class_ind, m_all, finals_q, init_mask,
                      window, impl, use_pallas, b_tile,
-                     arena_impl) -> Callable:
+                     arena_impl, latest_q=None, consume_sq=None) -> Callable:
     """Counting + tECS-arena step with closed-over tables.
 
     The block arena's static layout is computed from table *values*
@@ -165,7 +170,7 @@ def _make_arena_step(cache: CompileCache, key: tuple, atables, specs,
             finals_q=finals_q, init_mask=init_mask, window=window,
             start=start_pos, gbase=gbase, impl=impl,
             use_pallas=use_pallas, b_tile=b_tile, arena_impl=arena_impl,
-            event_ts=event_ts)
+            event_ts=event_ts, latest_q=latest_q, consume_sq=consume_sq)
         return counts, {"C": C, "arena": arena}, roots
 
     return jax.jit(step, donate_argnums=(1,))
@@ -198,7 +203,11 @@ class _FleetStreamEngine(StreamingVectorEngine):
             self.window.kind, float(self.window.size),
             self.window.time_attr, int(self.window.ring),
             int(chunk_len), int(batch),
-            None if arena_capacity is None else int(arena_capacity))
+            None if arena_capacity is None else int(arena_capacity),
+            # semantic-operand presence flags (DESIGN.md D2): a LAST /
+            # CONSUME packing's step has a different traced signature, so
+            # it must not share the ALL-only geometry's cache entry
+            self._latest_q is not None, self._consume_sq is not None)
         if arena_capacity is None:
             k_pad = pk.padded_bits
             idx = np.zeros(k_pad, np.int32)
@@ -214,6 +223,10 @@ class _FleetStreamEngine(StreamingVectorEngine):
                 "m_all": jnp.asarray(self._m_all),
                 "finals_q": jnp.asarray(self._finals_q),
                 "init_mask": jnp.asarray(self._init_mask)}
+            if self._latest_q is not None:
+                self._operands["latest_q"] = jnp.asarray(self._latest_q)
+            if self._consume_sq is not None:
+                self._operands["consume_sq"] = jnp.asarray(self._consume_sq)
             inner = cache.get(
                 self.geometry,
                 lambda c, k: _make_data_step(c, k, self.window))
@@ -228,7 +241,8 @@ class _FleetStreamEngine(StreamingVectorEngine):
                     c, k, self._arena_tables, self._specs, self._class_of,
                     self._class_ind, self._m_all, self._finals_q,
                     self._init_mask, self.window, self.impl,
-                    self._use_pallas, self._b_tile, self.arena_impl))
+                    self._use_pallas, self._b_tile, self.arena_impl,
+                    latest_q=self._latest_q, consume_sq=self._consume_sq))
 
     def feed_attrs(self, attrs, event_ts=None):
         a = attrs.shape[-1]
@@ -486,9 +500,15 @@ class QueryFleet:
 
     # -- enumeration (requires arena_capacity) --------------------------
     def enumerate(self, qid: str, position: int, stream: int = 0,
-                  strategy: str = "ALL"):
+                  strategy: Optional[str] = None):
         """Complex events of ``qid`` closing at ``position`` on ``stream``
-        — walks the bucket's device tECS arena (DESIGN.md §7)."""
+        — walks the bucket's device tECS arena (DESIGN.md §7).
+
+        ``strategy=None`` (default) enumerates under the query's COMPILED
+        selection semantics; an explicit strategy is the legacy host
+        post-filter, valid only when the bucket carries no native
+        semantics (:func:`repro.vector.tecs_arena.resolve_enum_strategy`).
+        """
         bucket = self._find_bucket(qid)
         slot = bucket.qids.index(qid)
         return bucket.engine.enumerate(position, stream, query=slot,

@@ -70,7 +70,16 @@ def _fallback_base(window: "wkern.DeviceWindow", start_pos):
 
 @dataclass
 class VectorQueryTables:
-    """Device-resident tables for one compiled query."""
+    """Device-resident tables for one compiled query.
+
+    ``latest_q``/``consume_sq`` are the compiled-semantics operands
+    (``repro.core.query.resolve_semantics``): ``latest_q`` is a (Q,) f32
+    per-query LAST flag (latest-slot count reduction), ``consume_sq`` a
+    (Q, S) f32 CONSUME BY ANY state-clear table (rows of non-consuming
+    queries are zero).  Both are ``None`` when trivial, so graphs —
+    and packing fingerprints — of plain-ALL queries stay bit-identical
+    to the pre-semantics format.
+    """
 
     m_all: jnp.ndarray       # (C, S, S) f32
     finals: jnp.ndarray      # (S,) f32
@@ -80,6 +89,8 @@ class VectorQueryTables:
     num_states: int
     num_classes: int
     num_bits: int
+    latest_q: Optional[jnp.ndarray] = None    # (Q,) f32 | None
+    consume_sq: Optional[jnp.ndarray] = None  # (Q, S) f32 | None
 
 
 class VectorEngine:
@@ -101,7 +112,17 @@ class VectorEngine:
                  max_window_events: Optional[int] = None):
         compiled = compile_query(query) if isinstance(query, str) else query
         self.compiled = compiled
-        self.symbolic: SymbolicCEA = compile_symbolic(compiled.cea)
+        # Resolve the query's selection strategy + CONSUME clause up front:
+        # unsupported semantics raise HERE (mirroring resolve_window), so a
+        # device engine can never silently evaluate a query under ANY.
+        self.semantics = compiled.semantics
+        self.strategies = (compiled.query.strategy,)
+        self.consumes = (bool(compiled.query.consume_on_match),)
+        self.native_semantics = (self.semantics.construction != "ALL"
+                                 or self.semantics.latest
+                                 or self.semantics.consume)
+        self.symbolic: SymbolicCEA = compile_symbolic(
+            compiled.cea, strategy=self.semantics.construction)
         self.encoder = EventEncoder.from_registry(compiled.cea.registry)
         self.window = wkern.resolve_window(
             compiled.query.window, epsilon=epsilon,
@@ -118,6 +139,7 @@ class VectorEngine:
         self.arena_impl = tecs_arena.check_arena_impl(arena_impl)
         init_mask = np.zeros(self.symbolic.num_states, np.float32)
         init_mask[self.symbolic.initial] = 1.0
+        sem = self.semantics
         self.tables = VectorQueryTables(
             m_all=jnp.asarray(self.symbolic.transition_matrices()),
             finals=jnp.asarray(self.symbolic.finals, dtype=jnp.float32),
@@ -128,6 +150,9 @@ class VectorEngine:
             num_states=self.symbolic.num_states,
             num_classes=self.symbolic.num_classes,
             num_bits=self.symbolic.num_bits,
+            latest_q=(jnp.ones((1,), jnp.float32) if sem.latest else None),
+            consume_sq=(jnp.ones((1, self.symbolic.num_states), jnp.float32)
+                        if sem.consume else None),
         )
 
     # ------------------------------------------------------------------
@@ -170,6 +195,12 @@ class VectorEngine:
         time-window queries evaluate through :meth:`pipeline`.
         """
         wkern.require_count_scan(self.window)
+        if self.tables.latest_q is not None or \
+                self.tables.consume_sq is not None:
+            raise ValueError(
+                "scan() cannot honor LAST / CONSUME BY ANY semantics "
+                f"(query strategy {self.compiled.query.strategy!r}); "
+                "use pipeline()")
         return ops.cea_scan(class_ids, self.tables.m_all, self.tables.finals,
                             state, epsilon=self.epsilon, start_pos=start_pos,
                             use_pallas=self.use_pallas, b_tile=self.b_tile)
@@ -187,7 +218,8 @@ class VectorEngine:
             attrs, self.encoder.specs, t.class_of, t.class_ind, t.m_all,
             t.finals[None, :], state, init_mask=t.init_mask,
             window=self.window, event_ts=event_ts, start_pos=start_pos,
-            impl=self.impl, use_pallas=self.use_pallas, b_tile=self.b_tile)
+            impl=self.impl, use_pallas=self.use_pallas, b_tile=self.b_tile,
+            latest_q=t.latest_q, consume_sq=t.consume_sq)
         return matches[:, :, 0], state
 
     def run(self, streams: Sequence[Sequence[Event]],
@@ -223,7 +255,7 @@ class VectorEngine:
 
     def run_enumerate(self, streams: Sequence[Sequence[Event]],
                       start_pos: int = 0, arena_capacity: int = 1 << 15,
-                      strategy: str = "ALL"
+                      strategy: Optional[str] = None
                       ) -> Tuple[np.ndarray,
                                  Dict[Tuple[int, int], List[ComplexEvent]]]:
         """Device-arena evaluation *with enumeration* (narrows deviation D1).
@@ -234,8 +266,16 @@ class VectorEngine:
         fetches the arena arrays and walks Algorithm 2 over them
         (output-linear delay, no event replay).
 
+        ``strategy=None`` (the default) enumerates under the query's OWN
+        compiled semantics — the strategy-aware tables already keep
+        exactly the selected matches, so the walk touches O(matches kept)
+        nodes with no host re-filter.  Passing an explicit strategy is the
+        legacy post-filter path and is only accepted on engines whose
+        query compiled to plain ALL semantics (a conflicting strategy on
+        a natively-compiled engine raises).
+
         Returns ``(counts (T, B) int64, matches)`` with ``matches`` mapping
-        each hit ``(t, b)`` to its complex events (post ``strategy``).
+        each hit ``(t, b)`` to its complex events.
         """
         counts, res = tecs_arena.run_enumerate(
             self, streams, start_pos=start_pos,

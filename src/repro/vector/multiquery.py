@@ -37,7 +37,7 @@ import jax.numpy as jnp
 
 from ..core.cea import compile_cel
 from ..core.predicates import AtomRegistry
-from ..core.query import CompiledQuery, compile_query
+from ..core.query import CompiledQuery, compile_query, resolve_semantics
 from ..kernels import ops
 from ..kernels import window as wkern
 from .encoder import EventEncoder
@@ -58,6 +58,12 @@ class PackedTables:
     offsets: List[int]          # block start per query
     sizes: List[int]
     reps: np.ndarray            # (C,) representative bit-vector per class
+    # compiled-semantics operands (resolve_semantics): per-query LAST flag
+    # and CONSUME BY ANY state-clear rows over the query's own block.
+    # None when every packed query is trivial — keeps plain packs'
+    # compiled graphs and fingerprints bit-identical to the old format.
+    latest_q: Optional[jnp.ndarray] = None    # (Q_pad,) f32 | None
+    consume_sq: Optional[jnp.ndarray] = None  # (Q_pad, Ŝ_pad) f32 | None
 
 
 class PackingInvariantError(ValueError):
@@ -91,6 +97,8 @@ class Packing:
     padded_classes: int
     num_bits: int                        # k (shared registry width)
     padded_bits: int
+    strategies: Tuple[str, ...] = ()     # per-query SELECT strategy
+    consumes: Tuple[bool, ...] = ()      # per-query CONSUME BY ANY flag
     _fingerprint: Optional[str] = field(default=None, repr=False)
 
     # -- de-pack maps ---------------------------------------------------
@@ -120,6 +128,8 @@ class Packing:
             "padded_states": int(self.padded_states),
             "num_queries": int(self.num_queries),
             "padded_queries": int(self.padded_queries),
+            "strategies": list(self.strategies),
+            "consumes": [bool(c) for c in self.consumes],
         }
 
     def _hash_tables(self, h) -> None:
@@ -132,6 +142,19 @@ class Packing:
             a = np.asarray(arr)
             h.update(str((a.shape, str(a.dtype))).encode())
             h.update(a.tobytes())
+        # semantic operands: LAST shares MAX's m_all and consuming queries
+        # share the non-consuming tables, so the base digest alone cannot
+        # tell them apart.  Hash them only when present — trivial packs
+        # keep their pre-semantics fingerprints (and compiled-step reuse).
+        if t.latest_q is not None or t.consume_sq is not None:
+            h.update(b"semantics")
+            for arr in (t.latest_q, t.consume_sq):
+                if arr is None:
+                    h.update(b"none")
+                else:
+                    a = np.asarray(arr)
+                    h.update(str((a.shape, str(a.dtype))).encode())
+                    h.update(a.tobytes())
 
     @property
     def table_fingerprint(self) -> str:
@@ -201,7 +224,12 @@ def build_packing(queries: Sequence[str], *,
     registry = AtomRegistry()   # SHARED across queries
     compiled = [compile_query(q, registry) for q in queries]
     encoder = EventEncoder.from_registry(registry)
-    symbolics = [compile_symbolic(c.cea) for c in compiled]
+    # resolve every query's strategy + CONSUME clause up front — an
+    # unsupported combination raises HERE, before any device table exists,
+    # so a pack can never silently evaluate a member under ANY semantics
+    sems = [resolve_semantics(c.query) for c in compiled]
+    symbolics = [compile_symbolic(c.cea, strategy=s.construction)
+                 for c, s in zip(compiled, sems)]
 
     # NOTE: every symbolic shares num_bits (shared registry), but each
     # computed its own class partition; combine into joint classes.
@@ -230,6 +258,8 @@ def build_packing(queries: Sequence[str], *,
     m_all = np.zeros((Cp, Sp, Sp), np.float32)
     finals = np.zeros((Qp, Sp), np.float32)
     init_mask = np.zeros((Sp,), np.float32)
+    latest = np.zeros((Qp,), np.float32)
+    consume = np.zeros((Qp, Sp), np.float32)
     for qi, sym in enumerate(symbolics):
         off = offsets[qi]
         Mq = sym.transition_matrices()                       # (Cq, S, S)
@@ -238,13 +268,21 @@ def build_packing(queries: Sequence[str], *,
             m_all[c, off:off + sizes[qi], off:off + sizes[qi]] = Mq[cq]
         finals[qi, off:off + sizes[qi]] = sym.finals.astype(np.float32)
         init_mask[off + sym.initial] = 1.0
+        if sems[qi].latest:
+            latest[qi] = 1.0
+        if sems[qi].consume:
+            # clear rows span the query's OWN block only — a consuming
+            # query never disturbs its pack-mates' ring states
+            consume[qi, off:off + sizes[qi]] = 1.0
 
     tables = PackedTables(
         m_all=jnp.asarray(m_all), finals=jnp.asarray(finals),
         class_of=jnp.asarray(class_of_p),
         class_ind=ops.class_indicator(class_of_p, Cp),
         init_mask=jnp.asarray(init_mask),
-        offsets=[int(o) for o in offsets], sizes=list(sizes), reps=reps)
+        offsets=[int(o) for o in offsets], sizes=list(sizes), reps=reps,
+        latest_q=jnp.asarray(latest) if latest.any() else None,
+        consume_sq=jnp.asarray(consume) if consume.any() else None)
     return Packing(
         qids=qids, queries=tuple(queries), compiled=compiled,
         symbolics=symbolics, encoder=encoder, tables=tables,
@@ -252,7 +290,9 @@ def build_packing(queries: Sequence[str], *,
         num_states=S_hat, padded_states=Sp,
         num_queries=len(sizes), padded_queries=Qp,
         num_classes=n_classes, padded_classes=Cp,
-        num_bits=k, padded_bits=kp)
+        num_bits=k, padded_bits=kp,
+        strategies=tuple(c.query.strategy for c in compiled),
+        consumes=tuple(bool(c.query.consume_on_match) for c in compiled))
 
 
 def check_packing_invariants(packing: Packing) -> None:
@@ -341,6 +381,38 @@ def check_packing_invariants(packing: Packing) -> None:
             fail(f"query {qi}: finals row disagrees with its automaton")
         if im[off + sym.initial] != 1.0:
             fail(f"query {qi}: initial state not seeded")
+    # 4. semantic operands agree with the declared per-query semantics
+    strategies = packing.strategies or ("ALL",) * Q
+    consumes = packing.consumes or (False,) * Q
+    want_latest = [qi for qi in range(Q) if strategies[qi] == "LAST"]
+    if t.latest_q is None:
+        if want_latest:
+            fail(f"LAST queries {want_latest} but no latest_q operand — "
+                 "their counts would come out under MAX semantics")
+    else:
+        la = np.asarray(t.latest_q)
+        if la.shape != (Qp,):
+            fail(f"latest_q shape {la.shape} != (Q_pad={Qp},)")
+        exp = np.zeros(Qp, np.float32)
+        exp[want_latest] = 1.0
+        if not np.array_equal(la, exp):
+            fail("latest_q flags disagree with the per-query strategies")
+    want_consume = [qi for qi in range(Q) if consumes[qi]]
+    if t.consume_sq is None:
+        if want_consume:
+            fail(f"CONSUME BY ANY queries {want_consume} but no consume_sq "
+                 "operand — their matches would never clear the ring")
+    else:
+        co = np.asarray(t.consume_sq)
+        if co.shape != (Qp, Sp):
+            fail(f"consume_sq shape {co.shape} != (Q_pad={Qp}, S_pad={Sp})")
+        exp = np.zeros((Qp, Sp), np.float32)
+        for qi in want_consume:
+            off, sz = packing.offsets[qi], packing.sizes[qi]
+            exp[qi, off:off + sz] = 1.0
+        if not np.array_equal(co, exp):
+            fail("consume_sq rows must cover exactly each consuming "
+                 "query's own state block")
 
 
 def resolve_query_window(spec, *, epsilon: Optional[int] = None,
@@ -446,6 +518,12 @@ class MultiQueryEngine:
         from . import tecs_arena
         self.arena_impl = tecs_arena.check_arena_impl(arena_impl)
         self.tables = packing.tables
+        sems = [c.semantics for c in self.compiled]
+        self.strategies = tuple(c.query.strategy for c in self.compiled)
+        self.consumes = tuple(
+            bool(c.query.consume_on_match) for c in self.compiled)
+        self.native_semantics = any(
+            s.construction != "ALL" or s.latest or s.consume for s in sems)
 
     # ------------------------------------------------------------------
     @property
@@ -474,6 +552,11 @@ class MultiQueryEngine:
         :meth:`pipeline` (DESIGN.md §9).
         """
         wkern.require_count_scan(self.window)
+        if self.tables.latest_q is not None or \
+                self.tables.consume_sq is not None:
+            raise ValueError(
+                "scan() cannot honor LAST / CONSUME BY ANY semantics "
+                f"(packed strategies {self.strategies!r}); use pipeline()")
         # generalized multi-hot seeding: fold the per-query inits into the
         # scan by replacing the kernel's one-hot seed with init_mask — the
         # XLA path supports it directly; the Pallas kernel is invoked with
@@ -491,7 +574,8 @@ class MultiQueryEngine:
             attrs, self.encoder.specs, t.class_of, t.class_ind, t.m_all,
             t.finals, state, init_mask=t.init_mask, window=self.window,
             event_ts=event_ts, start_pos=start_pos, impl=self.impl,
-            use_pallas=self.use_pallas, b_tile=self.b_tile)
+            use_pallas=self.use_pallas, b_tile=self.b_tile,
+            latest_q=t.latest_q, consume_sq=t.consume_sq)
 
     def encode_ts(self, streams, base_pos: Optional[int] = 0):
         """(attrs, event_ts | None) per the window — see VectorEngine."""
@@ -524,8 +608,14 @@ class MultiQueryEngine:
         return tbl
 
     def run_enumerate(self, streams, start_pos: int = 0,
-                      arena_capacity: int = 1 << 15, strategy: str = "ALL"):
+                      arena_capacity: int = 1 << 15,
+                      strategy: Optional[str] = None):
         """Packed-query enumeration from the device arena (no event replay).
+
+        ``strategy=None`` (default) enumerates each query under its OWN
+        compiled semantics — packs may mix strategies per query; an
+        explicit strategy is only accepted on all-trivial packs (legacy
+        post-filter) or when it matches every member's strategy.
 
         Returns ``(counts (T, B, Q) int64, matches)`` with ``matches``
         mapping each hit ``(t, b, q)`` to its complex events — the shared

@@ -257,7 +257,9 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
             window=self.window, event_ts=ts_lanes,
             start_pos=lane_pos, valid_counts=n,
             impl=self.impl, use_pallas=self._use_pallas,
-            b_tile=self._b_tile, return_trace=with_arena)      # (cap, L, Q)
+            b_tile=self._b_tile, return_trace=with_arena,
+            latest_q=self._latest_q,
+            consume_sq=self._consume_sq)                       # (cap, L, Q)
         matches, C = pipe[0], pipe[1]
 
         # --- 4. relabel: routed-slot counts → chunk event order -----------
@@ -291,15 +293,29 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
             expire = (tecs_arena.window_expire_masks(
                 self.window, ts_ring0, ts_lanes, lane_pos, n)
                 if timed else None)
+            # the arena runs on LIVE dims; padded query/state tails of a
+            # fleet-style packing are dead by construction, so slicing the
+            # hit mask and consume rows to them is exact (cf. scan_chunk)
+            Qa = self._arena_tables.num_queries
+            hitsq = (matches > 0.5)[..., :Qa]
+            # CONSUME BY ANY rides the routed lanes exactly like the parent
+            # (scan_chunk): any matching query clears its own cell-table
+            # block after the step's roots are recorded (DESIGN.md D2)
+            consume = None
+            if self._consume_sq is not None:
+                consume = jnp.einsum(
+                    "tbq,qs->tbs", hitsq.astype(jnp.float32),
+                    jnp.asarray(self._consume_sq, jnp.float32)
+                    [:Qa, :self._arena_tables.num_states]) > 0.5
             arena, roots = tecs_arena.run_arena_scan(
                 self._arena_tables, arena, trace, gpos_lanes,
-                lane_pos, n, matches > 0.5, epsilon=self.epsilon,
-                expire=expire,
+                lane_pos, n, hitsq, epsilon=self.epsilon,
+                expire=expire, consume=consume,
                 arena_impl=self.arena_impl, use_pallas=self._use_pallas,
                 b_tile=self._b_tile)
             rr = jnp.concatenate(
-                [jnp.moveaxis(roots, 0, 1).reshape(L * cap, NQ),
-                 jnp.full((1, NQ), tecs_arena.NULL, jnp.int32)])
+                [jnp.moveaxis(roots, 0, 1).reshape(L * cap, Qa),
+                 jnp.full((1, Qa), tecs_arena.NULL, jnp.int32)])
             new_state["arena"] = arena
             info["roots"] = rr[slot]                           # (T, Q)
         return counts_chunk, new_state, info
@@ -445,12 +461,16 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
     # tECS-arena enumeration at global positions (DESIGN.md §7)
     # ------------------------------------------------------------------
     def enumerate(self, position: int, *, query: int = 0,
-                  strategy: str = "ALL", snapshot=None
+                  strategy: Optional[str] = None, snapshot=None
                   ) -> List[ComplexEvent]:
         """Complex events closing at global ``position`` — start/end/data
         are global stream positions, matching the host
         ``PartitionedEngine``'s relabelled output.  No event replay: the
         arena nodes were labelled with global positions as they were built.
+
+        ``strategy=None`` (default) enumerates under the query's COMPILED
+        semantics (see the parent class); an explicit strategy is the
+        legacy host post-filter, valid only on plain-ALL engines.
 
         Unlike the parent (B pre-partitioned streams, ``(position,
         stream)``), the partitioned engine has ONE interleaved stream, so
@@ -458,6 +478,7 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         keyword-only to keep parent-style positional calls from silently
         landing in ``query``.
         """
+        post = tecs_arena.resolve_enum_strategy(self.engine, strategy)
         if not isinstance(position, (int, np.integer)):
             raise TypeError(
                 f"position must be a global stream position (int), got "
@@ -469,12 +490,16 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
             return []
         lane, roots_row = rec
         snap = snapshot if snapshot is not None else self.arena_snapshot()
-        ces = list(snap.enumerate(lane, int(roots_row[query]),
-                                  int(position)))
-        return apply_strategy(strategy, ces)
+        ces = snap.enumerate(lane, int(roots_row[query]), int(position))
+        if post is not None:
+            return apply_strategy(post, list(ces))
+        if self._latest_q is not None and \
+                float(np.asarray(self._latest_q)[query]) > 0.5:
+            return tecs_arena.take_latest_group(ces)
+        return list(ces)
 
     def enumerate_hits(self, hits: Sequence[int], *, query: int = 0,
-                       strategy: str = "ALL"):
+                       strategy: Optional[str] = None):
         """Enumerate a batch of global hit positions with one arena fetch."""
         snap = self.arena_snapshot()
         return {p: self.enumerate(p, query=query, strategy=strategy,
@@ -569,7 +594,7 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
     # load-bearing (they shape routing), so they are.
     _compat_keys = ("format", "engine", "query_fingerprint", "window",
                     "chunk_len", "lane_cap", "key_attrs", "num_states",
-                    "num_queries", "arena_capacity")
+                    "num_queries", "arena_capacity", "semantics")
 
     def manifest(self) -> dict:
         m = super().manifest()

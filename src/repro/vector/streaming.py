@@ -108,6 +108,18 @@ def migrate_packed_arrays(arrays: Dict[str, np.ndarray], old: dict,
                 f"query {q!r} changed state count across the repack "
                 f"({old['sizes'][o_idx[q]]} → {new['sizes'][n_idx[q]]}) — "
                 "its live runs cannot be migrated; remove and re-add it")
+        # a surviving query's compiled semantics must be unchanged: its
+        # ring columns encode runs *under that strategy/CONSUME clause*
+        # (older specs lack these keys; treat them as unchecked)
+        for key, what in (("strategies", "selection strategy"),
+                          ("consumes", "CONSUME clause")):
+            if key in old and key in new and \
+                    old[key][o_idx[q]] != new[key][n_idx[q]]:
+                raise ValueError(
+                    f"query {q!r} changed its {what} across the repack "
+                    f"({old[key][o_idx[q]]!r} → {new[key][n_idx[q]]!r}) — "
+                    "its live runs cannot be migrated; remove and "
+                    "re-add it")
     out: Dict[str, np.ndarray] = {}
     for name, arr in arrays.items():
         if name in _PACKED_STATE_LEAVES:
@@ -227,6 +239,10 @@ class StreamingVectorEngine:
         self._specs = self.encoder.specs
         self._use_pallas = engine.use_pallas
         self._b_tile = engine.b_tile
+        # compiled-semantics operands (None when every query is plain ALL —
+        # keeps pre-semantics graphs, fingerprints and manifests identical)
+        self._latest_q = getattr(t, "latest_q", None)
+        self._consume_sq = getattr(t, "consume_sq", None)
 
         # ring slots depend on the position only mod W, so the kernel gets
         # self._pos % ring — the absolute (unbounded) position stays a host
@@ -272,7 +288,8 @@ class StreamingVectorEngine:
             self._finals_q, state, init_mask=self._init_mask,
             window=self.window, event_ts=event_ts,
             start_pos=start_pos, impl=self.impl,
-            use_pallas=self._use_pallas, b_tile=self._b_tile)
+            use_pallas=self._use_pallas, b_tile=self._b_tile,
+            latest_q=self._latest_q, consume_sq=self._consume_sq)
 
     def _arena_step_impl(self, attrs: jnp.ndarray, state: dict,
                          start_pos: jnp.ndarray, gbase: jnp.ndarray,
@@ -291,7 +308,8 @@ class StreamingVectorEngine:
             window=self.window, start=start_pos, gbase=gbase,
             impl=self.impl, use_pallas=self._use_pallas,
             b_tile=self._b_tile, arena_impl=self.arena_impl,
-            event_ts=event_ts)
+            event_ts=event_ts, latest_q=self._latest_q,
+            consume_sq=self._consume_sq)
         return counts, {"C": C, "arena": arena}, roots
 
     # ------------------------------------------------------------------
@@ -336,7 +354,7 @@ class StreamingVectorEngine:
     # ------------------------------------------------------------------
     _compat_keys = ("format", "engine", "query_fingerprint", "window",
                     "chunk_len", "batch", "num_states", "num_queries",
-                    "arena_capacity")
+                    "arena_capacity", "semantics")
 
     def query_fingerprint(self) -> str:
         """Deterministic digest of the compiled query + encoder.
@@ -358,6 +376,20 @@ class StreamingVectorEngine:
             a = np.asarray(arr)
             h.update(str((a.shape, str(a.dtype))).encode())
             h.update(a.tobytes())
+        # compiled-semantics operands, hashed only when present so plain
+        # ALL engines keep their pre-semantics fingerprints (matching
+        # Packing._hash_tables): LAST shares MAX's transition tables and
+        # consuming queries share the non-consuming ones, so the base
+        # digest alone cannot tell them apart.
+        if self._latest_q is not None or self._consume_sq is not None:
+            h.update(b"semantics")
+            for arr in (self._latest_q, self._consume_sq):
+                if arr is None:
+                    h.update(b"none")
+                else:
+                    a = np.asarray(arr)
+                    h.update(str((a.shape, str(a.dtype))).encode())
+                    h.update(a.tobytes())
         return h.hexdigest()
 
     def manifest(self) -> dict:
@@ -380,6 +412,16 @@ class StreamingVectorEngine:
             "num_queries": int(self._finals_q.shape[0]),
             "arena_capacity": (None if self.arena_capacity is None
                                else int(self.arena_capacity)),
+            # compiled selection/consumption semantics (DESIGN.md D2, §10):
+            # a snapshot taken under one strategy must not restore into an
+            # engine compiled under another — the rings *mean* different
+            # run sets (e.g. a consuming engine's ring is cleared on match)
+            "semantics": {
+                "strategies": [str(s) for s in
+                               getattr(self.engine, "strategies", ()) or ()],
+                "consume": [bool(c) for c in
+                            getattr(self.engine, "consumes", ()) or ()],
+            },
             "strict_overflow": bool(self.strict_overflow),
             "window_overflow": [int(b) for b in
                                 np.nonzero(self.window_overflow)[0]],
@@ -429,7 +471,7 @@ class StreamingVectorEngine:
     #: (and therefore the fingerprint and packed dims) is *expected* to
     #: differ; everything else still has to match exactly
     _packing_elastic_keys = ("query_fingerprint", "num_states",
-                             "num_queries")
+                             "num_queries", "semantics")
 
     def _check_manifest(self, meta: dict, skip: Sequence[str] = ()) -> None:
         mine = self.manifest()
@@ -583,7 +625,7 @@ class StreamingVectorEngine:
         return tecs_arena.ArenaSnapshot(self._state["arena"])
 
     def enumerate(self, position: int, stream: int = 0, query: int = 0,
-                  strategy: str = "ALL",
+                  strategy: Optional[str] = None,
                   snapshot: Optional["tecs_arena.ArenaSnapshot"] = None
                   ) -> List[ComplexEvent]:
         """Complex events closing at absolute ``position`` on ``stream``.
@@ -591,19 +633,31 @@ class StreamingVectorEngine:
         Walks Algorithm 2 over the fetched arena (output-linear delay) — no
         host event replay.  Pass a shared ``snapshot`` when enumerating many
         hits to fetch the arena once.
+
+        ``strategy=None`` (default) enumerates under the query's COMPILED
+        semantics: strategy-aware tables keep only the selected runs, so
+        the walk is O(matches kept) with no host re-filter (a LAST query
+        takes the DFS's leading latest-start group).  An explicit strategy
+        is the legacy host post-filter, valid only on plain-ALL engines —
+        :func:`tecs_arena.resolve_enum_strategy` raises on a conflict.
         """
+        post = tecs_arena.resolve_enum_strategy(self.engine, strategy)
         rec = self._roots.get((int(position), int(stream)))
         if rec is None or int(rec[query]) < 0:
             # NULL root slots appear when a repack migration adds a query
             # after this hit was recorded — nothing to enumerate for it
             return []
         snap = snapshot if snapshot is not None else self.arena_snapshot()
-        ces = list(snap.enumerate(int(stream), int(rec[query]),
-                                  int(position)))
-        return apply_strategy(strategy, ces)
+        ces = snap.enumerate(int(stream), int(rec[query]), int(position))
+        if post is not None:
+            return apply_strategy(post, list(ces))
+        if self._latest_q is not None and \
+                float(np.asarray(self._latest_q)[query]) > 0.5:
+            return tecs_arena.take_latest_group(ces)
+        return list(ces)
 
     def enumerate_hits(self, hits: Sequence[Tuple[int, int]],
-                       query: int = 0, strategy: str = "ALL"
+                       query: int = 0, strategy: Optional[str] = None
                        ) -> Dict[Tuple[int, int], List[ComplexEvent]]:
         """Enumerate a batch of ``(position, stream)`` hits with one fetch."""
         snap = self.arena_snapshot()

@@ -304,8 +304,8 @@ def _union_fold(ar: dict, acc: jnp.ndarray, contrib: jnp.ndarray,
 
 def arena_scan(tables: ArenaTables, arena: dict, class_ids: jnp.ndarray,
                gpos: jnp.ndarray, start: jnp.ndarray, valid: jnp.ndarray,
-               hits: jnp.ndarray, *, epsilon: int, expire=None
-               ) -> Tuple[dict, jnp.ndarray]:
+               hits: jnp.ndarray, *, epsilon: int, expire=None,
+               consume=None) -> Tuple[dict, jnp.ndarray]:
     """Maintain the tECS arena over one chunk — per-event reference fold.
 
     This is the slow-but-obviously-faithful implementation (one traced
@@ -329,6 +329,11 @@ def arena_scan(tables: ArenaTables, arena: dict, class_ids: jnp.ndarray,
                then only sets the root-chain extent (``ring − 1``: every
                live start is within the last W positions).  None keeps the
                count-window single-slot rule.
+    consume:   optional (T, B, S) bool — CONSUME BY ANY clear masks
+               (precomputed from the counting scan's matches): after an
+               event's roots are recorded, cells of the flagged states
+               drop across every ring slot — the node-level mirror of the
+               counting kernels' ring clear (host emit-then-clear order).
     Returns (arena', roots (T, B, Q) int32) — roots are NULL where no hit.
     """
     T, B = class_ids.shape
@@ -342,6 +347,7 @@ def arena_scan(tables: ArenaTables, arena: dict, class_ids: jnp.ndarray,
 
     def step(ar, xs):
         t, cls_t, gpos_t, hit_t = xs[:4]
+        extra = list(xs[4:])
         j = start + t                                           # (B,)
         live = t < valid
         seed = (arange_w[None, :] == (j % W)[:, None])
@@ -349,7 +355,8 @@ def arena_scan(tables: ArenaTables, arena: dict, class_ids: jnp.ndarray,
             expire_t = (arange_w[None, :]
                         == ((j - epsilon - 1) % W)[:, None])
         else:
-            expire_t = xs[4]
+            expire_t = extra.pop(0)
+        consume_t = extra.pop(0) if consume is not None else None
         clear = (seed | expire_t) & live[:, None]
         cell = jnp.where(clear[:, :, None], NULL, ar["cell"])
 
@@ -436,6 +443,12 @@ def arena_scan(tables: ArenaTables, arena: dict, class_ids: jnp.ndarray,
             fold_d, (root0, ar),
             jnp.arange(epsilon, -1, -1, dtype=jnp.int32))
 
+        # CONSUME BY ANY: emitted roots keep their nodes; the *cells* of
+        # consuming queries drop so no later match extends a consumed run.
+        if consume_t is not None:
+            cell = jnp.where(consume_t[:, None, :] & live[:, None, None],
+                             NULL, cell)
+
         ar = dict(ar)
         ar["cell"] = cell
         return ar, jnp.where(hit_t, root, NULL)
@@ -445,6 +458,8 @@ def arena_scan(tables: ArenaTables, arena: dict, class_ids: jnp.ndarray,
     xs = (ts, class_ids, gpos, hits)
     if expire is not None:
         xs = xs + (jnp.asarray(expire, bool),)
+    if consume is not None:
+        xs = xs + (jnp.asarray(consume, bool),)
     arena, roots = jax.lax.scan(step, arena, xs)
     return arena, roots
 
@@ -486,7 +501,7 @@ def arena_scan_block(tables: ArenaTables, arena: dict,
                      class_ids: jnp.ndarray, gpos: jnp.ndarray,
                      start: jnp.ndarray, valid: jnp.ndarray,
                      hits: jnp.ndarray, *, epsilon: int, expire=None,
-                     use_pallas: bool = False,
+                     consume=None, use_pallas: bool = False,
                      interpret: Optional[bool] = None, b_tile: int = 8,
                      n_seg: int = 1) -> Tuple[dict, jnp.ndarray]:
     """Block-vectorized :func:`arena_scan` — same contract, ~1000× less
@@ -532,7 +547,10 @@ def arena_scan_block(tables: ArenaTables, arena: dict,
     eviction masks — same contract as :func:`arena_scan` (DESIGN.md §9).
     They are closed-form in the absolute event index, so segmented
     execution and the Pallas kernel consume them as one more streamed
-    operand.
+    operand.  ``consume`` (optional, (T, B, S) bool): CONSUME BY ANY
+    clear masks — same contract as :func:`arena_scan`; clearing allocates
+    nothing, so the record layout, the chunk-level cumsum and the decoded
+    ``kind``/``pos``/``max_start`` are all untouched.
     """
     from ..kernels import ops
     T, B = class_ids.shape
@@ -561,7 +579,8 @@ def arena_scan_block(tables: ArenaTables, arena: dict,
         ops.arena_block_update(
             cells0, class_ids, hits, start, valid, lay=lay, ptab=ptab,
             finals_sq=tables.finals_sq, n_seg=n_seg, expire=expire,
-            use_pallas=use_pallas, interpret=interpret, b_tile=b_tile)
+            consume=consume, use_pallas=use_pallas, interpret=interpret,
+            b_tile=b_tile)
 
     # -- 3. bump allocation: one chunk-level cumsum over all T·M slots -----
     N = T * M
@@ -649,7 +668,7 @@ def window_expire_masks(window: "wkern.DeviceWindow", ts_ring0, event_ts,
 
 
 def run_arena_scan(atables: ArenaTables, arena: dict, trace, gpos, start,
-                   valid, hits, *, epsilon: int, expire=None,
+                   valid, hits, *, epsilon: int, expire=None, consume=None,
                    arena_impl: str = "block",
                    use_pallas: bool = False, b_tile: int = 8):
     """Dispatch one arena chunk to the selected implementation.
@@ -658,13 +677,15 @@ def run_arena_scan(atables: ArenaTables, arena: dict, trace, gpos, start,
     the default) or ``"fold"`` (the per-event reference fold, kept for
     parity testing — DESIGN.md §8).  ``expire``: precomputed time-window
     eviction masks, or None for count windows (DESIGN.md §9).
+    ``consume``: precomputed CONSUME BY ANY clear masks ((T, B, S) bool),
+    or None for non-consuming queries.
     """
     check_arena_impl(arena_impl)
     if arena_impl == "fold":
         return arena_scan(atables, arena, trace, gpos, start, valid, hits,
-                          epsilon=epsilon, expire=expire)
+                          epsilon=epsilon, expire=expire, consume=consume)
     return arena_scan_block(atables, arena, trace, gpos, start, valid, hits,
-                            epsilon=epsilon, expire=expire,
+                            epsilon=epsilon, expire=expire, consume=consume,
                             use_pallas=use_pallas, b_tile=b_tile)
 
 
@@ -672,7 +693,7 @@ def scan_chunk(atables: ArenaTables, arena: dict, attrs, state, *,
                specs, class_of, class_ind, m_all, finals_q, init_mask,
                window: "wkern.DeviceWindow", start, gbase, impl,
                use_pallas, b_tile, arena_impl: str = "block",
-               event_ts=None):
+               event_ts=None, latest_q=None, consume_sq=None):
     """One chunk through the fused pipeline + arena at a common offset.
 
     The whole-batch case: every lane advances by the same T events from
@@ -682,6 +703,12 @@ def scan_chunk(atables: ArenaTables, arena: dict, attrs, state, *,
     streaming engine's arena step and the one-shot :func:`run_enumerate`.
     Time windows take the ``event_ts (T, B)`` operand; the same eviction
     masks gate the counting ring and the arena cells (DESIGN.md §9).
+    ``latest_q``/``consume_sq`` are the compiled-semantics operands
+    (LAST's latest-slot reduction / CONSUME BY ANY's state-clear rows —
+    ``repro.core.query.resolve_semantics``): both feed the counting
+    kernels, and ``consume_sq`` additionally derives the arena's
+    per-step cell-clear masks from the emitted matches, so the node
+    store mirrors the count ring's consumption exactly.
     Returns ``(matches, state', arena', roots)``.
     """
     from ..kernels import ops
@@ -690,7 +717,8 @@ def scan_chunk(atables: ArenaTables, arena: dict, attrs, state, *,
         attrs, specs, class_of, class_ind, m_all, finals_q, state,
         init_mask=init_mask, window=window, event_ts=event_ts,
         start_pos=start, impl=impl,
-        use_pallas=use_pallas, b_tile=b_tile, return_trace=True)
+        use_pallas=use_pallas, b_tile=b_tile, return_trace=True,
+        latest_q=latest_q, consume_sq=consume_sq)
     T, B = trace.shape
     gpos = jnp.broadcast_to(
         gbase + jnp.arange(T, dtype=jnp.int32)[:, None], (T, B))
@@ -699,30 +727,99 @@ def scan_chunk(atables: ArenaTables, arena: dict, attrs, state, *,
     expire = (window_expire_masks(window, ts_ring0, event_ts, start_b,
                                   valid_b)
               if window.is_time else None)
+    # the arena runs on LIVE dims (Q queries, Ŝ states); the pipeline's
+    # matches/operands may carry padded tails (fleet buckets pad query
+    # slots and packed states) — padding is dead by construction, so
+    # slicing is exact
+    hits = (matches > 0.5)[..., :atables.num_queries]
+    consume = (jnp.einsum(
+        "tbq,qs->tbs", hits.astype(jnp.float32),
+        jnp.asarray(consume_sq, jnp.float32)[:atables.num_queries,
+                                             :atables.num_states]) > 0.5
+        if consume_sq is not None else None)
     arena, roots = run_arena_scan(
-        atables, arena, trace, gpos, start_b, valid_b, matches > 0.5,
-        epsilon=window.epsilon, expire=expire,
+        atables, arena, trace, gpos, start_b, valid_b, hits,
+        epsilon=window.epsilon, expire=expire, consume=consume,
         arena_impl=arena_impl, use_pallas=use_pallas, b_tile=b_tile)
     return matches, state, arena, roots
 
 
+def resolve_enum_strategy(engine, strategy):
+    """Resolve ``run_enumerate``'s strategy arg against the engine's own
+    compiled semantics.  Returns the *post-filter* strategy, or ``None``
+    for native enumeration (the compiled tables already select).
+
+    * ``None`` → native: strategy-compiled engines keep exactly the
+      selected matches in the arena, plain-ALL engines keep everything
+      (identical to the legacy ``strategy="ALL"`` default).
+    * explicit strategy on a plain-ALL engine → legacy host post-filter.
+    * explicit strategy on a natively-compiled engine → must match the
+      engine's own (per-query) strategy; anything else would silently
+      double-filter, so it raises.
+    """
+    if strategy is None:
+        return None
+    if not getattr(engine, "native_semantics", False):
+        return strategy
+    strats = getattr(engine, "strategies", ())
+    if all(s == strategy for s in strats):
+        return None                 # already compiled in — nothing to do
+    raise ValueError(
+        f"engine compiled native semantics {tuple(strats)!r}; cannot "
+        f"post-filter its enumeration under {strategy!r} — construct the "
+        "engine from a query with that strategy instead")
+
+
+def take_latest_group(ces) -> List[ComplexEvent]:
+    """First (latest-start) group of an arena enumeration, O(group).
+
+    The arena root chains union nodes with strictly decreasing starts, so
+    Algorithm 2's DFS yields all complex events of the latest start first,
+    contiguously — a LAST query's native matches are exactly that group.
+    Useful when the caller has no per-hit count to slice by (streaming
+    roots record node ids only).
+    """
+    it = iter(ces)
+    first = next(it, None)
+    if first is None:
+        return []
+    out = [first]
+    for ce in it:
+        if int(ce.start) != int(first.start):
+            break
+        out.append(ce)
+    return out
+
+
 def run_enumerate(engine, streams, start_pos: int = 0,
-                  arena_capacity: int = 1 << 15, strategy: str = "ALL"):
+                  arena_capacity: int = 1 << 15, strategy=None):
     """One-shot pipeline + arena + enumeration over pre-batched streams.
 
     ``engine`` is a constructed VectorEngine or MultiQueryEngine (anything
     with ``tables``/``encoder``/``arena_tables()``/``init_state``).  The
     predicate scan, counting scan and arena maintenance run as ONE jitted
     computation (cached on the engine); the host then fetches the arena and
-    walks Algorithm 2 per hit.  Returns ``(counts (T, B, Q) int64,
-    {(t, b, q): [ComplexEvent]})`` — single-query callers slice Q = 0.
+    walks Algorithm 2 per hit.
+
+    ``strategy=None`` (default) enumerates under each query's COMPILED
+    semantics (:func:`resolve_enum_strategy`): the strategy-aware tables
+    keep only the selected matches, so the walk is O(matches kept) — for
+    LAST queries the DFS yields the latest-start group first and the
+    latest-reduced count bounds the take, no host re-filter anywhere.
+    Returns ``(counts (T, B, Q) int64, {(t, b, q): [ComplexEvent]})`` —
+    single-query callers slice Q = 0.
     """
+    import itertools
+
     from ..core.selection import apply_strategy
+    post = resolve_enum_strategy(engine, strategy)
     attrs, event_ts = engine.encode_ts(streams, base_pos=int(start_pos))
     tbl = engine.tables
     finals = tbl.finals
     finals_q = finals if finals.ndim == 2 else finals[None, :]
     atables = engine.arena_tables()
+    latest_q = getattr(tbl, "latest_q", None)
+    consume_sq = getattr(tbl, "consume_sq", None)
 
     def step(attrs, state, arena, start, ts):
         # one-shot: absolute positions and ring offsets coincide
@@ -734,7 +831,7 @@ def run_enumerate(engine, streams, start_pos: int = 0,
             impl=engine.impl, use_pallas=engine.use_pallas,
             b_tile=engine.b_tile,
             arena_impl=getattr(engine, "arena_impl", "block"),
-            event_ts=ts)
+            event_ts=ts, latest_q=latest_q, consume_sq=consume_sq)
         return matches, arena, roots
 
     cache = getattr(engine, "_enum_jit", None)
@@ -752,13 +849,24 @@ def run_enumerate(engine, streams, start_pos: int = 0,
                                      event_ts)
     counts = np.asarray(matches_f).astype(np.int64)
     roots_np = np.asarray(roots)
+    latest_np = (np.asarray(latest_q) > 0.5) if latest_q is not None \
+        else None
     snap = ArenaSnapshot(arena)
     out = {}
     for t, b, q in zip(*np.nonzero(counts)):
         j = int(start_pos) + int(t)
-        ces = list(snap.enumerate(int(b), roots_np[t, b, q], j,
-                                  j - engine.epsilon))
-        out[(int(t), int(b), int(q))] = apply_strategy(strategy, ces)
+        ces = snap.enumerate(int(b), roots_np[t, b, q], j,
+                             j - engine.epsilon)
+        if post is not None:
+            out[(int(t), int(b), int(q))] = apply_strategy(post, list(ces))
+        elif latest_np is not None and latest_np[q]:
+            # LAST: the root chains starts in decreasing order, so the
+            # latest-start group comes first; the latest-reduced count is
+            # exactly its size — take it and stop (O(matches kept)).
+            out[(int(t), int(b), int(q))] = list(
+                itertools.islice(ces, int(counts[t, b, q])))
+        else:
+            out[(int(t), int(b), int(q))] = list(ces)
     return counts, out
 
 
