@@ -78,6 +78,16 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
     selection = perf_cer.selection_throughput(
         total_events=min(n, 2048) if quick else n,
         chunk=min(512, n), eps_last=63, eps_nxt=10)
+    # service-runtime gate data (scripts/check.sh): sustained throughput
+    # from raw dicts through the full StreamService ingestion path
+    # (validate → chunk → encode thread → device thread → durable log)
+    # must stay within the floor ratio of the bare pre-encoded feed_keyed
+    # loop, compile-once, with p50/p99 submit→deliver chunk latencies
+    # recorded for the trajectory.
+    service = perf_cer.service_latency(
+        total_events=n, chunk=min(256, n),
+        num_keys=16 if quick else 32, num_lanes=16 if quick else 32,
+        every=8)
     return {
         "bench": "cer_perf",
         "events": n,
@@ -94,6 +104,7 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
                               if k != "single_states"},
         "fleet_churn": fleet,
         "selection": selection,
+        "service_latency": service,
         "compile_counts": dict(
             {f"chunk_{row['chunk']}": row["compile_count"]
              for row in streaming},
@@ -102,7 +113,8 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
             time_window_count=time_window["compile_count_count"],
             time_window_time=time_window["compile_count_time"],
             recovery=recovery["compile_count"],
-            selection=selection["compile_count"]),
+            selection=selection["compile_count"],
+            service=service["compile_count"]),
     }
 
 
@@ -141,6 +153,11 @@ def main() -> None:
               f"({fl['distinct_geometries']} geometries, "
               f"{fl['cache_hits']} cache hits), steady state "
               f"{fl['fleet_eps']:.0f} ev/s = {fl['ratio']:.2f}× static")
+        sv = rec["service_latency"]
+        print(f"# service: {sv['service_eps']:.0f} ev/s from raw dicts = "
+              f"{sv['ratio']:.2f}× pre-encoded {sv['raw_eps']:.0f}, "
+              f"p50 {sv['p50_ms']:.0f} ms / p99 {sv['p99_ms']:.0f} ms "
+              f"per chunk, {sv['alerts']} alerts")
         sel = rec["selection"]
         print(f"# selection: native LAST "
               f"{sel['last']['native_vs_post']:.1f}× / NXT "

@@ -8,9 +8,26 @@ maps requests to independent substreams exactly like the paper's stock
 symbols.
 
     PYTHONPATH=src python examples/serve_monitored.py [--tokens 48]
+
+``--service`` routes the same token stream through the resilient
+:class:`repro.runtime.StreamService` runtime (DESIGN.md §12) instead of
+the in-process host executor, and asserts the full contract end to end —
+exit is nonzero on any mismatch:
+
+* raw dict events are validated at the door; injected malformed events
+  land in the dead-letter queue with reasons, and never reach the engine;
+* the device engine's per-position match counts (read back from the
+  service's durable emission log) are bit-identical to the paper's host
+  dict-of-engines baseline over the same stream;
+* a burst variant with a deliberately undersized event ring forces a
+  ``WindowOverflowError`` mid-stream: the service quarantines, regrows,
+  and replays, and its cumulative emitted match record must equal a
+  service whose engine was sized large from the start.
 """
 import argparse
 import dataclasses
+import sys
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +45,16 @@ WITHIN 8 events
 PARTITION BY [lane]
 """
 
+# burst variant for the self-heal leg: a TIME window over the decode step
+# clock, so the ring occupancy depends on the stream (and can overflow)
+BURST_GUARD = """
+SELECT * FROM Tokens
+WHERE TOK AS a ; TOK AS b ; TOK AS c
+FILTER a[logp < -2.5] AND b[logp < -2.5] AND c[logp < -2.5]
+WITHIN 16 [t]
+PARTITION BY [lane]
+"""
+
 
 def tiny_serving_config():
     cfg = get_config("qwen2p5_14b")
@@ -37,18 +64,14 @@ def tiny_serving_config():
         dtype="float32", param_dtype="float32", remat=False)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--tokens", type=int, default=48)
-    ap.add_argument("--lanes", type=int, default=4)
-    args = ap.parse_args()
-
+def decode_token_events(tokens: int, lanes: int):
+    """Run the tiny serving stack; return one raw dict event per
+    (step, lane) in stream order — the shape a service producer sees."""
     cfg = tiny_serving_config()
     params, _ = init_params(cfg, jax.random.PRNGKey(0))
-    B, S0 = args.lanes, 8
-    S_max = S0 + args.tokens
+    B, S0 = lanes, 8
+    S_max = S0 + tokens
 
-    # prefill a prompt, grow caches to S_max
     prompt = jax.random.randint(jax.random.PRNGKey(1), (B, S0), 0,
                                 cfg.vocab_size)
     logits, caches = prefill(params, cfg, {"tokens": prompt})
@@ -68,22 +91,141 @@ def main() -> None:
     caches = pad_seq(caches, S_max)
     serve_step = jax.jit(make_serve_step(cfg))
 
-    guard = compile_query(GUARD).make_executor(max_enumerate=1)
     tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
-    fired = []
-    for t in range(args.tokens):
+    raws = []
+    for t in range(tokens):
         logits_t, caches = serve_step(params, tok, caches, S0 + t)
         logp = jax.nn.log_softmax(logits_t, axis=-1)
         tok = jnp.argmax(logits_t, axis=-1)[:, None]
         chosen = np.take_along_axis(np.asarray(logp),
                                     np.asarray(tok), axis=1)[:, 0]
-        # one event per lane into the CER engine (partition-by lane)
         for lane in range(B):
-            ev = Event("TOK", {"lane": lane, "logp": float(chosen[lane]),
-                               "tok": int(tok[lane, 0])})
-            for match in guard.process(ev):
-                fired.append((lane, t, match.time))
-    print(f"generated {args.tokens} tokens × {B} lanes")
+            raws.append({"type": "TOK", "lane": lane, "t": float(t),
+                         "logp": float(chosen[lane]),
+                         "tok": int(tok[lane, 0])})
+    return raws
+
+
+def run_host_guard(raws) -> list:
+    guard = compile_query(GUARD).make_executor(max_enumerate=1)
+    fired = []
+    for i, r in enumerate(raws):
+        ev = Event("TOK", {"lane": r["lane"], "logp": r["logp"],
+                           "tok": r["tok"]})
+        for match in guard.process(ev):
+            fired.append((r["lane"], i // 1, match.time))
+    return fired
+
+
+def run_service_demo(raws, lanes: int) -> None:
+    from repro.core.engine import Engine
+    from repro.core.partition import PartitionedEngine
+    from repro.runtime import (EventValidator, StreamService,
+                               cumulative_matches)
+    from repro.vector import PartitionedStreamingEngine, VectorEngine
+
+    chunk = 16
+    q = compile_query(GUARD)
+    keys = q.query.partition_by                       # ("lane",)
+
+    # ---- host oracle: the paper's dict-of-engines baseline ------------
+    pe = PartitionedEngine(
+        lambda: Engine(q.cea, window=q.query.window), keys)
+    host_counts = [len(pe.process(Event("TOK", {k: v for k, v in r.items()
+                                                if k != "type"})))
+                   for r in raws]
+
+    # ---- service: raw dicts + injected junk ---------------------------
+    junk = [{"type": "NOPE", "lane": 0, "logp": 0.0},
+            "not-an-event",
+            {"type": "TOK", "lane": 0, "logp": [1, 2]}]
+    feed = list(raws)
+    for j, bad in enumerate(junk):                    # spread through stream
+        feed.insert(len(feed) // 2 + j * 3, bad)
+
+    ve = VectorEngine(q, use_pallas=False)
+    pse = PartitionedStreamingEngine(ve, keys, chunk_len=chunk,
+                                     num_lanes=max(4, lanes))
+    with tempfile.TemporaryDirectory() as d:
+        svc = StreamService(
+            pse, d, validator=EventValidator(allowed_types={"TOK"}))
+        receipts = [svc.submit(r, block=True, timeout=120.0) for r in feed]
+        svc.drain(pad=True)
+        rejected = [r for r in receipts if r.status == "rejected"]
+        assert len(rejected) == len(junk), [r.status for r in rejected]
+        assert [r["reason"] for r in svc.dlq.records] == \
+            ["unknown_type", "not_a_dict", "bad_attr_value"], \
+            svc.dlq.records
+        # per-position counts, read back from the durable emission log
+        dev_counts = np.zeros(svc.metrics.chunks * chunk, np.int64)
+        for rec in svc.runner.log.records:
+            for idx, v in rec["counts"]:
+                dev_counts[rec["chunk"] * chunk + idx[0]] = v
+        np.testing.assert_array_equal(dev_counts[:len(raws)],
+                                      np.asarray(host_counts))
+        assert not dev_counts[len(raws):].any()       # pads are inert
+        assert pse.compile_count == 1, pse.compile_count
+        print(f"service ≡ host baseline: {int(dev_counts.sum())} matches "
+              f"over {len(raws)} events, {len(rejected)} malformed events "
+              f"dead-lettered, compile_count={pse.compile_count}")
+        svc.close()
+
+    # ---- overflow self-heal: undersized ring vs sized-large oracle ----
+    qb = compile_query(BURST_GUARD)
+
+    def run(mwe, directory):
+        veb = VectorEngine(qb, use_pallas=False, max_window_events=mwe)
+        eng = PartitionedStreamingEngine(veb, keys, chunk_len=chunk,
+                                         num_lanes=max(4, lanes),
+                                         strict_overflow=True)
+        alerts = []
+        svc = StreamService(eng, directory,
+                            sinks=[lambda c, h: alerts.append((c, list(h)))],
+                            checkpoint_every=4, max_window_events_cap=256)
+        for r in raws:
+            svc.submit(r, block=True, timeout=120.0)
+        svc.drain(pad=True)
+        m = svc.metrics
+        svc.close()
+        return alerts, m, eng
+
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        a_small, m_small, eng_small = run(8, d1)
+        a_big, m_big, _ = run(64, d2)
+        assert m_small.overflows >= 1 and m_small.regrows >= 1, m_small
+        assert m_big.overflows == 0, m_big
+        hits = lambda al: sorted(h for _, hs in al for h in hs)
+        assert hits(a_small) == hits(a_big)
+        assert cumulative_matches(d1) == cumulative_matches(d2)
+        print(f"overflow self-heal: ring 8 → {eng_small.window.ring} after "
+              f"{m_small.overflows} overflow(s) / {m_small.regrows} "
+              f"regrow(s), {m_small.replayed_chunks} chunks replayed; "
+              f"match record ≡ engine sized large from the start")
+
+
+def main() -> None:
+    if sys.flags.optimize:
+        # the --service legs verify with asserts; running optimized would
+        # silently skip every gate
+        raise SystemExit("run without -O: this example verifies with asserts")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=48)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--service", action="store_true",
+                    help="route the stream through the resilient "
+                         "StreamService runtime and verify the full "
+                         "contract (DLQ, host parity, overflow self-heal)")
+    args = ap.parse_args()
+
+    raws = decode_token_events(args.tokens, args.lanes)
+    print(f"generated {args.tokens} tokens × {args.lanes} lanes")
+
+    if args.service:
+        run_service_demo(raws, args.lanes)
+        return
+
+    fired = run_host_guard(raws)
     print(f"guardrail fired {len(fired)} times; first 5: {fired[:5]}")
 
 

@@ -42,6 +42,15 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     python examples/fleet_churn.py > /dev/null
     echo "fleet churn smoke OK (hot add/remove, migration parity)"
 
+    # service runtime smoke (DESIGN.md §12): raw dict events through the
+    # full StreamService loop — malformed events dead-letter, matches
+    # must be bit-identical to the paper's host dict-of-engines baseline,
+    # and a forced window overflow must self-heal by ring regrow with
+    # parity against an engine sized large from the start (the example
+    # exits nonzero otherwise).
+    python examples/serve_monitored.py --service > /dev/null
+    echo "service runtime smoke OK (DLQ, host parity, overflow self-heal)"
+
     python -m benchmarks.run --quick --cer-json BENCH_cer.json
     # Regression gates:
     #  * the streaming / partitioned / enumeration / time-window cells must
@@ -121,6 +130,20 @@ if fl["ratio"] < fl["floor"]:
 print(f"fleet churn OK: {fl['compile_count']} compiles <= "
       f"{fl['distinct_geometries']} geometries over {fl['churn_ops']} ops; "
       f"steady state {fl['ratio']:.2f}x static >= floor {fl['floor']}")
+sv = rec.get("service_latency")
+if sv is None:
+    sys.exit("record is missing the service_latency row (DESIGN.md §12)")
+if sv["compile_count"] != 1:
+    sys.exit(f"service runtime broke compile-once: "
+             f"compile_count={sv['compile_count']}")
+if sv["ratio"] < sv["floor"]:
+    sys.exit(f"service ingestion regression: service_eps / raw_eps = "
+             f"{sv['ratio']:.3f} < floor {sv['floor']} — the submit → "
+             f"encode-thread → device-thread loop is no longer hiding "
+             f"host-side work behind the device step (DESIGN.md §12)")
+print(f"service OK: {sv['ratio']:.3f} >= floor {sv['floor']} "
+      f"({sv['service_eps']:.0f} ev/s from raw dicts, p50 "
+      f"{sv['p50_ms']:.0f} ms / p99 {sv['p99_ms']:.0f} ms per chunk)")
 sel = rec.get("selection")
 if sel is None:
     sys.exit("record is missing the selection row (DESIGN.md D2)")

@@ -131,6 +131,30 @@ class DeviceWindow:
         return self.ring
 
     # ------------------------------------------------------------------
+    def regrow(self, max_window_events: int) -> "DeviceWindow":
+        """A copy of this TIME window with a larger rate bound.
+
+        The ring is the only thing that changes — kind, size and
+        ``time_attr`` are preserved, so the regrown window still describes
+        the *same query clause*, just with room for more simultaneously
+        live starts (the overflow self-heal path, DESIGN.md §12).  Count
+        windows cannot regrow (their ring is derived from ε and they never
+        overflow), and shrinking is refused: live starts of the wider ring
+        would have nowhere to go.
+        """
+        if not self.is_time:
+            raise ValueError(
+                "only time windows regrow: a count window's ring is sized "
+                "from its epsilon and can never overflow (DESIGN.md §9)")
+        new_ring = _pad8(int(max_window_events))
+        if new_ring < self.ring:
+            raise ValueError(
+                f"ring regrow cannot shrink: max_window_events="
+                f"{int(max_window_events)} pads to {new_ring} < current "
+                f"ring {self.ring}")
+        return DeviceWindow(self.kind, self.size, self.time_attr, new_ring)
+
+    # ------------------------------------------------------------------
     @staticmethod
     def events(epsilon: int) -> "DeviceWindow":
         return DeviceWindow("events", float(int(epsilon)),
@@ -256,6 +280,37 @@ def require_count_scan(window: DeviceWindow) -> None:
         raise ValueError("scan() drives the legacy count-window kernels; "
                          "time-window queries evaluate through "
                          "pipeline()/run() (DESIGN.md §9)")
+
+
+def ring_slot_remap(old_ring: int, new_ring: int, next_pos: np.ndarray
+                    ) -> tuple:
+    """Per-lane slot mapping from a W0 ring onto a larger W1 ring.
+
+    Slots are position-addressed (start ``j`` lives at ``j mod W``), so
+    old slot ``k`` of a lane whose next-seed position is ``p`` last held
+    start ``j = p-1 - ((p-1-k) mod W0)`` — the most recent position
+    congruent to ``k``.  On the W1 ring that start belongs at ``j mod W1``.
+    ``p`` may be the absolute stream position (streaming engine: seeding is
+    globally position-driven, so the remap lands starts on exactly the
+    slots a W1 engine would have used) or any frame-consistent virtual
+    position ``≡ p (mod W0)`` (partitioned lanes carry positions mod W0
+    only; a rotation of the W1 ring is behaviorally identical — all ring
+    arithmetic is relative to ``start_pos``).
+
+    W0 consecutive positions are distinct mod ``W1 ≥ W0``, so the map is
+    injective.  Returns ``(new_slot, valid)`` — both ``(B, W0)``; ``valid``
+    masks slots whose reconstructed start would predate the stream
+    (``j < 0``: never seeded).
+
+    ``next_pos`` is ``(B,)`` int.
+    """
+    if new_ring < old_ring:
+        raise ValueError(f"ring remap cannot shrink ({old_ring} → "
+                         f"{new_ring})")
+    p = np.asarray(next_pos, np.int64).reshape(-1, 1)          # (B, 1)
+    k = np.arange(old_ring, dtype=np.int64)[None, :]           # (1, W0)
+    j = p - 1 - ((p - 1 - k) % old_ring)                       # (B, W0)
+    return (j % new_ring).astype(np.int64), j >= 0
 
 
 def audit_monotone_ts(ts: np.ndarray, last: Optional[np.ndarray] = None

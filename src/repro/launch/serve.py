@@ -13,8 +13,15 @@ if os.environ.get("REPRO_FORCE_DEVICES"):
 Production shape: prefill builds lane caches, the decode loop emits one CER
 event per (lane, token) into the partitioned engine; matches surface as
 guardrail hits alongside the generated tokens.
+
+``--service`` swaps the in-process host executor for the resilient
+:class:`repro.runtime.StreamService` runtime (DESIGN.md §12): the decode
+loop submits raw dicts, the service validates / chunks / encodes off the
+decode thread, and guardrail alerts surface through at-least-once sinks
+backed by a durable emission log under ``--service-dir``.
 """
 import argparse
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +31,7 @@ from ..configs import ALIASES, get_config, get_smoke_config
 from ..core import Event, compile_query
 from ..models import init_params, make_serve_step, prefill
 from ..sharding import DECODE_RULES, set_rules
-from .mesh import make_host_mesh, make_production_mesh
+from .mesh import make_host_mesh, make_production_mesh, use_mesh
 
 DEFAULT_GUARD = """
 SELECT * FROM Tokens
@@ -69,13 +76,21 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--guard", default=DEFAULT_GUARD)
+    ap.add_argument("--service", action="store_true",
+                    help="route the guard through the StreamService "
+                         "runtime (validation, DLQ, durable alerts) "
+                         "instead of the in-process host executor")
+    ap.add_argument("--service-dir", default=None, metavar="DIR",
+                    help="durable state directory for --service "
+                         "(checkpoints, emission log, DLQ); a temp dir "
+                         "when omitted")
     args = ap.parse_args()
 
     arch = ALIASES.get(args.arch, args.arch)
     cfg = get_smoke_config(arch) if args.smoke else get_config(arch)
     mesh = make_host_mesh() if args.smoke else make_production_mesh()
 
-    with set_rules(DECODE_RULES), jax.set_mesh(mesh):
+    with set_rules(DECODE_RULES), use_mesh(mesh):
         params, _ = init_params(cfg, jax.random.PRNGKey(0))
         B, S0 = args.lanes, args.prompt_len
         S_max = S0 + args.tokens
@@ -92,7 +107,24 @@ def main() -> None:
                              (cfg.frontend_seq
                               if cfg.frontend == "vision_stub" else 0))
         serve_step = jax.jit(make_serve_step(cfg))
-        guard = compile_query(args.guard).make_executor(max_enumerate=1)
+        q = compile_query(args.guard)
+
+        svc = guard = None
+        alerts = []
+        if args.service:
+            from ..runtime import EventValidator, StreamService
+            from ..vector import PartitionedStreamingEngine, VectorEngine
+            ve = VectorEngine(q, use_pallas=False)
+            pse = PartitionedStreamingEngine(
+                ve, q.query.partition_by, chunk_len=16,
+                num_lanes=max(4, args.lanes))
+            sdir = args.service_dir or tempfile.mkdtemp(prefix="serve_svc_")
+            svc = StreamService(
+                pse, sdir,
+                validator=EventValidator(allowed_types={"TOK"}),
+                sinks=[lambda c, h: alerts.extend(h)])
+        else:
+            guard = q.make_executor(max_enumerate=1)
 
         prefix = cfg.frontend_seq if cfg.frontend == "vision_stub" else 0
         tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
@@ -105,11 +137,24 @@ def main() -> None:
             chosen = np.take_along_axis(np.asarray(logp), np.asarray(tok),
                                         axis=1)[:, 0]
             for lane in range(B):
-                ev = Event("TOK", {"lane": lane,
-                                   "logp": float(chosen[lane]),
-                                   "tok": int(tok[lane, 0])})
-                fired += len(guard.process(ev))
-    print(f"generated {args.tokens} × {B} lanes; guardrail fired {fired}×")
+                attrs = {"lane": lane, "logp": float(chosen[lane]),
+                         "tok": int(tok[lane, 0])}
+                if svc is not None:
+                    svc.submit(dict(attrs, type="TOK"),
+                               block=True, timeout=120.0)
+                else:
+                    fired += len(guard.process(Event("TOK", attrs)))
+    if svc is not None:
+        svc.drain(pad=True)
+        m = svc.metrics
+        svc.close()
+        print(f"generated {args.tokens} × {B} lanes; "
+              f"{len(alerts)} guardrail alerts across {m.chunks} chunks "
+              f"(compile_count={svc.engine.compile_count}, durable log "
+              f"at {svc.directory})")
+    else:
+        print(f"generated {args.tokens} × {B} lanes; "
+              f"guardrail fired {fired}×")
 
 
 if __name__ == "__main__":

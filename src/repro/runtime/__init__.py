@@ -2,9 +2,14 @@ from .fault_tolerance import (HeartbeatMonitor, RetryPolicy, StepTimer,
                               run_with_retries)
 from .fleet import CompileCache, QueryFleet
 from .recovery import MatchLog, RecoveringStreamRunner, cumulative_matches
+from .service import (DeadLetterQueue, EventValidator, Receipt,
+                      ServiceMetrics, StreamService, StreamServiceError,
+                      TokenBucket)
 from .trainer import Trainer, TrainerConfig
 
 __all__ = ["HeartbeatMonitor", "RetryPolicy", "StepTimer", "run_with_retries",
            "CompileCache", "QueryFleet",
            "MatchLog", "RecoveringStreamRunner", "cumulative_matches",
+           "DeadLetterQueue", "EventValidator", "Receipt", "ServiceMetrics",
+           "StreamService", "StreamServiceError", "TokenBucket",
            "Trainer", "TrainerConfig"]

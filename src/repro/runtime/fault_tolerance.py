@@ -5,8 +5,12 @@ On a real multi-pod deployment these wrap the JAX distributed runtime
 host-side and hardware-agnostic, so it is exercised by CPU tests:
 
 * ``run_with_retries`` — retries a step on transient failure with exponential
-  backoff; re-raises after the budget (the Trainer then restores from the
-  last checkpoint — crash-only design).
+  backoff + decorrelating jitter and an optional per-attempt timeout;
+  re-raises after the budget (the Trainer then restores from the last
+  checkpoint — crash-only design).  Errors on the ``non_retryable``
+  deny-list propagate immediately: they signal *state* problems
+  (window-overflow latches, compat-manifest mismatches) that a retry
+  would only repeat against corrupt or incompatible state.
 * ``HeartbeatMonitor`` — background thread that flags a hang when the main
   loop stops beating (watchdog for collective deadlocks: on TPU pods the
   usual failure mode is a silent NCCL/ICI stall, not an exception).
@@ -16,6 +20,8 @@ host-side and hardware-agnostic, so it is exercised by CPU tests:
 """
 from __future__ import annotations
 
+import concurrent.futures
+import random
 import threading
 import time
 from dataclasses import dataclass, field
@@ -24,10 +30,50 @@ from typing import Callable, List, Optional
 
 @dataclass
 class RetryPolicy:
+    """Retry budget for one logical step.
+
+    ``non_retryable`` is an explicit deny-list checked *before*
+    ``retryable`` — even when an error type matches both (e.g. a
+    compat-manifest ``ValueError`` configured retryable by a caller), the
+    deny-list wins, so state-corruption signals never burn retry budget.
+    ``jitter`` decorrelates the backoff: each sleep is scaled by a uniform
+    factor in ``[1, 1 + jitter]`` so restarted replicas don't retry in
+    lockstep.  ``timeout_s`` bounds each attempt; an attempt that exceeds
+    it raises ``TimeoutError`` (a retryable ``OSError`` subclass).
+    """
+
     max_retries: int = 3
     backoff_s: float = 0.1
     backoff_mult: float = 2.0
+    jitter: float = 0.1
+    timeout_s: Optional[float] = None
     retryable: tuple = (RuntimeError, OSError)
+    non_retryable: tuple = ()
+
+
+def _call_with_timeout(fn: Callable, timeout_s: float, args, kwargs):
+    """One attempt with a wall-clock deadline.
+
+    The attempt runs in a worker thread and the deadline is enforced by
+    ``Future.result(timeout)``; on expiry the worker CANNOT be killed
+    (Python has no thread cancellation), so it is abandoned — the
+    executor is shut down without waiting and the orphaned attempt runs
+    to completion in the background.  Callers retrying a *donating*
+    device step must therefore treat a timeout like a crash: restore
+    state before re-feeding (the RecoveringStreamRunner's restore-replay
+    path does exactly this).  Deliberately not a ``with`` block: the
+    context manager would join the hung worker and never return.
+    """
+    ex = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+    try:
+        fut = ex.submit(fn, *args, **kwargs)
+        try:
+            return fut.result(timeout=timeout_s)
+        except concurrent.futures.TimeoutError:
+            raise TimeoutError(
+                f"step exceeded per-attempt timeout of {timeout_s:.3f}s")
+    finally:
+        ex.shutdown(wait=False)
 
 
 def run_with_retries(fn: Callable, policy: RetryPolicy, *args, **kwargs):
@@ -35,12 +81,16 @@ def run_with_retries(fn: Callable, policy: RetryPolicy, *args, **kwargs):
     last = None
     for attempt in range(policy.max_retries + 1):
         try:
+            if policy.timeout_s is not None:
+                return _call_with_timeout(fn, policy.timeout_s, args, kwargs)
             return fn(*args, **kwargs)
+        except policy.non_retryable:   # state problem: retrying repeats it
+            raise
         except policy.retryable as e:  # transient: backoff and retry
             last = e
             if attempt == policy.max_retries:
                 raise
-            time.sleep(delay)
+            time.sleep(delay * (1.0 + policy.jitter * random.random()))
             delay *= policy.backoff_mult
     raise last  # pragma: no cover
 

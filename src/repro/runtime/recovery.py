@@ -43,7 +43,17 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
+from ..kernels.window import WindowOverflowError
 from .fault_tolerance import HeartbeatMonitor, RetryPolicy, run_with_retries
+
+#: default step policy: transient RuntimeError/OSError (including the
+#: per-attempt TimeoutError) back off and retry; the deny-list names the
+#: state-problem signals a retry can only repeat — the overflow latch
+#: survives the retry (and the chunk was already applied, so re-feeding
+#: corrupts state), and a compat-manifest ValueError means the engine and
+#: snapshot disagree structurally.
+DEFAULT_STEP_POLICY = RetryPolicy(
+    non_retryable=(WindowOverflowError, ValueError))
 
 
 def _hit_key(h):
@@ -150,11 +160,13 @@ class RecoveringStreamRunner:
             counts, hits, emitted = runner.process(chunk)
         runner.close()
 
-    ``process`` feeds one chunk under ``run_with_retries`` (transient
-    ``RuntimeError``/``OSError`` back off and retry; a persistent
-    :class:`~repro.kernels.window.WindowOverflowError` deliberately does
-    NOT retry — the latch survives the retry, and re-feeding would corrupt
-    state), beats the heartbeat, appends the emission record, and
+    ``process`` feeds one chunk under ``run_with_retries`` with
+    :data:`DEFAULT_STEP_POLICY` (transient ``RuntimeError``/``OSError``
+    back off with jittered exponential delays and retry; the explicit
+    ``non_retryable`` deny-list — :class:`~repro.kernels.window.
+    WindowOverflowError`, compat-manifest ``ValueError`` — propagates
+    immediately: the latch survives the retry, and re-feeding would
+    corrupt state), beats the heartbeat, appends the emission record, and
     checkpoints every ``every`` chunks.  Snapshots are host-side copies
     taken *between* feeds — the donated-state fast path and
     ``compile_count == 1`` are untouched.
@@ -176,7 +188,8 @@ class RecoveringStreamRunner:
         self.engine = engine
         self.directory = directory
         self.every = int(every)
-        self.policy = policy if policy is not None else RetryPolicy()
+        self.policy = (policy if policy is not None
+                       else DEFAULT_STEP_POLICY)
         self.feed_method = feed_method
         self.blocking_saves = blocking_saves
         os.makedirs(directory, exist_ok=True)
@@ -195,17 +208,43 @@ class RecoveringStreamRunner:
         """True while re-fed chunks are suppressed by the high-water mark."""
         return self.chunk_index <= self._replay_through
 
-    def resume(self) -> bool:
+    def resume(self, **restore_kwargs) -> bool:
         """Restore the newest checkpoint, if any.  Returns True when one
         was restored; ``chunk_index`` then points at the first chunk to
-        re-feed (everything before it is inside the restored state)."""
+        re-feed (everything before it is inside the restored state).
+
+        Keyword arguments forward to ``engine.restore`` — the elastic
+        restore paths (``n_lanes=…``, ``migrate_packing=True``,
+        ``max_window_events=…``) compose with crash recovery, e.g. the
+        service's overflow heal resumes the last good checkpoint directly
+        onto a regrown ring."""
         if self.manager.latest_step() is None:
             return False
         arrays, meta = self.manager.load_arrays()
-        self.engine.restore({"arrays": arrays, "meta": meta})
+        self.engine.restore({"arrays": arrays, "meta": meta},
+                            **restore_kwargs)
         self.chunk_index = int(meta["chunk"])
         self._replay_through = self.log.high_water()
         return True
+
+    def latest_manifest(self) -> Optional[dict]:
+        """The newest checkpoint's manifest (``extra``), or None on a
+        fresh directory — read without touching engine state, so a
+        restarting service can size a ring regrow before restoring."""
+        if self.manager.latest_step() is None:
+            return None
+        _, meta = self.manager.load_arrays()
+        return meta
+
+    def rewind(self, chunk_index: int = 0) -> None:
+        """Reset the stream cursor without touching checkpoints or the
+        emission log — for drivers that rebuild engine state outside the
+        checkpoint path (e.g. an overflow heal with no checkpoint yet:
+        ``engine.reset(); engine.regrow(…)``) and then replay the input
+        from ``chunk_index``.  The high-water mark still suppresses
+        re-emission of everything already durably recorded."""
+        self.chunk_index = int(chunk_index)
+        self._replay_through = self.log.high_water()
 
     def process(self, *args, **kwargs) -> Tuple[np.ndarray, list, bool]:
         """Feed one chunk; returns ``(counts, hits, emitted)``.

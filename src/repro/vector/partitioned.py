@@ -87,6 +87,10 @@ class PartitionStats:
     overflow_lanes: int = 0      # lanes with the rate-bound ovf latch SET
     #                              (current latch state, not cumulative —
     #                              time windows only, DESIGN.md §9)
+    quarantined_lanes: int = 0   # lanes parked mid-overflow-heal (current
+    #                              state, mirrors engine.quarantined_lanes —
+    #                              snapshot-carried so a crash mid-heal
+    #                              resumes the regrow, DESIGN.md §12)
 
 
 class PartitionedStreamingEngine(StreamingVectorEngine):
@@ -142,7 +146,10 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         # the host engine's per-partition position clock (DESIGN.md §9)
         self._fallback_clock: Dict[int, int] = {}
         self._chunk_idx = 0
-        self._step = jax.jit(self._part_step_impl, donate_argnums=(2,))
+        self._step = self._make_step()
+
+    def _make_step(self):
+        return jax.jit(self._part_step_impl, donate_argnums=(2,))
 
     # ------------------------------------------------------------------
     def _init_full_state(self, batch: int):
@@ -439,6 +446,7 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
             - int(np.asarray(info["nulls"]).sum())
         st.evicted_lanes += int(np.asarray(info["evicted"]).sum())
         st.overflow_lanes = int(self.window_overflow.sum())  # latch state
+        st.quarantined_lanes = len(self._quarantined)
 
         counts = np.asarray(counts_f).astype(np.int64)         # (T, Q)
         any_q = counts.sum(axis=-1)
@@ -639,9 +647,36 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
             self._roots[int(p)] = (lane, np.asarray(v, np.int32))
         return dropped
 
+    def _ring_migration_frame(self, meta: dict,
+                              arrays: Dict[str, np.ndarray]) -> np.ndarray:
+        """Per-lane virtual frame for the ring remap (DESIGN.md §12).
+
+        Lane cursors are carried mod the old ring, so the absolute per-lane
+        position is unknown; any representative congruent mod W0 yields the
+        same slot↔start pairing, and ``lane_pos + W0`` makes every old slot
+        a valid (non-negative) start.  The cursor is rewritten into the new
+        ring's frame in place, so post-restore seeding stays consistent
+        with the migrated slots — match *sets* are rotation-invariant even
+        though the frame is virtual."""
+        old_ring = int((meta.get("window") or {}).get("ring",
+                                                      self.window.ring))
+        lp = np.asarray(arrays["state/lane_pos"], np.int64)
+        arrays["state/lane_pos"] = (
+            (lp + old_ring) % self.window.ring).astype(np.int32)
+        return lp + old_ring
+
+    def quarantine(self, lanes: Sequence[int]) -> None:
+        super().quarantine(lanes)
+        self.stats.quarantined_lanes = len(self._quarantined)
+
+    def clear_quarantine(self) -> None:
+        super().clear_quarantine()
+        self.stats.quarantined_lanes = 0
+
     def restore(self, snapshot: dict, *,
                 n_lanes: Optional[int] = None,
-                migrate_packing: bool = False) -> None:
+                migrate_packing: bool = False,
+                max_window_events: Optional[int] = None) -> None:
         """Load a :meth:`snapshot`, optionally rescaling to ``n_lanes``.
 
         The lane count is the elastic dimension: a snapshot taken at L0
@@ -654,23 +689,26 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         ``migrate_packing=True`` additionally remaps the packed state axis
         between query packings (repack-aware restore, DESIGN.md §11) — it
         composes with a lane rescale: the state-axis migration runs first
-        (it preserves the lane axis), then lanes are gathered.  Everything
-        else in the manifest must match or the call raises without
-        touching state.
+        (it preserves the lane axis), then lanes are gathered.
+        ``max_window_events=…`` regrows the time-window rate bound during
+        the restore (ring slice/scatter, parent-class docs + DESIGN.md
+        §12); it runs after the packing migration and before the lane
+        gather, since ring leaves keep the lane axis.  Everything else in
+        the manifest must match or the call raises without touching state.
         """
-        meta, arrays = snapshot["meta"], snapshot["arrays"]
+        meta, arrays = snapshot["meta"], dict(snapshot["arrays"])
         if n_lanes is not None and int(n_lanes) != self.num_lanes:
             # lane count is a compiled shape: re-jit for the new geometry
             self.num_lanes = int(n_lanes)
             self.batch = int(n_lanes)
             self._trace_count = 0
-            self._step = jax.jit(self._part_step_impl, donate_argnums=(2,))
+            self._step = self._make_step()
+        skip: Tuple[str, ...] = ()
         if migrate_packing:
-            self._check_manifest(meta, skip=self._packing_elastic_keys)
-            arrays = self._migrated_arrays(
-                {"meta": meta, "arrays": arrays})
-        else:
-            self._check_manifest(meta)
+            skip = tuple(self._packing_elastic_keys)
+            arrays = dict(self._migrated_arrays(
+                {"meta": meta, "arrays": arrays}))
+        arrays = self._ring_migrated(meta, arrays, max_window_events, skip)
         lane_map = None
         dropped_owned = 0
         src_lanes = int(meta.get("num_lanes", self.num_lanes))
@@ -690,6 +728,11 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         self._fallback_clock = {int(h): int(n) for h, n in
                                 meta.get("fallback_clock", {}).items()}
         self._restore_roots(arrays, lane_map)
+        q = [int(b) for b in meta.get("quarantined_lanes", ())]
+        if lane_map is not None:   # rescale: follow the parked lanes
+            q = [lane_map[b] for b in q if b in lane_map]
+        self._quarantined = tuple(sorted(q))
+        self.stats.quarantined_lanes = len(self._quarantined)
 
     def _migrate_lanes(self, arrays: Dict[str, np.ndarray], src_lanes: int
                        ) -> Tuple[Dict[str, np.ndarray],
@@ -753,4 +796,5 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         self._fallback_clock.clear()
         self._roots.clear()
         self._last_ts = None
+        self._quarantined = ()
         self.stats = PartitionStats()

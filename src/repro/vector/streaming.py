@@ -155,6 +155,57 @@ def migrate_packed_arrays(arrays: Dict[str, np.ndarray], old: dict,
     return out
 
 
+#: snapshot leaves whose axis 1 is the window ring — the slice/scatter
+#: targets of a ring regrow.  Bare "state" is the count-window layout and
+#: never regrows, but is listed for completeness of the addressing rule.
+_RING_LEAVES = ("state", "state/C", "state/C/C", "state/ts", "state/C/ts")
+
+
+def migrate_ring_arrays(arrays: Dict[str, np.ndarray], old_ring: int,
+                        new_ring: int, next_pos: np.ndarray
+                        ) -> Dict[str, np.ndarray]:
+    """Scatter ring-indexed snapshot leaves onto a larger ring (regrow).
+
+    The elastic sibling of :func:`migrate_packed_arrays` for the *ring*
+    axis (DESIGN.md §12): count rings, the timestamp ring, and the arena
+    cell table move slot ``k → (j mod W1)`` per
+    :func:`repro.kernels.window.ring_slot_remap`; surplus W1 slots start
+    empty (zeros / ``TS_EMPTY`` / arena ``NULL`` — exactly what a W1
+    engine's expiry mask would have left there, so behaviour is identical
+    to an engine built wide from the start: any start old enough to live
+    only in the wider ring's extra history would have latched the W0
+    engine's ``ovf`` flag already).  Leaves without a ring axis (``ovf``
+    latches, lane tables, arena node stores, bump pointers, roots) pass
+    through verbatim; per-lane position cursors are the caller's to
+    rewrite into the new frame.
+    """
+    if new_ring == old_ring:
+        return dict(arrays)
+    new_slot, valid = wkern.ring_slot_remap(old_ring, new_ring, next_pos)
+    k = np.arange(old_ring)
+    out: Dict[str, np.ndarray] = {}
+    for name, arr in arrays.items():
+        if name in _RING_LEAVES:
+            fill = (arr.dtype.type(wkern.TS_EMPTY) if name.endswith("/ts")
+                    else arr.dtype.type(0))
+        elif name.endswith("/arena/cell"):
+            fill = arr.dtype.type(tecs_arena.NULL)
+        else:
+            out[name] = arr
+            continue
+        if arr.ndim < 2 or arr.shape[1] != old_ring:
+            raise ValueError(
+                f"snapshot leaf {name!r} has shape {arr.shape}; ring "
+                f"migration expects axis 1 == {old_ring}")
+        B = arr.shape[0]
+        new = np.full((B, new_ring) + arr.shape[2:], fill, arr.dtype)
+        for b in range(B):
+            vb = valid[b]
+            new[b, new_slot[b, vb]] = arr[b, k[vb]]
+        out[name] = new
+    return out
+
+
 def _restore_like(prefix: str, template, arrays: Dict[str, np.ndarray]):
     """Rebuild a device pytree shaped like ``template`` from saved leaves.
 
@@ -266,9 +317,18 @@ class StreamingVectorEngine:
         # the monotonicity audit (stream order must equal time order)
         self._last_ts: Optional[np.ndarray] = None
         self._state = self._init_full_state(batch)
+        #: lanes parked by the service layer mid-regrow (DESIGN.md §12) —
+        #: informational for the engine itself, but snapshot-carried so a
+        #: crash mid-heal resumes the regrow instead of re-raising
+        self._quarantined: Tuple[int, ...] = ()
         # state ring donated: steady-state streaming allocates nothing new
-        self._step = jax.jit(
-            self._arena_step_impl if arena_capacity is not None
+        self._step = self._make_step()
+
+    def _make_step(self):
+        """(Re)build the jitted step — called at init and after a ring
+        regrow invalidates the compiled executable's shapes."""
+        return jax.jit(
+            self._arena_step_impl if self.arena_capacity is not None
             else self._step_impl, donate_argnums=(1,))
 
     def _init_full_state(self, batch: int):
@@ -337,6 +397,23 @@ class StreamingVectorEngine:
         lane saw more than ``max_window_events`` simultaneously-live starts
         — its counts are a lower bound until :meth:`reset`."""
         return wkern.window_overflow(self._state)
+
+    @property
+    def quarantined_lanes(self) -> Tuple[int, ...]:
+        """Lanes parked by :meth:`quarantine` (empty outside a heal)."""
+        return self._quarantined
+
+    def quarantine(self, lanes: Sequence[int]) -> None:
+        """Mark lanes as parked mid-overflow-heal (DESIGN.md §12).
+
+        Purely bookkeeping on the engine side — the service layer stops
+        routing to these lanes while it regrows the ring; the marks ride
+        the snapshot manifest so a crash between quarantine and the
+        completed regrow resumes the heal instead of re-raising."""
+        self._quarantined = tuple(sorted({int(b) for b in lanes}))
+
+    def clear_quarantine(self) -> None:
+        self._quarantined = ()
 
     @property
     def compile_count(self) -> int:
@@ -425,6 +502,9 @@ class StreamingVectorEngine:
             "strict_overflow": bool(self.strict_overflow),
             "window_overflow": [int(b) for b in
                                 np.nonzero(self.window_overflow)[0]],
+            # not a compat key: lanes parked mid-overflow-heal, so a
+            # restore after a crash mid-quarantine resumes the regrow
+            "quarantined_lanes": [int(b) for b in self._quarantined],
             "pos": int(self._pos),
             "num_roots": len(self._roots),
             # not a compat key: the repack-aware restore path reads it to
@@ -495,8 +575,82 @@ class StreamingVectorEngine:
                 "not packing-backed")
         return migrate_packed_arrays(snapshot["arrays"], old, pk.spec())
 
-    def restore(self, snapshot: dict, *, migrate_packing: bool = False
-                ) -> None:
+    def _check_window_elastic(self, meta: dict, target_ring: int) -> None:
+        """Ring-elastic window compat: kind, size and time_attr must match
+        exactly; the snapshot ring may be *smaller* (it migrates onto the
+        wider ring) but never larger — a shrink would drop live starts."""
+        w = self.window
+        sw = meta.get("window") or {}
+        mismatch = [k for k, v in (("kind", w.kind), ("size", float(w.size)),
+                                   ("time_attr", w.time_attr))
+                    if sw.get(k) != v]
+        if mismatch:
+            raise ValueError(
+                f"snapshot window {sw!r} is incompatible with this engine "
+                f"(kind={w.kind!r} size={w.size} time_attr={w.time_attr!r})"
+                " — only the ring (rate bound) is elastic")
+        if int(sw.get("ring", target_ring)) > target_ring:
+            raise ValueError(
+                f"ring regrow cannot shrink: snapshot ring "
+                f"{int(sw['ring'])} > engine ring {target_ring}")
+
+    def _ring_migration_frame(self, meta: dict,
+                              arrays: Dict[str, np.ndarray]) -> np.ndarray:
+        """Per-lane next-seed positions for the ring slot remap.
+
+        The parent engine seeds slot ``pos mod ring`` for every lane, so
+        the frame is the absolute stream cursor broadcast over lanes.
+        ``PartitionedStreamingEngine`` overrides this to rewrite its
+        per-lane virtual cursors into the new ring's frame (mutating the
+        caller's ``arrays`` copy in place)."""
+        return np.full(self.batch, int(meta["pos"]), np.int64)
+
+    def _apply_ring(self, new_window: "wkern.DeviceWindow") -> None:
+        """Point this engine (and the wrapped compile-time engine, whose
+        ``window``/``ring``/``epsilon`` are plain derived attributes) at a
+        regrown window.  Invalidates the compiled step: the next feed()
+        traces exactly once for the new ring shapes.  The wrapped engine
+        is mutated — only regrow an engine you own exclusively."""
+        self.engine.window = new_window
+        self.engine.ring = new_window.ring
+        self.engine.epsilon = new_window.epsilon
+        self.window = new_window
+        self.epsilon = new_window.epsilon
+        self._ring = new_window.ring
+        self._trace_count = 0
+        self._step = self._make_step()
+
+    def _ring_migrated(self, meta: dict, arrays: Dict[str, np.ndarray],
+                       max_window_events: Optional[int],
+                       skip: Tuple[str, ...]) -> Dict[str, np.ndarray]:
+        """Shared restore plumbing for the ring-regrow path: validate the
+        manifest (ring-elastically when rings differ), apply the regrown
+        window, and slice/scatter ring leaves onto the wider ring.  All
+        validation happens *before* any engine mutation, so a rejected
+        snapshot leaves the engine untouched."""
+        snap_w = meta.get("window") or {}
+        snap_ring = int(snap_w.get("ring", self.window.ring))
+        new_w = (self.window.regrow(max_window_events)
+                 if max_window_events is not None else self.window)
+        if new_w.ring < snap_ring:
+            raise ValueError(
+                f"restore(max_window_events={int(max_window_events)}) pads "
+                f"to ring {new_w.ring} < snapshot ring {snap_ring} — ring "
+                "regrow cannot shrink")
+        if snap_ring != new_w.ring:
+            self._check_window_elastic(meta, target_ring=new_w.ring)
+            skip = skip + ("window",)
+        self._check_manifest(meta, skip=skip)
+        if new_w.ring != self.window.ring:
+            self._apply_ring(new_w)
+        if snap_ring != self.window.ring:
+            frame = self._ring_migration_frame(meta, arrays)
+            arrays = migrate_ring_arrays(
+                arrays, snap_ring, self.window.ring, frame)
+        return arrays
+
+    def restore(self, snapshot: dict, *, migrate_packing: bool = False,
+                max_window_events: Optional[int] = None) -> None:
         """Load a :meth:`snapshot` (or a checkpoint read back through
         ``CheckpointManager.load_arrays``) into this engine.
 
@@ -514,19 +668,44 @@ class StreamingVectorEngine:
         their new offsets (:func:`migrate_packed_arrays`), so a live fleet
         repack loses no in-flight runs.  Window, chunk geometry and arena
         capacity must still match.
+
+        ``max_window_events=…`` is the ring-regrow path (DESIGN.md §12):
+        grow a time window's per-lane rate bound while restoring.  The
+        engine re-resolves its window at the new bound (recompiling the
+        step once), and the snapshot's ring-indexed leaves are
+        slice/scattered onto the wider ring via
+        :func:`migrate_ring_arrays` — live starts keep their identity
+        (start ``j`` moves to slot ``j mod W1``), surplus slots begin
+        empty, and subsequent chunks behave exactly like an engine built
+        with the wider bound from the start.  A snapshot from a smaller
+        ring also restores into an already-regrown engine without the
+        kwarg; shrinking is refused either way.
         """
-        meta, arrays = snapshot["meta"], snapshot["arrays"]
+        meta, arrays = snapshot["meta"], dict(snapshot["arrays"])
+        skip: Tuple[str, ...] = ()
         if migrate_packing:
-            self._check_manifest(meta, skip=self._packing_elastic_keys)
-            arrays = self._migrated_arrays(snapshot)
-        else:
-            self._check_manifest(meta)
+            skip = tuple(self._packing_elastic_keys)
+            arrays = dict(self._migrated_arrays(snapshot))
+        arrays = self._ring_migrated(meta, arrays, max_window_events, skip)
         self._state = _restore_like(
             "state", self._init_full_state(self.batch), arrays)
         self._pos = int(meta["pos"])
         self._last_ts = (np.asarray(arrays["last_ts"], np.float32)
                          if "last_ts" in arrays else None)
         self._restore_roots(arrays)
+        self._quarantined = tuple(
+            int(b) for b in meta.get("quarantined_lanes", ()))
+
+    def regrow(self, max_window_events: int) -> None:
+        """Grow this time window's per-lane rate bound in place.
+
+        Implemented as snapshot → ring-migrating :meth:`restore`, so every
+        live start keeps its slot identity and the next :meth:`feed`
+        recompiles exactly once.  No-op when the target pads to the
+        current ring; raises on count windows and on shrink attempts."""
+        if self.window.regrow(max_window_events).ring == self.window.ring:
+            return
+        self.restore(self.snapshot(), max_window_events=max_window_events)
 
     def _check_overflow(self) -> None:
         """Post-feed strict-mode gate on the latched rate-bound flags."""
@@ -692,3 +871,4 @@ class StreamingVectorEngine:
         self._pos = 0
         self._roots.clear()
         self._last_ts = None
+        self._quarantined = ()

@@ -16,3 +16,9 @@ except ModuleNotFoundError:
 if settings is not None:
     settings.register_profile("repro", deadline=None, derandomize=True)
     settings.load_profile("repro")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-process fault-injection tests (subprocess "
+        "JAX compiles); deselect with -m 'not slow'")

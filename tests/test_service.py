@@ -1,0 +1,566 @@
+"""Fault-injection suite for the resilient service runtime (DESIGN.md §12).
+
+What must hold under faults:
+
+* malformed events land in the dead-letter queue with stable sequence
+  numbers and replay cleanly (no duplicates across a producer restart);
+* a kill -9 mid-chunk under the service loop preserves exactly-once
+  emission, and alert delivery deduplicated by chunk index is identical
+  to an uninterrupted run;
+* a forced ``WindowOverflowError`` self-heals by ring regrow with a
+  match set bit-identical to an oracle engine built large from the
+  start — at the engine level (restore ``max_window_events=…``) and
+  through the full service loop (quarantine → regrow → replay);
+* backpressure sheds exactly the over-limit tenant;
+* the retry policy backs off with bounded jitter, enforces per-attempt
+  timeouts, and never retries deny-listed errors.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Event
+from repro.kernels.window import WindowOverflowError, ring_slot_remap
+from repro.runtime import (DeadLetterQueue, EventValidator, RetryPolicy,
+                           StreamService, TokenBucket, cumulative_matches,
+                           run_with_retries)
+from repro.runtime.recovery import DEFAULT_STEP_POLICY
+from repro.vector import (PartitionedStreamingEngine, StreamingVectorEngine,
+                          VectorEngine)
+
+QT = "SELECT * FROM S WHERE A ; B+ ; C WITHIN 50 [t]"
+QT_WIDE = "SELECT * FROM S WHERE A ; B+ ; C WITHIN 1000 [t]"
+
+
+def make_raws(seed, n, n_keys=4, dt=3.0):
+    rng = np.random.default_rng(seed)
+    return [{"type": "ABC"[int(rng.integers(0, 3))], "v": 1.0,
+             "t": float(i) * dt, "uid": int(rng.integers(0, n_keys))}
+            for i in range(n)]
+
+
+def part_engine(mwe, chunk_len=16, num_lanes=8, query=QT, arena=None):
+    ve = VectorEngine(query, use_pallas=False, max_window_events=mwe)
+    return PartitionedStreamingEngine(ve, ("uid",), chunk_len=chunk_len,
+                                      num_lanes=num_lanes,
+                                      arena_capacity=arena,
+                                      strict_overflow=True)
+
+
+def run_service(raws, directory, engine, **kw):
+    alerts = []
+    svc = StreamService(engine, directory,
+                        sinks=[lambda c, h: alerts.append((c, list(h)))],
+                        **kw)
+    receipts = [svc.submit(r, block=True, timeout=30.0) for r in raws]
+    svc.drain(pad=True)
+    metrics = svc.metrics
+    svc.close()
+    return alerts, receipts, metrics
+
+
+def alert_hits(alerts):
+    return sorted(h for _, hs in alerts for h in hs)
+
+
+# ---------------------------------------------------------------------------
+# retry policy: jitter, timeout, deny-list
+# ---------------------------------------------------------------------------
+
+def test_retry_backoff_jitter_bounds(monkeypatch):
+    sleeps = []
+    monkeypatch.setattr(time, "sleep", sleeps.append)
+    calls = [0]
+
+    def flaky():
+        calls[0] += 1
+        if calls[0] <= 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    pol = RetryPolicy(max_retries=3, backoff_s=0.1, backoff_mult=2.0,
+                      jitter=0.5)
+    assert run_with_retries(flaky, pol) == "ok"
+    assert calls[0] == 4 and len(sleeps) == 3
+    for i, s in enumerate(sleeps):
+        base = 0.1 * 2.0 ** i
+        assert base <= s <= base * 1.5, (i, s)
+
+
+def test_retry_per_attempt_timeout():
+    pol = RetryPolicy(max_retries=1, backoff_s=0.01, timeout_s=0.05)
+    calls = [0]
+
+    def hang():
+        calls[0] += 1
+        time.sleep(5.0)
+
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError, match="per-attempt timeout"):
+        run_with_retries(hang, pol)
+    assert time.monotonic() - t0 < 2.0          # did not wait out the hang
+    assert calls[0] == 2                        # TimeoutError is retryable
+
+
+def test_retry_deny_list_wins_over_retryable():
+    calls = [0]
+
+    def corrupt():
+        calls[0] += 1
+        raise WindowOverflowError(np.array([1]))
+
+    pol = RetryPolicy(max_retries=5, backoff_s=0.0,
+                      retryable=(Exception,),
+                      non_retryable=(WindowOverflowError, ValueError))
+    with pytest.raises(WindowOverflowError):
+        run_with_retries(corrupt, pol)
+    assert calls[0] == 1                        # no retry burned
+
+    calls[0] = 0
+
+    def mismatched():
+        calls[0] += 1
+        raise ValueError("snapshot is incompatible")
+
+    with pytest.raises(ValueError):
+        run_with_retries(mismatched, pol)
+    assert calls[0] == 1
+
+
+def test_default_step_policy_denies_state_errors():
+    assert WindowOverflowError in DEFAULT_STEP_POLICY.non_retryable
+    assert ValueError in DEFAULT_STEP_POLICY.non_retryable
+    assert RuntimeError in DEFAULT_STEP_POLICY.retryable
+
+
+# ---------------------------------------------------------------------------
+# validation + dead-letter queue
+# ---------------------------------------------------------------------------
+
+def test_validator_reasons():
+    v = EventValidator(allowed_types={"A", "B"}, monotone_attr="t")
+    assert v.check("nope") == "not_a_dict"
+    assert v.check({"t": 1.0}) == "bad_type"
+    assert v.check({"type": 7}) == "bad_type"
+    assert v.check({"type": "Z", "t": 1.0}) == "unknown_type"
+    assert v.check({"type": "A", "t": 1.0, "x": [1, 2]}) == "bad_attr_value"
+    assert v.check({"type": "A"}) == "missing_clock"
+    assert v.check({"type": "A", "t": "late"}) == "bad_clock"
+    assert v.check({"type": "A", "t": float("nan")}) == "bad_clock"
+    assert v.check({"type": "A", "t": 5.0}) is None
+    assert v.check({"type": "A", "t": 3.0}) == "non_monotone_clock"
+    assert v.check({"type": "A", "t": 5.0}) is None   # clock held at 5
+
+
+def test_malformed_events_dead_letter_and_replay(tmp_path):
+    raws = make_raws(0, 64)
+    junk = [{"type": "Z", "t": 1.0, "uid": 0}, "garbage", {"v": 1}]
+    d = str(tmp_path / "svc")
+    engine = part_engine(32)
+    alerts = []
+    svc = StreamService(engine, d,
+                        sinks=[lambda c, h: alerts.append((c, list(h)))],
+                        validator=EventValidator(
+                            allowed_types={"A", "B", "C"}))
+    feed = raws[:20] + junk + raws[20:]
+    receipts = [svc.submit(r, block=True, timeout=30.0) for r in feed]
+    svc.drain(pad=True)
+    bad = [r for r in receipts if r.status == "rejected"]
+    assert [r.reason for r in bad] == ["unknown_type", "not_a_dict",
+                                      "bad_type"]
+    assert svc.metrics.accepted == len(raws)
+    assert svc.metrics.rejected == 3
+    recs = svc.dlq.records
+    assert [r["reason"] for r in recs] == ["unknown_type", "not_a_dict",
+                                          "bad_type"]
+    assert [r["seq"] for r in recs] == [r.seq for r in bad]
+    svc.close()
+
+    # the clean run over only-good events emits the same matches
+    d2 = str(tmp_path / "clean")
+    alerts2, _, _ = run_service(raws, d2, part_engine(32))
+    assert alert_hits(alerts) == alert_hits(alerts2)
+    assert cumulative_matches(d) == cumulative_matches(d2)
+
+    # replayed rejects (repaired) are accepted; DLQ dedups by seq
+    dlq = DeadLetterQueue(os.path.join(d, "dead_letter.jsonl"))
+    assert dlq.high_water() == recs[-1]["seq"]
+    assert not dlq.append(recs[0]["seq"], "unknown_type", recs[0]["event"])
+    seen = []
+    out = dlq.replay(lambda ev: seen.append(ev) or "resubmitted",
+                     transform=lambda rec: rec["event"])
+    assert out == ["resubmitted"] * 3 and len(seen) == 3
+    dlq.close()
+
+
+def test_dlq_torn_tail_repair(tmp_path):
+    path = str(tmp_path / "dlq.jsonl")
+    dlq = DeadLetterQueue(path)
+    dlq.append(0, "bad_type", {"x": 1})
+    dlq.append(4, "unknown_type", {"type": "Z"})
+    dlq.close()
+    with open(path, "a") as f:
+        f.write('{"seq": 9, "torn')           # kill -9 mid-write
+    dlq2 = DeadLetterQueue(path)
+    assert [r["seq"] for r in dlq2.records] == [0, 4]
+    assert dlq2.high_water() == 4
+    assert dlq2.append(9, "bad_clock", {})    # past the repaired tail
+    dlq2.close()
+
+
+# ---------------------------------------------------------------------------
+# admission control / backpressure
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_refill():
+    tb = TokenBucket(rate=1.0, burst=2.0)
+    assert tb.allow("t", now=0.0) and tb.allow("t", now=0.0)
+    assert not tb.allow("t", now=0.0)          # burst exhausted
+    assert tb.allow("t", now=1.0)              # 1 token refilled
+    assert not tb.allow("t", now=1.0)
+    assert tb.allow("other", now=0.0)          # independent bucket
+
+
+def test_backpressure_sheds_exactly_the_over_limit_tenant(tmp_path):
+    """rate=0 + burst=K admits exactly the first K events per tenant; the
+    noisy tenant is shed beyond its budget, the quiet tenant unaffected,
+    and the surviving stream matches an oracle fed only admitted events."""
+    rng = np.random.default_rng(4)
+    raws, t = [], 0.0
+    for i in range(96):
+        tenant = "noisy" if i % 3 != 2 else "quiet"    # noisy 2×
+        raws.append({"type": "ABC"[int(rng.integers(0, 3))],
+                     "t": (t := t + 2.0), "uid": 0, "tenant": tenant})
+    d = str(tmp_path / "shed")
+    engine = part_engine(64, chunk_len=8)
+    alerts, receipts, metrics = run_service(
+        raws, d, engine,
+        admission=TokenBucket(rate=0.0, burst=24), tenant_attr="tenant")
+    admitted = [r for r, rc in zip(raws, receipts) if rc.accepted]
+    shed = [(r, rc) for r, rc in zip(raws, receipts)
+            if rc.status == "shed_rate"]
+    # per tenant: exactly the first `burst` events admitted, the rest shed
+    for tenant in ("noisy", "quiet"):
+        stats = [rc.status for r, rc in zip(raws, receipts)
+                 if r["tenant"] == tenant]
+        assert stats[:24] == ["accepted"] * 24
+        assert all(s == "shed_rate" for s in stats[24:])
+    assert len(admitted) == 48
+    assert metrics.shed_rate == len(shed) == 96 - 48
+    # every shed event is dead-lettered with its reason
+    svc_dlq = DeadLetterQueue(os.path.join(d, "dead_letter.jsonl"))
+    assert sorted(r["seq"] for r in svc_dlq.records) == \
+        sorted(rc.seq for _, rc in shed)
+    svc_dlq.close()
+    # oracle over only the admitted events
+    d2 = str(tmp_path / "oracle")
+    alerts2, _, _ = run_service(admitted, d2, part_engine(64, chunk_len=8))
+    assert alert_hits(alerts) == alert_hits(alerts2)
+
+
+def test_backpressure_shed_and_block_timeout(tmp_path):
+    """With the device thread wedged, a full ingress buffer sheds
+    non-blocking submits and times out blocking ones."""
+    gate = threading.Event()
+    matching = [{"type": t, "t": float(i) * 1.0, "uid": 0}
+                for i, t in enumerate("ABC" * 8)]
+    d = str(tmp_path / "bp")
+    engine = part_engine(64, chunk_len=4, num_lanes=2)
+    svc = StreamService(engine, d, sinks=[lambda c, h: gate.wait(30.0)],
+                        queue_chunks=1)
+    try:
+        got = [svc.submit(r, block=True, timeout=30.0)
+               for r in matching[:4]]           # chunk 0: matches, wedges
+        assert all(r.accepted for r in got)
+        deadline = time.monotonic() + 30.0
+        r = svc.submit(matching[4])
+        while r.accepted and time.monotonic() < deadline:
+            r = svc.submit(matching[4])         # fill the buffer
+        assert r.status == "shed_backpressure"
+        assert svc.metrics.shed_backpressure >= 1
+        r = svc.submit(matching[4], block=True, timeout=0.05)
+        assert r.status == "timeout"
+        assert svc.metrics.block_timeouts == 1
+    finally:
+        gate.set()
+        svc.drain(pad=True)
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# ring regrow: engine-level parity vs an oracle built large from the start
+# ---------------------------------------------------------------------------
+
+def test_ring_slot_remap_math():
+    new_slot, valid = ring_slot_remap(4, 8, np.array([5]))
+    # starts 1..4 live in slots 1,2,3,0 (mod 4) → slots 1,2,3,4 (mod 8)
+    assert new_slot.tolist() == [[4, 1, 2, 3]]
+    assert valid.all()
+    _, valid = ring_slot_remap(4, 8, np.array([2]))
+    assert valid.sum() == 2                     # starts -2,-1 never existed
+
+
+def test_streaming_regrow_matches_oracle(tmp_path):
+    rng = np.random.default_rng(0)
+    chunks = [[[Event("ABC"[rng.integers(0, 3)],
+                      {"v": 1.0, "t": float(i * 8 + t) * 20.0})
+                for t in range(8)] for _ in range(2)] for i in range(8)]
+
+    def mk(mwe):
+        ve = VectorEngine(QT, use_pallas=False, max_window_events=mwe)
+        return StreamingVectorEngine(ve, chunk_len=8, batch=2,
+                                     arena_capacity=1 << 11,
+                                     strict_overflow=True)
+
+    oracle = mk(64)
+    want = [oracle.feed(c) for c in chunks]
+    sub = mk(8)
+    got = [sub.feed(c) for c in chunks[:4]]
+    sub.regrow(64)
+    assert sub.window.ring == oracle.window.ring
+    got += [sub.feed(c) for c in chunks[4:]]
+    for (cw, hw), (cg, hg) in zip(want, got):
+        np.testing.assert_array_equal(cw, cg)   # bit-identical counts
+        assert hw == hg
+    for p, s in want[-1][1]:                    # enumeration parity too
+        assert sorted(map(str, sub.enumerate(p, s))) == \
+            sorted(map(str, oracle.enumerate(p, s)))
+
+
+def test_partitioned_regrow_and_quarantine_roundtrip(tmp_path):
+    rng = np.random.default_rng(1)
+    chunks = [[Event("ABC"[rng.integers(0, 3)],
+                     {"v": 1.0, "t": float(i * 16 + t) * 5.0,
+                      "uid": int(rng.integers(0, 3))})
+               for t in range(16)] for i in range(8)]
+    oracle = part_engine(64, arena=1 << 11, num_lanes=4)
+    want = [oracle.feed(c) for c in chunks]
+
+    sub = part_engine(8, arena=1 << 11, num_lanes=4)
+    got = [sub.feed(c) for c in chunks[:4]]
+    sub.quarantine([1, 2])
+    snap = sub.snapshot()
+    assert snap["meta"]["quarantined_lanes"] == [1, 2]
+    assert snap["meta"]["stats"]["quarantined_lanes"] == 2
+    # restore-with-regrow resumes the quarantine marks, then heals
+    sub.restore(snap, max_window_events=64)
+    assert sub.quarantined_lanes == (1, 2)
+    assert sub.stats.quarantined_lanes == 2
+    sub.clear_quarantine()
+    assert sub.stats.quarantined_lanes == 0
+    got += [sub.feed(c) for c in chunks[4:]]
+    for (cw, hw), (cg, hg) in zip(want, got):
+        np.testing.assert_array_equal(cw, cg)
+        assert hw == hg
+    for p in want[-1][1]:
+        assert sorted(map(str, sub.enumerate(p))) == \
+            sorted(map(str, oracle.enumerate(p)))
+
+
+def test_regrow_refuses_shrink_and_count_windows():
+    se = StreamingVectorEngine(
+        VectorEngine(QT, use_pallas=False, max_window_events=32),
+        chunk_len=4, batch=1, strict_overflow=True)
+    with pytest.raises(ValueError, match="cannot shrink"):
+        se.restore(se.snapshot(), max_window_events=8)
+    ce = StreamingVectorEngine(
+        VectorEngine("SELECT * FROM S WHERE A ; B WITHIN 8 events",
+                     use_pallas=False), chunk_len=4, batch=1)
+    with pytest.raises(ValueError, match="only time windows"):
+        ce.regrow(64)
+
+
+# ---------------------------------------------------------------------------
+# service overflow self-healing
+# ---------------------------------------------------------------------------
+
+def test_service_overflow_self_heals_to_oracle_parity(tmp_path):
+    """Forced WindowOverflowError (everything inside one huge window at a
+    tiny rate bound): the service quarantines, regrows through the
+    checkpointed restore path, replays, and the final match set is
+    bit-identical to an engine sized large from the start."""
+    raws = make_raws(3, 192, n_keys=2, dt=1.0)   # window 1000 covers all
+    d1, d2 = str(tmp_path / "small"), str(tmp_path / "big")
+    a_small, _, m_small = run_service(
+        raws, d1, part_engine(8, num_lanes=4, query=QT_WIDE),
+        checkpoint_every=4, max_window_events_cap=512)
+    a_big, _, m_big = run_service(
+        raws, d2, part_engine(256, num_lanes=4, query=QT_WIDE),
+        checkpoint_every=4)
+    assert m_small.overflows >= 1 and m_small.regrows >= 1
+    assert m_big.overflows == 0
+    assert alert_hits(a_small) == alert_hits(a_big)
+    assert cumulative_matches(d1) == cumulative_matches(d2)
+
+
+def test_service_resumes_interrupted_heal_from_sidecar(tmp_path):
+    """A crash between the sidecar write and the completed regrow must
+    resume the heal on restart instead of re-raising the overflow."""
+    raws = make_raws(6, 64, n_keys=2, dt=20.0)   # benign at mwe=8
+    d = str(tmp_path / "midheal")
+    engine = part_engine(8, num_lanes=4)
+    _, _, m = run_service(raws, d, engine, checkpoint_every=4)
+    assert m.overflows == 0 and engine.window.ring == 8
+    # simulate dying inside _heal_overflow: intent recorded, regrow not done
+    with open(os.path.join(d, "service_state.json"), "w") as f:
+        json.dump({"max_window_events": 16, "quarantined": [1]}, f)
+    engine2 = part_engine(8, num_lanes=4)
+    svc = StreamService(engine2, d, checkpoint_every=4)
+    assert engine2.window.ring == 16            # regrow resumed at init
+    assert engine2.quarantined_lanes == ()      # and the heal completed
+    with open(os.path.join(d, "service_state.json")) as f:
+        side = json.load(f)
+    assert side == {"max_window_events": 16, "quarantined": []}
+    # restart contract: resubmit from the beginning, then new work — the
+    # already-checkpointed prefix is skipped, the rest processes fresh
+    more = [{"type": r["type"], "t": r["t"] + 10000.0, "uid": r["uid"]}
+            for r in make_raws(7, 32, n_keys=2, dt=20.0)]
+    for r in raws + more:
+        assert svc.submit(r, block=True, timeout=30.0).accepted
+    svc.drain(pad=True)
+    assert svc.metrics.skipped_chunks > 0
+    assert svc.metrics.chunks > 0
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# kill -9 under the service loop: exactly-once emission + alert dedup
+# ---------------------------------------------------------------------------
+
+_KILL9_DRIVER = textwrap.dedent("""
+    import json, os, signal, sys
+    import numpy as np
+    from repro.vector import PartitionedStreamingEngine, VectorEngine
+    from repro.runtime import StreamService
+
+    d, crash_after = sys.argv[1], int(sys.argv[2])
+    ve = VectorEngine("SELECT * FROM S WHERE A ; B+ ; C WITHIN 60 [t]",
+                      use_pallas=False, max_window_events=32)
+    pe = PartitionedStreamingEngine(ve, ("uid",), chunk_len=8, num_lanes=4,
+                                    strict_overflow=True)
+    alert_path = os.path.join(d, "alerts.jsonl")
+    n = [0]
+    def sink(chunk, hits):
+        with open(alert_path, "a") as f:
+            f.write(json.dumps({"chunk": chunk, "hits": hits}) + "\\n")
+            f.flush()
+            os.fsync(f.fileno())
+        n[0] += 1
+        if crash_after >= 0 and n[0] >= crash_after:
+            os.kill(os.getpid(), signal.SIGKILL)   # kill -9 mid-chunk
+    svc = StreamService(pe, d, sinks=[sink], checkpoint_every=2)
+    rng = np.random.default_rng(5)
+    raws = [{"type": "ABC"[int(rng.integers(0, 3))], "t": float(i) * 2.0,
+             "uid": int(rng.integers(0, 2))} for i in range(144)]
+    for r in raws:
+        svc.submit(r, block=True, timeout=60.0)
+    svc.drain(pad=True, timeout=120.0)
+    svc.close()
+    print("DONE")
+""")
+
+
+@pytest.mark.slow
+def test_service_kill9_exactly_once_alerts(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in [env.get("PYTHONPATH"),
+                     os.path.join(os.path.dirname(__file__), "..", "src")]
+         if p])
+    script = str(tmp_path / "driver.py")
+    with open(script, "w") as f:
+        f.write(_KILL9_DRIVER)
+
+    d_ref = str(tmp_path / "uninterrupted")
+    os.makedirs(d_ref)
+    ref = subprocess.run([sys.executable, script, d_ref, "-1"], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert ref.returncode == 0, ref.stderr
+    oracle = cumulative_matches(d_ref)
+    assert oracle["hits"]
+
+    d = str(tmp_path / "crashed")
+    os.makedirs(d)
+    first = subprocess.run([sys.executable, script, d, "3"], env=env,
+                           capture_output=True, text=True, timeout=600)
+    assert first.returncode == -signal.SIGKILL, first.stderr
+    second = subprocess.run([sys.executable, script, d, "-1"], env=env,
+                            capture_output=True, text=True, timeout=600)
+    assert second.returncode == 0, second.stderr
+
+    # exactly-once emission: the durable match record is restart-invariant
+    assert cumulative_matches(d) == oracle
+
+    # alert delivery is at-least-once; dedup by chunk is exactly the
+    # uninterrupted delivery (redelivered records are bit-identical)
+    def delivered(path):
+        out = {}
+        with open(path) as f:
+            for line in f:
+                rec = json.loads(line)
+                if rec["chunk"] in out:        # duplicate must be identical
+                    assert out[rec["chunk"]] == rec["hits"]
+                out[rec["chunk"]] = rec["hits"]
+        return out
+
+    ref_alerts = delivered(os.path.join(d_ref, "alerts.jsonl"))
+    crash_alerts = delivered(os.path.join(d, "alerts.jsonl"))
+    assert crash_alerts == ref_alerts
+
+
+# ---------------------------------------------------------------------------
+# single-stream adapter + end-to-end sanity vs the host engine
+# ---------------------------------------------------------------------------
+
+def test_service_single_stream_adapter(tmp_path):
+    raws = make_raws(9, 96, dt=4.0)
+    for r in raws:
+        del r["uid"]
+    ve = VectorEngine(QT, use_pallas=False, max_window_events=64)
+    se = StreamingVectorEngine(ve, chunk_len=8, batch=1,
+                               strict_overflow=True)
+    d = str(tmp_path / "single")
+    alerts, receipts, metrics = run_service(
+        raws, d, se, pad_event=Event("X", {"t": raws[-1]["t"] + 1.0}))
+    assert all(r.accepted for r in receipts)
+    assert metrics.chunks == 12 and se.compile_count == 1
+
+    # direct engine feed over the same stream gives the same hits
+    se2 = StreamingVectorEngine(
+        VectorEngine(QT, use_pallas=False, max_window_events=64),
+        chunk_len=8, batch=1, strict_overflow=True)
+    evs = [Event(r["type"], {k: v for k, v in r.items() if k != "type"})
+           for r in raws]
+    want = []
+    for lo in range(0, len(evs), 8):
+        _, hits = se2.feed([evs[lo:lo + 8]])
+        want.extend(hits)
+    assert alert_hits(alerts) == sorted(want)
+
+
+def test_single_stream_drain_pad_requires_pad_event(tmp_path):
+    ve = VectorEngine(QT, use_pallas=False, max_window_events=16)
+    se = StreamingVectorEngine(ve, chunk_len=8, batch=1,
+                               strict_overflow=True)
+    svc = StreamService(se, str(tmp_path / "nopad"))
+    assert svc.submit({"type": "A", "t": 0.0}).accepted
+    with pytest.raises(ValueError, match="pad_event"):
+        try:
+            svc.drain(pad=True)
+        finally:
+            svc.close(checkpoint=False)
+
+
+def test_service_batch_gt1_rejected(tmp_path):
+    ve = VectorEngine(QT, use_pallas=False, max_window_events=16)
+    se = StreamingVectorEngine(ve, chunk_len=8, batch=2)
+    with pytest.raises(ValueError, match="ONE raw stream"):
+        StreamService(se, str(tmp_path / "b2"))
