@@ -10,7 +10,10 @@ host-side and hardware-agnostic, so it is exercised by CPU tests:
   checkpoint — crash-only design).  Errors on the ``non_retryable``
   deny-list propagate immediately: they signal *state* problems
   (window-overflow latches, compat-manifest mismatches) that a retry
-  would only repeat against corrupt or incompatible state.
+  would only repeat against corrupt or incompatible state.  A
+  per-attempt timeout is crash-only too, unless ``retry_timeouts`` opts
+  in: the expired attempt cannot be killed, only abandoned, so it may
+  still be mutating shared state while a retry re-enters the step.
 * ``HeartbeatMonitor`` — background thread that flags a hang when the main
   loop stops beating (watchdog for collective deadlocks: on TPU pods the
   usual failure mode is a silent NCCL/ICI stall, not an exception).
@@ -39,7 +42,14 @@ class RetryPolicy:
     ``jitter`` decorrelates the backoff: each sleep is scaled by a uniform
     factor in ``[1, 1 + jitter]`` so restarted replicas don't retry in
     lockstep.  ``timeout_s`` bounds each attempt; an attempt that exceeds
-    it raises ``TimeoutError`` (a retryable ``OSError`` subclass).
+    it raises :class:`AttemptTimeout` (a ``TimeoutError``).  Timeouts are
+    **not retried** by default even though ``TimeoutError`` is an
+    ``OSError``: the expired attempt is abandoned, not killed, so for a
+    step that mutates donated state (every engine feed) an in-process
+    retry races the still-running attempt — the chunk could be applied
+    twice or concurrently.  Crash-only recovery (restart + checkpoint
+    restore) is the safe path; ``retry_timeouts=True`` opts pure,
+    side-effect-free steps back into backoff-retry on expiry.
     """
 
     max_retries: int = 3
@@ -47,8 +57,14 @@ class RetryPolicy:
     backoff_mult: float = 2.0
     jitter: float = 0.1
     timeout_s: Optional[float] = None
+    retry_timeouts: bool = False
     retryable: tuple = (RuntimeError, OSError)
     non_retryable: tuple = ()
+
+
+class AttemptTimeout(TimeoutError):
+    """A per-attempt deadline expired; the attempt is abandoned but may
+    still be running (Python threads cannot be cancelled)."""
 
 
 def _call_with_timeout(fn: Callable, timeout_s: float, args, kwargs):
@@ -58,11 +74,13 @@ def _call_with_timeout(fn: Callable, timeout_s: float, args, kwargs):
     ``Future.result(timeout)``; on expiry the worker CANNOT be killed
     (Python has no thread cancellation), so it is abandoned — the
     executor is shut down without waiting and the orphaned attempt runs
-    to completion in the background.  Callers retrying a *donating*
-    device step must therefore treat a timeout like a crash: restore
-    state before re-feeding (the RecoveringStreamRunner's restore-replay
-    path does exactly this).  Deliberately not a ``with`` block: the
-    context manager would join the hung worker and never return.
+    to completion in the background.  That is why ``run_with_retries``
+    treats the resulting :class:`AttemptTimeout` as crash-only by
+    default: a donating device step may still be mutating the engine
+    state, so the only safe recovery is a process restart through the
+    checkpoint/restore path, not an in-process re-feed.  Deliberately not
+    a ``with`` block: the context manager would join the hung worker and
+    never return.
     """
     ex = concurrent.futures.ThreadPoolExecutor(max_workers=1)
     try:
@@ -70,7 +88,7 @@ def _call_with_timeout(fn: Callable, timeout_s: float, args, kwargs):
         try:
             return fut.result(timeout=timeout_s)
         except concurrent.futures.TimeoutError:
-            raise TimeoutError(
+            raise AttemptTimeout(
                 f"step exceeded per-attempt timeout of {timeout_s:.3f}s")
     finally:
         ex.shutdown(wait=False)
@@ -87,6 +105,8 @@ def run_with_retries(fn: Callable, policy: RetryPolicy, *args, **kwargs):
         except policy.non_retryable:   # state problem: retrying repeats it
             raise
         except policy.retryable as e:  # transient: backoff and retry
+            if isinstance(e, AttemptTimeout) and not policy.retry_timeouts:
+                raise              # abandoned attempt may still be running
             last = e
             if attempt == policy.max_retries:
                 raise

@@ -46,12 +46,14 @@ from ..checkpoint.manager import CheckpointManager
 from ..kernels.window import WindowOverflowError
 from .fault_tolerance import HeartbeatMonitor, RetryPolicy, run_with_retries
 
-#: default step policy: transient RuntimeError/OSError (including the
-#: per-attempt TimeoutError) back off and retry; the deny-list names the
-#: state-problem signals a retry can only repeat — the overflow latch
-#: survives the retry (and the chunk was already applied, so re-feeding
-#: corrupts state), and a compat-manifest ValueError means the engine and
-#: snapshot disagree structurally.
+#: default step policy: transient RuntimeError/OSError back off and
+#: retry; the deny-list names the state-problem signals a retry can only
+#: repeat — the overflow latch survives the retry (and the chunk was
+#: already applied, so re-feeding corrupts state), and a compat-manifest
+#: ValueError means the engine and snapshot disagree structurally.  A
+#: per-attempt timeout (``timeout_s``) is crash-only: the abandoned
+#: attempt may still be mutating the donated state, so an in-process
+#: re-feed could apply the chunk twice — recovery is restart + restore.
 DEFAULT_STEP_POLICY = RetryPolicy(
     non_retryable=(WindowOverflowError, ValueError))
 
@@ -201,6 +203,9 @@ class RecoveringStreamRunner:
         #: index of the next chunk to feed (== chunks fed so far)
         self.chunk_index = 0
         self._replay_through = self.log.high_water()
+        # one-step read cache so latest_manifest() + resume() on a restart
+        # load the checkpoint arrays from disk once, not twice
+        self._loaded: Optional[Tuple[int, Any, dict]] = None
 
     # ------------------------------------------------------------------
     @property
@@ -218,23 +223,35 @@ class RecoveringStreamRunner:
         ``max_window_events=…``) compose with crash recovery, e.g. the
         service's overflow heal resumes the last good checkpoint directly
         onto a regrown ring."""
-        if self.manager.latest_step() is None:
+        loaded = self._load_latest()
+        if loaded is None:
             return False
-        arrays, meta = self.manager.load_arrays()
+        _, arrays, meta = loaded
+        self._loaded = None    # hand the arrays to restore, don't hold them
         self.engine.restore({"arrays": arrays, "meta": meta},
                             **restore_kwargs)
         self.chunk_index = int(meta["chunk"])
         self._replay_through = self.log.high_water()
         return True
 
+    def _load_latest(self) -> Optional[Tuple[int, Any, dict]]:
+        step = self.manager.latest_step()
+        if step is None:
+            self._loaded = None
+            return None
+        if self._loaded is None or self._loaded[0] != step:
+            arrays, meta = self.manager.load_arrays(step)
+            self._loaded = (step, arrays, meta)
+        return self._loaded
+
     def latest_manifest(self) -> Optional[dict]:
         """The newest checkpoint's manifest (``extra``), or None on a
         fresh directory — read without touching engine state, so a
-        restarting service can size a ring regrow before restoring."""
-        if self.manager.latest_step() is None:
-            return None
-        _, meta = self.manager.load_arrays()
-        return meta
+        restarting service can size a ring regrow before restoring.  The
+        loaded arrays are cached so a :meth:`resume` that follows reuses
+        them instead of re-reading the checkpoint from disk."""
+        loaded = self._load_latest()
+        return None if loaded is None else loaded[2]
 
     def rewind(self, chunk_index: int = 0) -> None:
         """Reset the stream cursor without touching checkpoints or the

@@ -50,7 +50,12 @@ re-submits the stream **from the beginning** in the original order
 contains are skipped (their encode still runs so the stream clock
 advances identically), chunks already on the emission log replay with
 emission suppressed, and everything newer is fresh work — together:
-exactly-once emission, at-least-once delivery.
+exactly-once emission, at-least-once delivery.  Admission replays
+deterministically: sheds recorded in the DLQ shed again by sequence
+number, and live rate/backpressure shedding is bypassed while re-forming
+chunks the emission log already covers — otherwise a refilled token
+bucket or different queue timing would admit an event the original run
+dropped, and the replayed chunk would diverge from its durable record.
 """
 from __future__ import annotations
 
@@ -573,7 +578,9 @@ class StreamService:
                     _pad8(target) > self.engine.window.ring:
                 kw["max_window_events"] = target
             self.runner.resume(**kw)
-            if self.engine.quarantined_lanes:
+            # QueryFleet has no quarantine surface (supports_regrow=False)
+            if self.adapter.supports_regrow and \
+                    getattr(self.engine, "quarantined_lanes", ()):
                 self.engine.clear_quarantine()   # ring is regrown: healed
         elif self.adapter.supports_regrow and \
                 _pad8(max(target, 1)) > self.engine.window.ring:
@@ -589,6 +596,16 @@ class StreamService:
         # the checkpoint and the emission log's high-water mark replay
         # with emission suppressed, and everything after is new work.
         self._chunk_seq = 0
+        # Replayed chunks must recompose exactly or _check_replay refuses
+        # them, so admission decisions cannot be re-made live (a refilled
+        # token bucket or different queue timing would admit an event the
+        # original run shed, shifting every later chunk).  Sheds recorded
+        # in the DLQ replay verbatim by seq; while forming chunks at or
+        # below the emission high-water mark, live shedding is bypassed.
+        self._replay_chunk_high = self.runner.log.high_water()
+        self._replayed_sheds = {
+            int(r["seq"]): r["reason"] for r in self.dlq.records
+            if r["reason"] in ("shed_rate", "shed_backpressure")}
         if target or mid_heal:
             self._write_sidecar(self._mwe, ())
         self._redeliver_alerts()
@@ -655,31 +672,58 @@ class StreamService:
             self.dlq.append(seq, reason, raw)
             self.metrics.rejected += 1
             return Receipt("rejected", seq, reason)
-        if self.admission is not None and not self.admission.allow(
-                raw.get(self.tenant_attr) if self.tenant_attr else None):
-            self.dlq.append(seq, "shed_rate", raw)
-            self.metrics.shed_rate += 1
-            return Receipt("shed_rate", seq)
+        shed = self._replayed_sheds.get(seq)
+        if shed is not None:
+            # producer replay: this seq was dead-lettered as a shed in the
+            # original run, so the decision replays verbatim — admitting
+            # it now would shift the composition of every later chunk
+            # (the DLQ record already exists; append dedups by seq)
+            if shed == "shed_rate":
+                self.metrics.shed_rate += 1
+            else:
+                self.metrics.shed_backpressure += 1
+            return Receipt(shed, seq)
+        replaying = self._chunk_seq <= self._replay_chunk_high
+        if self.admission is not None:
+            ok = self.admission.allow(
+                raw.get(self.tenant_attr) if self.tenant_attr else None)
+            # while replaying, allow() still charges the bucket (so its
+            # state warms as in the original run) but cannot shed: the
+            # event was accepted originally and the replayed chunk must
+            # contain it
+            if not ok and not replaying:
+                self.dlq.append(seq, "shed_rate", raw)
+                self.metrics.shed_rate += 1
+                return Receipt("shed_rate", seq)
         with self._space:
             if self._buffered + 1 > self._capacity:
-                if not block:
+                if replaying:
+                    # replay accepts exactly the originally-accepted
+                    # events — a full buffer blocks (the device thread is
+                    # skipping/replaying ahead of us), it never sheds
+                    while self._buffered + 1 > self._capacity and \
+                            self._error is None:
+                        self._space.wait(0.5)
+                elif not block:
                     self.dlq.append(seq, "shed_backpressure", raw)
                     self.metrics.shed_backpressure += 1
                     return Receipt("shed_backpressure", seq)
-                deadline = (None if timeout is None
-                            else time.monotonic() + timeout)
-                while self._buffered + 1 > self._capacity:
-                    left = (None if deadline is None
-                            else deadline - time.monotonic())
-                    if left is not None and left <= 0:
-                        self.metrics.block_timeouts += 1
-                        return Receipt("timeout", seq)
-                    self._space.wait(left)
-                    if self._error is not None:
-                        break
-            self._buffered += 1
-            self.metrics.queue_peak = max(self.metrics.queue_peak,
-                                          self._buffered)
+                else:
+                    deadline = (None if timeout is None
+                                else time.monotonic() + timeout)
+                    while self._buffered + 1 > self._capacity:
+                        left = (None if deadline is None
+                                else deadline - time.monotonic())
+                        if left is not None and left <= 0:
+                            self.metrics.block_timeouts += 1
+                            return Receipt("timeout", seq)
+                        self._space.wait(left)
+                        if self._error is not None:
+                            break
+            if self._error is None:     # a worker died while we waited:
+                self._buffered += 1     # don't count the event in, the
+                self.metrics.queue_peak = max(    # producer still owns it
+                    self.metrics.queue_peak, self._buffered)
         self._check_error()
         self.metrics.accepted += 1
         self._pending.append(_event_from_dict(raw))
@@ -708,16 +752,20 @@ class StreamService:
                 self.adapter.pad_event()
                 for _ in range(self.chunk_len - n_real))
             self._flush_pending(n_real=n_real)
+        # an unflushed tail never reaches the device, so only wait for
+        # the flushed chunks (buffered events beyond the pending tail)
+        tail = len(self._pending)
         deadline = time.monotonic() + timeout
         with self._space:
-            while self._buffered > 0:
+            while self._buffered > tail:
                 if self._error is not None:
                     break
                 left = deadline - time.monotonic()
                 if left <= 0:
                     raise StreamServiceError(
                         f"drain timed out after {timeout}s with "
-                        f"{self._buffered} events still buffered")
+                        f"{self._buffered - tail} flushed events still "
+                        "in flight")
                 self._space.wait(min(left, 0.5))
         self._check_error()
 

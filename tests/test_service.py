@@ -107,7 +107,16 @@ def test_retry_per_attempt_timeout():
     with pytest.raises(TimeoutError, match="per-attempt timeout"):
         run_with_retries(hang, pol)
     assert time.monotonic() - t0 < 2.0          # did not wait out the hang
-    assert calls[0] == 2                        # TimeoutError is retryable
+    # crash-only by default: the abandoned attempt may still be mutating
+    # donated state, so an in-process re-feed would race it
+    assert calls[0] == 1
+
+    calls[0] = 0
+    pol2 = RetryPolicy(max_retries=1, backoff_s=0.01, timeout_s=0.05,
+                       retry_timeouts=True)    # opt-in for pure steps
+    with pytest.raises(TimeoutError, match="per-attempt timeout"):
+        run_with_retries(hang, pol2)
+    assert calls[0] == 2
 
 
 def test_retry_deny_list_wins_over_retryable():
@@ -139,6 +148,7 @@ def test_default_step_policy_denies_state_errors():
     assert WindowOverflowError in DEFAULT_STEP_POLICY.non_retryable
     assert ValueError in DEFAULT_STEP_POLICY.non_retryable
     assert RuntimeError in DEFAULT_STEP_POLICY.retryable
+    assert not DEFAULT_STEP_POLICY.retry_timeouts   # feeds donate state
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +303,61 @@ def test_backpressure_shed_and_block_timeout(tmp_path):
         gate.set()
         svc.drain(pad=True)
         svc.close()
+
+
+def test_drain_without_pad_leaves_tail_pending(tmp_path):
+    """drain(pad=False) with a partial tail chunk returns once the flushed
+    chunks complete — the tail stays pending for the next submits instead
+    of the drain blocking for its full timeout."""
+    raws = make_raws(12, 32)
+    d = str(tmp_path / "tail")
+    svc = StreamService(part_engine(64), d)      # chunk_len 16
+    try:
+        for r in raws[:20]:                      # 1 full chunk + 4 pending
+            assert svc.submit(r, block=True, timeout=30.0).accepted
+        t0 = time.monotonic()
+        svc.drain(timeout=30.0)
+        assert time.monotonic() - t0 < 10.0      # no full-timeout stall
+        assert svc.metrics.chunks == 1
+        assert len(svc._pending) == 4            # tail still pending
+        for r in raws[20:]:                      # tail completes chunk 1
+            assert svc.submit(r, block=True, timeout=30.0).accepted
+        svc.drain(timeout=30.0)
+        assert svc.metrics.chunks == 2
+    finally:
+        svc.close()
+
+
+def test_restart_replays_admission_decisions(tmp_path):
+    """At-least-once producer replay must reproduce the original admission
+    decisions even when the token-bucket state differs on restart (e.g.
+    wall-clock refill): DLQ-recorded sheds shed again by seq, and a
+    tighter fresh bucket cannot shed an originally-accepted event — either
+    divergence would shift chunk composition and make _check_replay fail
+    every future restart."""
+    rng = np.random.default_rng(8)
+    raws, t = [], 0.0
+    for _ in range(64):
+        raws.append({"type": "ABC"[int(rng.integers(0, 3))],
+                     "t": (t := t + 2.0), "uid": 0})
+    d = str(tmp_path / "replay-shed")
+    _, receipts1, m1 = run_service(
+        raws, d, part_engine(64, chunk_len=8),
+        admission=TokenBucket(rate=0.0, burst=40))
+    assert m1.shed_rate == 24                    # 40 accepted = 5 chunks
+    want = cumulative_matches(d)
+    # restart with a TIGHTER bucket: live admission would shed seqs 16..39
+    # mid-replay; without shed replay a FULLER bucket would admit 40..63
+    engine2 = part_engine(64, chunk_len=8)
+    svc = StreamService(engine2, d,
+                        admission=TokenBucket(rate=0.0, burst=16))
+    receipts2 = [svc.submit(r, block=True, timeout=30.0) for r in raws]
+    svc.drain(pad=True)
+    metrics2 = svc.metrics
+    svc.close()
+    assert [r.status for r in receipts2] == [r.status for r in receipts1]
+    assert metrics2.skipped_chunks == 5          # checkpointed prefix
+    assert cumulative_matches(d) == want         # restart-invariant
 
 
 # ---------------------------------------------------------------------------
@@ -557,6 +622,40 @@ def test_single_stream_drain_pad_requires_pad_event(tmp_path):
             svc.drain(pad=True)
         finally:
             svc.close(checkpoint=False)
+
+
+def test_service_fleet_restart_over_recovery_dir(tmp_path):
+    """A QueryFleet-backed service restarting over an existing recovery
+    directory must restore the checkpoint and skip the resubmitted prefix
+    — the fleet has no quarantine surface, so the resume path may not
+    touch quarantined_lanes/clear_quarantine."""
+    from repro.runtime import QueryFleet
+
+    def mk():
+        fleet = QueryFleet(chunk_len=8, batch=1, max_window_events=64)
+        fleet.add_query(QT, qid="q0")
+        return fleet
+
+    raws = make_raws(11, 64, dt=4.0)             # 8 exact chunks, no tail
+    d = str(tmp_path / "fleet")
+    alerts1 = []
+    svc = StreamService(mk(), d, checkpoint_every=4,
+                        sinks=[lambda c, h: alerts1.append((c, list(h)))])
+    for r in raws:
+        assert svc.submit(r, block=True, timeout=30.0).accepted
+    svc.drain()                                  # fleet: no pad support
+    assert svc.metrics.chunks == 8
+    svc.close()
+    want = cumulative_matches(d)
+
+    svc2 = StreamService(mk(), d, checkpoint_every=4)   # was: AttributeError
+    for r in raws:
+        assert svc2.submit(r, block=True, timeout=30.0).accepted
+    svc2.drain()
+    assert svc2.metrics.skipped_chunks == 8      # whole prefix checkpointed
+    assert svc2.metrics.chunks == 0
+    svc2.close()
+    assert cumulative_matches(d) == want         # restart-invariant
 
 
 def test_service_batch_gt1_rejected(tmp_path):
