@@ -41,8 +41,9 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
         num_lanes=16 if quick else 32, lane_cap=64,
         chunk=min(512 if quick else 1024, n))
     enumeration = perf_cer.enumeration_delay(
-        total_events=min(n, 1024) if quick else n,
-        chunk=min(512, n), eps_small=7, eps_large=31 if quick else 63)
+        total_events=min(n, 2048) if quick else n,
+        chunk=min(512, n), eps_small=7, eps_mid=31, eps_large=63,
+        scan_batch=batch)
     time_window = perf_cer.time_window_throughput(
         total_events=n, batch=batch, chunk=min(256, n))
     recovery = perf_cer.recovery_overhead(
@@ -50,12 +51,16 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
     # arena-scan regression gate data (scripts/check.sh): arena-on scan
     # throughput must stay within a floor RATIO of counting-only streaming
     # (the pre-block-vectorization fold sat at ~1/1000 — see DESIGN.md §8).
-    best_stream = max((r["streaming_eps"] for r in streaming), default=None)
-    if best_stream:
-        enumeration["scan_vs_streaming"] = (
-            min(enumeration["small"]["scan_eps"],
-                enumeration["large"]["scan_eps"]) / best_stream)
-        enumeration["scan_vs_streaming_floor"] = 0.02
+    # Both sides are measured at batch=1 and INTERLEAVED in one cell so the
+    # ratio isolates arena maintenance cost — not lane count (earlier
+    # records divided a 1-lane scan by the 8-lane streaming aggregate) and
+    # not container noise (see perf_cer.scan_vs_streaming_cell).
+    scan_cell = perf_cer.scan_vs_streaming_cell(
+        total_events=min(n, 2048) if quick else n, chunk=min(512, n),
+        eps_small=7, eps_mid=31, stream_chunk=min(256, n))
+    enumeration["scan_vs_streaming_cell"] = scan_cell
+    enumeration["scan_vs_streaming"] = scan_cell["ratio"]
+    enumeration["scan_vs_streaming_floor"] = 0.12
     packed = perf_cer.compare(num_events=n, batch=batch, n_queries=4)
     # dynamic-fleet churn gate data (scripts/check.sh): the compile cache
     # must hold traces to <= distinct bucket geometries across the whole
@@ -109,7 +114,9 @@ def cer_trajectory(quick: bool = True, events: int = None) -> dict:
             {f"chunk_{row['chunk']}": row["compile_count"]
              for row in streaming},
             partitioned=partitioned["compile_count"],
+            partitioned_arena=partitioned["compile_count_arena"],
             enumeration=enumeration["compile_count"],
+            scan_vs_streaming=scan_cell["compile_count"],
             time_window_count=time_window["compile_count_count"],
             time_window_time=time_window["compile_count_time"],
             recovery=recovery["compile_count"],
@@ -137,14 +144,18 @@ def main() -> None:
         part = rec["partitioned"]
         enum_ = rec["enumeration"]
         print(f"# wrote {args.cer_json}: fused {f2f['fused_eps']:.0f} ev/s "
-              f"({f2f['speedup']:.2f}× over 3-dispatch), streaming "
+              f"({f2f['speedup']:.2f}× over 3-dispatch at chunk "
+              f"{f2f['chunk']}), streaming "
               f"{stream}, partition-by {part['device_eps']:.0f} ev/s "
               f"({part['speedup']:.2f}× over host dict-of-engines, arena-on "
-              f"{part['device_arena_eps']:.0f} ev/s), arena scan "
-              f"{enum_['large']['scan_eps']:.0f} ev/s "
-              f"({enum_['large'].get('block_vs_fold', 0):.0f}× over fold), "
+              f"{part['device_arena_eps']:.0f} ev/s, "
+              f"{part['arena_vs_host']:.2f}× host in the match-dense "
+              f"regime), arena scan "
+              f"{enum_['mid']['scan_eps']:.0f} ev/s "
+              f"({enum_['mid'].get('block_vs_fold', 0):.0f}× over fold), "
               f"enumeration {enum_['large']['arena_per_match_us']:.1f} "
               f"us/match (delay ratio {enum_['delay_ratio']:.2f}, "
+              f"{enum_['enum_vectorized_vs_dfs']:.1f}× over per-root DFS, "
               f"{enum_['large']['enum_speedup']:.2f}× over replay), "
               f"compiles={rec['compile_counts']}")
         fl = rec["fleet_churn"]

@@ -59,7 +59,16 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     #  * arena-ON scan throughput must stay within the floor ratio of
     #    counting-only streaming recorded in BENCH_cer.json — the
     #    pre-block-vectorization fold sat at ~1/1000 (DESIGN.md §8), and a
-    #    regression to per-event store updates would land back there;
+    #    regression to per-event store updates would land back there.
+    #    Both sides are per-lane (batch=1) and timed interleaved in one
+    #    cell (perf_cer.scan_vs_streaming_cell) so the ratio isolates
+    #    arena-maintenance cost — earlier records divided a 1-lane scan by
+    #    the 8-lane streaming aggregate and mostly measured lane count;
+    #  * frontier-vectorized enumeration must stay >= 3x the per-root
+    #    Python DFS at the output-heavy scale, Algorithm 2's per-match
+    #    delay must stay flat across output scales (delay_ratio >= 0.8,
+    #    timed warm), and the partitioned per-lane arena must beat the
+    #    host dict-of-engines in the match-dense regime (DESIGN.md §13);
     #  * count-window streaming_eps must stay above the recorded absolute
     #    floor — the time-window masking generalization (DESIGN.md §9)
     #    must not regress the count path's closed-form eviction;
@@ -81,11 +90,39 @@ if ratio is None or floor is None:
     sys.exit("enumeration record is missing the arena-scan ratio gate "
              "fields (scan_vs_streaming / scan_vs_streaming_floor)")
 if ratio < floor:
-    sys.exit(f"arena-scan throughput regression: enumeration.scan_eps / "
-             f"streaming_eps = {ratio:.4f} < floor {floor} — the tECS "
-             f"arena update has fallen off the block-vectorized path "
-             f"(DESIGN.md §8)")
-print(f"arena scan ratio OK: {ratio:.3f} >= floor {floor}")
+    sys.exit(f"arena-scan throughput regression: per-lane arena-ON scan / "
+             f"per-lane counting-only streaming = {ratio:.4f} < floor "
+             f"{floor} — the tECS arena update has fallen off the "
+             f"block-vectorized path (DESIGN.md §8)")
+print(f"arena scan ratio OK: {ratio:.3f} >= floor {floor} (per-lane)")
+vvd = enum.get("enum_vectorized_vs_dfs")
+if vvd is None:
+    sys.exit("enumeration record is missing enum_vectorized_vs_dfs — the "
+             "frontier-vectorized Algorithm 2 gate (DESIGN.md §13)")
+if vvd < 3.0:
+    sys.exit(f"vectorized enumeration regression: frontier walk is only "
+             f"{vvd:.2f}x the per-root Python DFS at the output-heavy "
+             f"scale (floor 3.0) — enumerate_arena_batch has fallen off "
+             f"the vectorized path (DESIGN.md §13)")
+print(f"vectorized enumeration OK: {vvd:.2f}x over per-root DFS >= 3.0")
+dratio = enum.get("delay_ratio")
+if dratio is None or dratio < 0.8:
+    sys.exit(f"enumeration delay regression: delay_ratio {dratio} < 0.8 — "
+             f"per-match delay of Algorithm 2's walk is no longer flat "
+             f"across output scales (Theorem 2; the cell must be timed "
+             f"warm so the delta fetch, not a full arena fetch, is on the "
+             f"clock)")
+print(f"enumeration delay ratio OK: {dratio:.2f} >= 0.8")
+avh = rec["partitioned"].get("arena_vs_host")
+if avh is None:
+    sys.exit("partitioned record is missing arena_vs_host — the "
+             "match-dense per-lane arena gate")
+if avh < 1.0:
+    sys.exit(f"partitioned arena regression: arena-on device throughput "
+             f"is {avh:.2f}x the host dict-of-engines in the match-dense "
+             f"regime (floor 1.0) — the per-lane arena scatter has "
+             f"regressed (DESIGN.md §13)")
+print(f"partitioned arena-vs-host OK: {avh:.2f}x >= 1.0")
 sfloor = rec.get("streaming_floor_eps")
 best = max((r["streaming_eps"] for r in rec["streaming"]), default=None)
 if sfloor is None or best is None:

@@ -522,6 +522,16 @@ def _state_rank(states, S: int) -> jnp.ndarray:
     return rank
 
 
+def _state_index(states) -> jnp.ndarray:
+    """(|states|,) int32 array of the state ids, iota-built (Pallas-safe)."""
+    n = len(states)
+    iota_n = jax.lax.iota(jnp.int32, n)
+    idx = jnp.zeros((n,), jnp.int32)
+    for i, s in enumerate(states):
+        idx = jnp.where(iota_n == i, s, idx)
+    return idx
+
+
 def _clear_seed(cells, j, live, vbase, *, lay: ArenaBlockLayout,
                 expire_t=None):
     """Ring maintenance for one event: expire + seed ``new_bottom(j)``.
@@ -576,10 +586,12 @@ def _fold_cells(cells_in, cls_t, live, vbase, *, lay: ArenaBlockLayout,
     acc = None
 
     def sel(x, states):            # (B, W, S) → (B, W·|states|), w-major
-        cols = [jnp.broadcast_to(x, (B, W, S))[:, :, s] for s in states]
-        if not cols:
+        if not states:
             return jnp.zeros((B, 0), jnp.int32)
-        return jnp.stack(cols, axis=-1).reshape(B, -1)
+        idx = jnp.broadcast_to(_state_index(states)[None, None, :],
+                               (B, W, len(states)))
+        return jnp.take_along_axis(
+            jnp.broadcast_to(x, (B, W, S)), idx, axis=2).reshape(B, -1)
 
     for k in range(lay.K):
         idx = jnp.broadcast_to(
@@ -616,11 +628,14 @@ def _fold_cells(cells_in, cls_t, live, vbase, *, lay: ArenaBlockLayout,
             acc, recs = _union_gadget(acc, contrib, cval, v0)
             v_do, l0, r0, v_both, l1_, r1_, l2_, r2_ = recs
 
+            uidx = jnp.broadcast_to(_state_index(u_states)[None, None, :],
+                                    (B, W, n_u)) if n_u else None
+
             def tri(a, b, c):      # (B, W·n·3): slots 0/1/2 per cell
-                return _interleave3(
-                    *[jnp.stack([jnp.broadcast_to(x, (B, W, S))[:, :, s]
-                                 for s in u_states], axis=-1)
-                      for x in (a, b, c)], shape=(B, W, n_u))
+                ga, gb, gc = (jnp.take_along_axis(
+                    jnp.broadcast_to(x, (B, W, S)), uidx, axis=2)
+                    for x in (a, b, c))
+                return jnp.stack([ga, gb, gc], axis=-1).reshape(B, -1)
 
             if n_u:
                 pieces.append((
@@ -706,8 +721,8 @@ def _roots_step(cells_t, hit_t, j, vbase, *, lay: ArenaBlockLayout,
 
 def arena_block_step(cells, cls_t, hit_t, j, live, vbase, *,
                      lay: ArenaBlockLayout, ptab, finals_sq,
-                     sparse_roots: bool = False, expire_t=None,
-                     consume_t=None):
+                     sparse_roots: bool = False, sparse_steps: bool = False,
+                     expire_t=None, consume_t=None):
     """One event of the block builder: recurrence + record emission.
 
     cells: four (B, W, S) int32 arrays (id / is-union / left / right).
@@ -726,53 +741,76 @@ def arena_block_step(cells, cls_t, hit_t, j, live, vbase, *,
 
     ``sparse_roots`` wraps the root construction in a ``lax.cond``: steps
     without any hit skip the fold/chain work entirely at runtime (hits are
-    sparse in most streams).  Pallas kernels keep it off — ``cond`` does
-    not lower there — and pay the roots unconditionally.
+    sparse in most streams).  ``sparse_steps`` does the same for the whole
+    step — all-dead steps (the rank tail of under-filled lanes after the
+    partitioned scatter) skip fold, emission and roots at runtime and
+    return the cell table unchanged with all-invalid records.  Both
+    branches emit identical rows because the records are canonical:
+    ``left``/``right`` are NULL wherever ``valid`` is 0.  Pallas kernels
+    keep both flags off — ``cond`` does not lower there — and pay every
+    step unconditionally.
     """
-    cells_in = _clear_seed(cells, j, live, vbase, lay=lay,
-                           expire_t=expire_t)
-    acc, pieces = _fold_cells(cells_in, cls_t, live, vbase, lay=lay,
-                              ptab=ptab)
-    lv = live[:, None, None]
-    out = tuple(jnp.where(lv, a, c) for a, c in zip(acc, cells_in))
+    B = cls_t.shape[0]
+    Q = lay.Q
 
-    def roots(_):
-        return _roots_step(out, hit_t, j, vbase, lay=lay,
-                           finals_sq=finals_sq)
+    def live_step(cells):
+        cells_in = _clear_seed(cells, j, live, vbase, lay=lay,
+                               expire_t=expire_t)
+        acc, pieces = _fold_cells(cells_in, cls_t, live, vbase, lay=lay,
+                                  ptab=ptab)
+        lv = live[:, None, None]
+        out = tuple(jnp.where(lv, a, c) for a, c in zip(acc, cells_in))
 
-    if sparse_roots:
-        B = cls_t.shape[0]
-        Q = lay.Q
-        n_fs = max(len(lay.fin_states) - 1, 0)
+        def roots(_):
+            return _roots_step(out, hit_t, j, vbase, lay=lay,
+                               finals_sq=finals_sq)
 
-        def no_roots(_):
-            zfs = jnp.zeros((B, 3 * lay.W * Q), jnp.int32)
-            zch = jnp.zeros((B, lay.E * Q), jnp.int32)
-            return ([(zfs, zfs, zfs)] * n_fs + [(zch, zch, zch)],
-                    jnp.full((B, Q), ARENA_NULL, jnp.int32))
+        if sparse_roots:
+            n_fs = max(len(lay.fin_states) - 1, 0)
 
-        root_pieces, root = jax.lax.cond(jnp.any(hit_t > 0), roots,
-                                         no_roots, None)
-    else:
-        root_pieces, root = roots(None)
+            def no_roots(_):
+                zfs = jnp.zeros((B, 3 * lay.W * Q), jnp.int32)
+                zch = jnp.zeros((B, lay.E * Q), jnp.int32)
+                return ([(zfs, zfs, zfs)] * n_fs + [(zch, zch, zch)],
+                        jnp.full((B, Q), ARENA_NULL, jnp.int32))
 
-    if consume_t is not None:
-        clr = (consume_t > 0) & live[:, None]                  # (B, S)
-        out = (jnp.where(clr[:, None, :], ARENA_NULL, out[0]),) + out[1:]
+            root_pieces, root = jax.lax.cond(jnp.any(hit_t > 0), roots,
+                                             no_roots, None)
+        else:
+            root_pieces, root = roots(None)
 
-    all_pieces = pieces + list(root_pieces)
-    nullcol = jnp.full((cls_t.shape[0], 1), ARENA_NULL, jnp.int32)
+        if consume_t is not None:
+            clr = (consume_t > 0) & live[:, None]              # (B, S)
+            out = ((jnp.where(clr[:, None, :], ARENA_NULL, out[0]),)
+                   + out[1:])
 
-    def third(p):                  # extend regions have no right child
-        return p[2] if len(p) == 3 else jnp.full_like(p[1], ARENA_NULL)
+        all_pieces = pieces + list(root_pieces)
+        nullcol = jnp.full((B, 1), ARENA_NULL, jnp.int32)
 
-    valid = jnp.concatenate(
-        [live.astype(jnp.int32)[:, None]] + [p[0] for p in all_pieces],
-        axis=1)
-    left = jnp.concatenate([nullcol] + [p[1] for p in all_pieces], axis=1)
-    right = jnp.concatenate([nullcol] + [third(p) for p in all_pieces],
-                            axis=1)
-    return out, (valid, left, right), root
+        def third(p):              # extend regions have no right child
+            return p[2] if len(p) == 3 else jnp.full_like(p[1], ARENA_NULL)
+
+        valid = jnp.concatenate(
+            [live.astype(jnp.int32)[:, None]] + [p[0] for p in all_pieces],
+            axis=1)
+        left = jnp.concatenate([nullcol] + [p[1] for p in all_pieces],
+                               axis=1)
+        right = jnp.concatenate([nullcol] + [third(p) for p in all_pieces],
+                                axis=1)
+        ok = valid > 0
+        left = jnp.where(ok, left, ARENA_NULL)
+        right = jnp.where(ok, right, ARENA_NULL)
+        return out, (valid, left, right), root
+
+    if not sparse_steps:
+        return live_step(cells)
+
+    def dead_step(cells):
+        zv = jnp.zeros((B, lay.M), jnp.int32)
+        nl = jnp.full((B, lay.M), ARENA_NULL, jnp.int32)
+        return cells, (zv, nl, nl), jnp.full((B, Q), ARENA_NULL, jnp.int32)
+
+    return jax.lax.cond(jnp.any(live), live_step, dead_step, cells)
 
 
 def pick_segments(T: int, W: int, max_seg: int = 8) -> int:
@@ -834,8 +872,8 @@ def arena_build_ref(cells0, class_ids, hits, start, valid_counts, *,
         con_t = extra.pop(0) if consume is not None else None
         out, recs, root = arena_block_step(
             cells, cls_t, hit_t, j, live, vb, lay=lay, ptab=ptab,
-            finals_sq=finals_sq, sparse_roots=True, expire_t=exp_t,
-            consume_t=con_t)
+            finals_sq=finals_sq, sparse_roots=True, sparse_steps=True,
+            expire_t=exp_t, consume_t=con_t)
         return out, recs + (root,)
 
     cells_fin, ys = jax.lax.scan(step, cells0_seg, xs)

@@ -514,6 +514,17 @@ class QueryFleet:
         return bucket.engine.enumerate(position, stream, query=slot,
                                        strategy=strategy)
 
+    def clear_roots(self, before: Optional[int] = None) -> int:
+        """Prune recorded enumeration roots across every bucket engine.
+
+        ``before`` drops only roots at positions ``< before`` (the service
+        layer's emission high-water mark); None drops all.  Returns the
+        total number of entries dropped (DESIGN.md §13).
+        """
+        return sum(bucket.engine.clear_roots(before)
+                   for bucket in self._buckets.values()
+                   if bucket.engine is not None)
+
     # -- cost reporting -------------------------------------------------
     def cost_report(self) -> Dict[str, Dict[str, Any]]:
         """Per-query serving cost (DESIGN.md §11).

@@ -460,6 +460,15 @@ class StreamService:
         replay.  Requires ``strict_overflow=True`` on the engine — the
         latch must be an error the service can catch, not a silent mode.
         ``"raise"``: surface the error to the producer.
+    prune_roots:
+        When True (default), enumeration roots below the emission
+        high-water mark are dropped (``engine.clear_roots(before=…)``)
+        right after each chunk's alerts are durably delivered, so the
+        host-side ``_roots`` dict stays bounded by in-flight work
+        instead of growing one entry per hit for the life of the
+        stream.  Sinks run *before* the prune, so enumerating inside a
+        sink callback always works; pass ``prune_roots=False`` if you
+        need to enumerate delivered hits after the run.
     """
 
     def __init__(self, engine, directory: str, *,
@@ -476,7 +485,8 @@ class StreamService:
                  overflow_policy: str = "regrow",
                  growth_factor: int = 2,
                  max_window_events_cap: int = 1 << 16,
-                 pad_event: Optional[Event] = None):
+                 pad_event: Optional[Event] = None,
+                 prune_roots: bool = True):
         if overflow_policy not in ("regrow", "raise"):
             raise ValueError(f"overflow_policy must be 'regrow' or 'raise', "
                              f"got {overflow_policy!r}")
@@ -507,6 +517,7 @@ class StreamService:
         self.growth_factor = int(growth_factor)
         self.max_window_events_cap = int(max_window_events_cap)
         self.sinks = list(sinks)
+        self.prune_roots = bool(prune_roots)
         self.metrics = ServiceMetrics()
         self.dlq = DeadLetterQueue(
             os.path.join(directory, "dead_letter.jsonl"))
@@ -635,12 +646,28 @@ class StreamService:
             top = max(top, rec["chunk"])
         if top > cursor:
             self._advance_cursor(top)
+        if top >= 0:
+            self._prune_roots(top)
 
     def _deliver(self, chunk: int, hits) -> None:
         hits = [_hit_key(h) for h in hits]
         for sink in self.sinks:
             sink(chunk, hits)
         self.metrics.alerts += len(hits)
+
+    def _prune_roots(self, chunk: int) -> None:
+        """Drop enumeration roots below the emission high-water mark.
+
+        Chunk ``chunk`` covers stream positions < ``(chunk + 1) *
+        chunk_len`` and its alerts are durable and delivered, so no
+        earlier root can ever be hit again — roots are keyed by a
+        match's END position, and every future hit records a fresh
+        entry at its own (later) position.  Replay-suppressed chunks
+        below the mark are covered too: their hits were delivered in
+        the pre-crash run.  Host-side bookkeeping only; arena nodes on
+        device are untouched."""
+        if self.prune_roots:
+            self.engine.clear_roots(before=(chunk + 1) * self.chunk_len)
 
     # -- producer side --------------------------------------------------
     def _check_error(self) -> None:
@@ -828,6 +855,7 @@ class StreamService:
                 elif hits:
                     self._deliver(seq, hits)
                     self._advance_cursor(seq)
+                    self._prune_roots(seq)
                 self.metrics.chunk_latency_s.append(
                     time.perf_counter() - t0)
                 self._release(n_real)

@@ -486,33 +486,48 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         keyword-only to keep parent-style positional calls from silently
         landing in ``query``.
         """
-        post = tecs_arena.resolve_enum_strategy(self.engine, strategy)
         if not isinstance(position, (int, np.integer)):
             raise TypeError(
                 f"position must be a global stream position (int), got "
                 f"{position!r} — the partitioned engine has no stream axis")
-        rec = self._roots.get(int(position))
-        if rec is None or int(rec[1][query]) < 0:
+        snap = snapshot if snapshot is not None else self.arena_snapshot()
+        [ces] = self._enumerate_batch([int(position)], query, strategy, snap)
+        return ces
+
+    def _enumerate_batch(self, hits, query, strategy, snap,
+                         oracle: bool = False
+                         ) -> List[List[ComplexEvent]]:
+        """Frontier-vectorized walk over global hit positions (the keys of
+        ``_roots`` are bare positions here; each record carries its lane)."""
+        post = tecs_arena.resolve_enum_strategy(self.engine, strategy)
+        latest = (self._latest_q is not None
+                  and float(np.asarray(self._latest_q)[query]) > 0.5)
+        lanes, roots, ends, thrs = [], [], [], []
+        for p in hits:
+            rec = self._roots.get(int(p))
             # NULL root slots appear when a repack migration adds a query
             # after this hit was recorded — nothing to enumerate for it
-            return []
-        lane, roots_row = rec
-        snap = snapshot if snapshot is not None else self.arena_snapshot()
-        ces = snap.enumerate(lane, int(roots_row[query]), int(position))
+            root = int(rec[1][query]) if rec is not None else -1
+            lanes.append(int(rec[0]) if rec is not None else 0)
+            roots.append(root)
+            ends.append(int(p))
+            thrs.append(int(snap.maxs[lanes[-1], root])
+                        if latest and root >= 0 else None)
+        batches = snap.enumerate_batch(lanes, roots, ends, thrs,
+                                       oracle=oracle)
         if post is not None:
-            return apply_strategy(post, list(ces))
-        if self._latest_q is not None and \
-                float(np.asarray(self._latest_q)[query]) > 0.5:
-            return tecs_arena.take_latest_group(ces)
-        return list(ces)
+            batches = [apply_strategy(post, ces) for ces in batches]
+        return batches
 
     def enumerate_hits(self, hits: Sequence[int], *, query: int = 0,
-                       strategy: Optional[str] = None):
-        """Enumerate a batch of global hit positions with one arena fetch."""
+                       strategy: Optional[str] = None,
+                       oracle: bool = False):
+        """Enumerate a batch of global hit positions with ONE delta fetch
+        and ONE frontier-vectorized walk over all roots."""
         snap = self.arena_snapshot()
-        return {p: self.enumerate(p, query=query, strategy=strategy,
-                                  snapshot=snap)
-                for p in hits}
+        batches = self._enumerate_batch(hits, query, strategy, snap,
+                                        oracle=oracle)
+        return {int(p): ces for p, ces in zip(hits, batches)}
 
     # ------------------------------------------------------------------
     def feed_attrs(self, attrs):
@@ -716,6 +731,9 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
             arrays, lane_map, dropped_owned = self._migrate_lanes(
                 arrays, src_lanes)
         self._state = _restore_like("state", self._init_lane_state(), arrays)
+        # restored / lane-gathered node rows replace the store wholesale —
+        # the delta mirror must refetch from row 0 (DESIGN.md §13)
+        self._arena_mirror.invalidate()
         self._pos = int(meta["pos"])
         self._chunk_idx = int(meta["chunk_idx"])
         self._last_ts = (np.asarray(arrays["last_ts"], np.float32)
@@ -795,6 +813,7 @@ class PartitionedStreamingEngine(StreamingVectorEngine):
         self._hash_to_key.clear()
         self._fallback_clock.clear()
         self._roots.clear()
+        self._arena_mirror.invalidate()
         self._last_ts = None
         self._quarantined = ()
         self.stats = PartitionStats()

@@ -313,6 +313,9 @@ class StreamingVectorEngine:
                               if arena_capacity is not None else None)
         self.strict_overflow = bool(strict_overflow)
         self._roots: Dict[Tuple[int, int], np.ndarray] = {}
+        # persistent host mirror of the device arena: enumerate() fetches
+        # only the appended delta since the last sync (DESIGN.md §13)
+        self._arena_mirror = tecs_arena.ArenaMirror()
         # time windows: last timestamp per lane, carried across feeds for
         # the monotonicity audit (stream order must equal time order)
         self._last_ts: Optional[np.ndarray] = None
@@ -689,6 +692,9 @@ class StreamingVectorEngine:
         arrays = self._ring_migrated(meta, arrays, max_window_events, skip)
         self._state = _restore_like(
             "state", self._init_full_state(self.batch), arrays)
+        # restored (and possibly packing/ring-migrated) node rows replace
+        # the store wholesale — the delta mirror must refetch from row 0
+        self._arena_mirror.invalidate()
         self._pos = int(meta["pos"])
         self._last_ts = (np.asarray(arrays["last_ts"], np.float32)
                          if "last_ts" in arrays else None)
@@ -796,12 +802,15 @@ class StreamingVectorEngine:
     # tECS-arena enumeration (requires arena_capacity; DESIGN.md §7)
     # ------------------------------------------------------------------
     def arena_snapshot(self) -> "tecs_arena.ArenaSnapshot":
-        """Host-fetch the current arena; node ids are stable across feeds,
-        so one snapshot enumerates every hit recorded so far."""
+        """Sync the host mirror with the device arena and snapshot it.
+
+        Node ids are stable across feeds, so one snapshot enumerates every
+        hit recorded so far; the sync fetches only rows appended since the
+        previous snapshot (delta fetch, DESIGN.md §13)."""
         if self.arena_capacity is None:
             raise ValueError("engine built without arena_capacity — "
                              "no tECS arena to snapshot")
-        return tecs_arena.ArenaSnapshot(self._state["arena"])
+        return self._arena_mirror.sync(self._state["arena"])
 
     def enumerate(self, position: int, stream: int = 0, query: int = 0,
                   strategy: Optional[str] = None,
@@ -820,28 +829,56 @@ class StreamingVectorEngine:
         is the legacy host post-filter, valid only on plain-ALL engines —
         :func:`tecs_arena.resolve_enum_strategy` raises on a conflict.
         """
+        snap = snapshot if snapshot is not None else self.arena_snapshot()
+        [ces] = self._enumerate_batch(
+            [(int(position), int(stream))], query, strategy, snap)
+        return ces
+
+    def _enumerate_batch(self, hits, query, strategy, snap,
+                         oracle: bool = False
+                         ) -> List[List[ComplexEvent]]:
+        """Shared frontier-vectorized walk: one list per (position, stream).
+
+        A compiled-LAST query's matches are exactly the latest-start group,
+        which Algorithm 2's prune already selects when the threshold is the
+        root's own ``max_start`` — so native LAST costs the same vectorized
+        walk with a tighter window, no host re-filter (DESIGN.md §13).
+        """
         post = tecs_arena.resolve_enum_strategy(self.engine, strategy)
-        rec = self._roots.get((int(position), int(stream)))
-        if rec is None or int(rec[query]) < 0:
+        latest = (self._latest_q is not None
+                  and float(np.asarray(self._latest_q)[query]) > 0.5)
+        lanes, roots, ends, thrs = [], [], [], []
+        for p, b in hits:
+            rec = self._roots.get((int(p), int(b)))
             # NULL root slots appear when a repack migration adds a query
             # after this hit was recorded — nothing to enumerate for it
-            return []
-        snap = snapshot if snapshot is not None else self.arena_snapshot()
-        ces = snap.enumerate(int(stream), int(rec[query]), int(position))
+            root = int(rec[query]) if rec is not None else -1
+            lanes.append(int(b))
+            roots.append(root)
+            ends.append(int(p))
+            thrs.append(int(snap.maxs[int(b), root])
+                        if latest and root >= 0 else None)
+        batches = snap.enumerate_batch(lanes, roots, ends, thrs,
+                                       oracle=oracle)
         if post is not None:
-            return apply_strategy(post, list(ces))
-        if self._latest_q is not None and \
-                float(np.asarray(self._latest_q)[query]) > 0.5:
-            return tecs_arena.take_latest_group(ces)
-        return list(ces)
+            batches = [apply_strategy(post, ces) for ces in batches]
+        return batches
 
     def enumerate_hits(self, hits: Sequence[Tuple[int, int]],
-                       query: int = 0, strategy: Optional[str] = None
+                       query: int = 0, strategy: Optional[str] = None,
+                       oracle: bool = False
                        ) -> Dict[Tuple[int, int], List[ComplexEvent]]:
-        """Enumerate a batch of ``(position, stream)`` hits with one fetch."""
+        """Enumerate a batch of ``(position, stream)`` hits with ONE delta
+        fetch and ONE frontier-vectorized walk over all roots.
+
+        ``oracle=True`` routes through the per-root Python DFS reference
+        (Algorithm 2 as written) instead of the vectorized walk — for
+        parity tests and the DFS benchmark baseline."""
         snap = self.arena_snapshot()
-        return {(p, b): self.enumerate(p, b, query, strategy, snapshot=snap)
-                for p, b in hits}
+        batches = self._enumerate_batch(hits, query, strategy, snap,
+                                        oracle=oracle)
+        return {(int(p), int(b)): ces
+                for (p, b), ces in zip(hits, batches)}
 
     def clear_roots(self, before: Optional[int] = None) -> int:
         """Forget recorded enumeration roots (host-side bookkeeping).
@@ -870,5 +907,6 @@ class StreamingVectorEngine:
         self._state = self._init_full_state(self.batch)
         self._pos = 0
         self._roots.clear()
+        self._arena_mirror.invalidate()
         self._last_ts = None
         self._quarantined = ()

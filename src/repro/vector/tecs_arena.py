@@ -58,6 +58,7 @@ invariant checker exploits.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass
 from typing import Iterator, List, Optional, Sequence, Tuple
 
@@ -66,11 +67,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.events import ComplexEvent
-from ..core.tecs import BOTTOM, OUTPUT, UNION, enumerate_arena
+from ..core.tecs import (BOTTOM, OUTPUT, UNION, enumerate_arena,
+                         enumerate_arena_batch)
 from ..kernels import ref as kref
 from ..kernels import window as wkern
 
 NULL = -1  # empty cell / absent child
+_NO_CAP = 1 << 62  # per-root match cap meaning "unbounded" (enumerate_batch)
 
 ARENA_IMPLS = ("block", "fold")  # block: vectorized (default); fold: per-event
 
@@ -582,6 +585,32 @@ def arena_scan_block(tables: ArenaTables, arena: dict,
             consume=consume, use_pallas=use_pallas, interpret=interpret,
             b_tile=b_tile)
 
+    # -- 3+4 run under one chunk-level allocation gate: a chunk with zero
+    # allocations (every step dead — idle fleet engines, service tail
+    # chunks) skips the cumsum, the translation and the store update at
+    # runtime and returns the arena unchanged.  Any live step allocates at
+    # least its bottom record, so the gate only ever skips chunks whose
+    # cell table is bit-identically unchanged.
+    def _translate(_):
+        return _arena_translate_store(arena, lay, cells_T, rec_valid,
+                                      rec_left, rec_right, roots_v, gpos,
+                                      start, valid, sstart0, hits,
+                                      T=T, B=B, W=W, cap=cap,
+                                      num_states=tables.num_states)
+
+    def _skip(_):
+        return dict(arena), jnp.full((T, B, Q), NULL, jnp.int32)
+
+    return jax.lax.cond(jnp.any(rec_valid > 0), _translate, _skip, None)
+
+
+def _arena_translate_store(arena, lay, cells_T, rec_valid, rec_left,
+                           rec_right, roots_v, gpos, start, valid, sstart0,
+                           hits, *, T, B, W, cap, num_states):
+    """Steps 3–4 of :func:`arena_scan_block`: bump allocation, virtual-id
+    translation and the batched store update (hit-gated by the caller)."""
+    M = lay.M
+    Q = lay.Q
     # -- 3. bump allocation: one chunk-level cumsum over all T·M slots -----
     N = T * M
     need = jnp.moveaxis(rec_valid, 1, 0).reshape(B, N)
@@ -637,8 +666,7 @@ def arena_scan_block(tables: ArenaTables, arena: dict,
                       ("left", tr(at_src(flat(rec_left)))),
                       ("right", tr(at_src(flat(rec_right))))):
         out[name] = jnp.where(written, val, arena[name])
-    out["cell"] = tr(cells_T[0].reshape(B, -1)).reshape(
-        B, W, tables.num_states)
+    out["cell"] = tr(cells_T[0].reshape(B, -1)).reshape(B, W, num_states)
     roots = jnp.moveaxis(tr(flat(roots_v)).reshape(B, T, Q), 0, 1)
     return out, jnp.where(jnp.asarray(hits, bool), roots, NULL)
 
@@ -809,8 +837,6 @@ def run_enumerate(engine, streams, start_pos: int = 0,
     Returns ``(counts (T, B, Q) int64, {(t, b, q): [ComplexEvent]})`` —
     single-query callers slice Q = 0.
     """
-    import itertools
-
     from ..core.selection import apply_strategy
     post = resolve_enum_strategy(engine, strategy)
     attrs, event_ts = engine.encode_ts(streams, base_pos=int(start_pos))
@@ -852,21 +878,22 @@ def run_enumerate(engine, streams, start_pos: int = 0,
     latest_np = (np.asarray(latest_q) > 0.5) if latest_q is not None \
         else None
     snap = ArenaSnapshot(arena)
+    tbq = list(zip(*np.nonzero(counts)))
+    js = [int(start_pos) + int(t) for t, b, q in tbq]
+    # LAST: the root chains starts in decreasing order, so the latest-start
+    # group comes first; the latest-reduced count is exactly its size — cap
+    # the frontier there (the vectorized islice, O(matches kept)).
+    caps = ([int(counts[t, b, q]) if latest_np[q] else _NO_CAP
+             for t, b, q in tbq] if latest_np is not None else None)
+    batches = snap.enumerate_batch(
+        [int(b) for t, b, q in tbq], [int(roots_np[t, b, q])
+                                      for t, b, q in tbq],
+        js, [j - engine.epsilon for j in js], caps=caps)
     out = {}
-    for t, b, q in zip(*np.nonzero(counts)):
-        j = int(start_pos) + int(t)
-        ces = snap.enumerate(int(b), roots_np[t, b, q], j,
-                             j - engine.epsilon)
+    for (t, b, q), ces in zip(tbq, batches):
         if post is not None:
-            out[(int(t), int(b), int(q))] = apply_strategy(post, list(ces))
-        elif latest_np is not None and latest_np[q]:
-            # LAST: the root chains starts in decreasing order, so the
-            # latest-start group comes first; the latest-reduced count is
-            # exactly its size — take it and stop (O(matches kept)).
-            out[(int(t), int(b), int(q))] = list(
-                itertools.islice(ces, int(counts[t, b, q])))
-        else:
-            out[(int(t), int(b), int(q))] = list(ces)
+            ces = apply_strategy(post, ces)
+        out[(int(t), int(b), int(q))] = ces
     return counts, out
 
 
@@ -896,6 +923,26 @@ class ArenaSnapshot:
         self.ptr = np.asarray(arena["ptr"])
         self.ovf = np.asarray(arena["ovf"])
 
+    @classmethod
+    def from_mirror(cls, bufs: dict, ptr: np.ndarray, ovf: np.ndarray
+                    ) -> "ArenaSnapshot":
+        """Snapshot over a mirror's persistent buffers (no copy).
+
+        The node store is append-only, so sharing the buffers is safe: a
+        later ``sync`` only writes rows at or beyond this snapshot's
+        ``ptr`` watermark (or rewrites already-fetched rows with identical
+        values) — earlier snapshots keep enumerating correctly.
+        """
+        snap = cls.__new__(cls)
+        snap.kind = bufs["kind"]
+        snap.pos = bufs["pos"]
+        snap.maxs = bufs["maxs"]
+        snap.left = bufs["left"]
+        snap.right = bufs["right"]
+        snap.ptr = ptr
+        snap.ovf = ovf
+        return snap
+
     @property
     def nodes_created(self) -> int:
         return int(self.ptr.sum())
@@ -919,6 +966,149 @@ class ArenaSnapshot:
             self.kind[lane], self.pos[lane], self.maxs[lane],
             self.left[lane], self.right[lane], int(root), int(end_pos),
             threshold, steps)
+
+    def enumerate_batch(self, lanes: Sequence[int], roots: Sequence[int],
+                        ends: Sequence[int],
+                        thresholds: Optional[Sequence[int]] = None,
+                        caps: Optional[Sequence[int]] = None,
+                        steps: Optional[List[int]] = None,
+                        oracle: bool = False
+                        ) -> List[List[ComplexEvent]]:
+        """Frontier-vectorized :meth:`enumerate` over many roots at once.
+
+        One entry per root: its arena ``lane``, node id (< 0 = empty), end
+        position, window threshold (None entries / omitted = no prune) and
+        optional per-root match cap (the compiled-LAST ``islice``).  Returns
+        one list per root, bit-identical — order included — to draining the
+        per-root DFS (:func:`repro.core.tecs.enumerate_arena_batch`).
+
+        ``oracle=True`` actually drains that per-root Python DFS instead of
+        the vectorized walk — the Algorithm-2 reference path, kept for
+        parity tests and the ``enum_vectorized_vs_dfs`` benchmark row.
+        """
+        lanes_a = np.asarray(lanes, dtype=np.int64)
+        roots_a = np.asarray(roots, dtype=np.int64)
+        live = roots_a >= 0
+        if live.any():
+            bad = np.unique(lanes_a[live & self.ovf[lanes_a]])
+            if bad.size:
+                raise ArenaOverflow(
+                    f"lane {int(bad[0])} overflowed its arena (capacity "
+                    f"{self.kind.shape[1] - 1}); raise arena_capacity or "
+                    "reset")
+        no_thr = -(1 << 62)
+        if thresholds is None:
+            thr = np.full(roots_a.shape, no_thr, dtype=np.int64)
+        else:
+            thr = np.asarray([no_thr if t is None else int(t)
+                              for t in thresholds], dtype=np.int64)
+        if oracle:
+            out: List[List[ComplexEvent]] = []
+            for i in range(len(roots_a)):
+                if roots_a[i] < 0:
+                    out.append([])
+                    continue
+                it = self.enumerate(
+                    int(lanes_a[i]), int(roots_a[i]), int(ends[i]),
+                    None if thr[i] == no_thr else int(thr[i]), steps)
+                if caps is not None and caps[i] is not None:
+                    it = itertools.islice(it, int(caps[i]))
+                out.append(list(it))
+            return out
+        return enumerate_arena_batch(
+            self.kind, self.pos, self.maxs, self.left, self.right,
+            roots_a, lanes_a, ends, thr, caps=caps, steps=steps)
+
+
+_NODE_FIELDS = ("kind", "pos", "maxs", "left", "right")
+
+
+@jax.jit
+def _mirror_meta(arena):
+    return arena["ptr"], arena["ovf"]
+
+
+def _mirror_slice(arena, lo, span):
+    """Jitted ``[:, lo:lo+span)`` column slice of the five node fields.
+
+    ``span`` is static (one XLA program per power-of-two bucket, ≤
+    log2(capacity) of them per geometry); ``lo`` is a traced operand so
+    the watermark never recompiles.
+    """
+    return tuple(jax.lax.dynamic_slice_in_dim(arena[name], lo, span, axis=1)
+                 for name in _NODE_FIELDS)
+
+
+_mirror_slice = jax.jit(_mirror_slice, static_argnums=(2,))
+
+
+class ArenaMirror:
+    """Persistent host mirror of a device arena with *delta* fetch.
+
+    Bump-pointer node ids are monotone and the store is append-only
+    between resets, so successive snapshots can only differ in rows
+    ``[fetched : ptr)``.  :meth:`sync` pulls just that column span
+    (rounded up to a power-of-two bucket so the jitted device slice
+    compiles O(log capacity) times, not once per watermark) into
+    persistent numpy buffers and returns an :class:`ArenaSnapshot` that
+    shares them — the full ``(B, capacity)`` store crosses the device
+    boundary exactly once per engine lifetime, however many times the
+    host enumerates.
+
+    Old snapshots stay valid across later syncs (append-only: later
+    deltas touch rows at or beyond their ``ptr``).  Anything that
+    rewrites existing rows — ``reset``, ``restore`` (packing or lane
+    migration), regrow — must call :meth:`invalidate`; idle-lane
+    eviction only clears *cell* rows, so the node store and the mirror
+    stay valid.  Per-lane overflow needs no special casing: the sink
+    row is only reachable from overflowed lanes, whose enumeration
+    raises :class:`ArenaOverflow` before any node is read.
+    """
+
+    def __init__(self):
+        self._bufs = None          # name -> (B, cap+1) int32, host
+        self._fetched = 0          # columns FINAL in the mirror: min over
+        self._shape = None         # lanes — laggards refetch (see sync)
+
+    def invalidate(self) -> None:
+        """Drop the watermark — the next sync refetches from row 0."""
+        self._fetched = 0
+
+    @property
+    def fetched(self) -> int:
+        return self._fetched
+
+    def sync(self, arena: dict) -> ArenaSnapshot:
+        """Fetch rows ``[fetched : max(ptr))`` and snapshot the mirror.
+
+        The fetch is one column span shared by every lane, but lanes fill
+        at different rates: a row between a lagging lane's ptr and the
+        global max is UNWRITTEN on device now and may gain a real node
+        later, so only rows below ``min(ptr)`` are final for all lanes.
+        The watermark therefore advances to the min — the skew span
+        ``[min(ptr) : max(ptr))`` is refetched next sync (append-only
+        rows below each lane's own ptr rewrite with identical values, so
+        earlier snapshots sharing the buffers stay correct).
+        """
+        # np.array (not asarray): device_get can be zero-copy on CPU and the
+        # engine's next step donates the arena buffers out from under a view
+        ptr, ovf = (np.array(x) for x in _mirror_meta(arena))
+        shape = tuple(arena["kind"].shape)
+        if self._bufs is None or self._shape != shape:
+            self._bufs = {name: np.full(shape, NULL, np.int32)
+                          for name in _NODE_FIELDS}
+            self._shape = shape
+            self._fetched = 0
+        lo, hi = self._fetched, int(ptr.max(initial=0))
+        if hi > lo:
+            span = 1 << max(0, int(hi - lo - 1)).bit_length()
+            span = min(span, shape[1])
+            lo_q = max(0, hi - span)          # lo_q ≤ lo, lo_q + span ≥ hi
+            cols = _mirror_slice(arena, lo_q, span)
+            for name, col in zip(_NODE_FIELDS, cols):
+                self._bufs[name][:, lo_q:lo_q + span] = np.asarray(col)
+            self._fetched = int(ptr.min(initial=0))
+        return ArenaSnapshot.from_mirror(self._bufs, ptr, ovf)
 
 
 def check_invariants(snap: ArenaSnapshot, lane: int) -> None:

@@ -211,6 +211,42 @@ def test_malformed_events_dead_letter_and_replay(tmp_path):
     dlq.close()
 
 
+def test_delivered_roots_pruned_to_plateau(tmp_path):
+    """Emission-high-water root pruning (DESIGN.md §13): with
+    ``prune_roots=True`` (default) the engine's ``_roots`` dict stays
+    bounded by in-flight work across a long stream — sampled at every
+    delivery it plateaus instead of growing one entry per hit — while a
+    ``prune_roots=False`` run keeps every root and emits the exact same
+    alerts."""
+    raws = make_raws(3, 512)
+    eng = part_engine(64, arena=1 << 12)
+    sizes = []                       # len(_roots) sampled at each delivery
+    svc = StreamService(eng, str(tmp_path / "pruned"),
+                        sinks=[lambda c, h: sizes.append(len(eng._roots))])
+    for r in raws:
+        svc.submit(r, block=True, timeout=30.0)
+    svc.drain(pad=True)
+    svc.close()
+    assert svc.metrics.alerts > 0 and len(sizes) > 8
+
+    eng2 = part_engine(64, arena=1 << 12)
+    alerts2, _, m2 = run_service(raws, str(tmp_path / "kept"), eng2,
+                                 prune_roots=False)
+    assert m2.alerts == svc.metrics.alerts          # pruning changes nothing
+    assert cumulative_matches(str(tmp_path / "pruned")) == \
+        cumulative_matches(str(tmp_path / "kept"))
+    # unpruned: one root entry per hit position for the life of the stream
+    assert len(eng2._roots) == len({h for _, hs in alerts2 for h in hs})
+    # pruned: the sink samples BEFORE the current chunk's prune, so each
+    # sample holds only roots since the previous delivered chunk — the
+    # running maximum must plateau far below the unpruned total, and the
+    # final dict (after the last delivery's prune) keeps nothing older
+    # than the delivered high-water mark
+    assert max(sizes) < len(eng2._roots) / 4
+    last_chunk = max(c for c, hs in alerts2 if hs)
+    assert all(p >= (last_chunk + 1) * svc.chunk_len for p in eng._roots)
+
+
 def test_dlq_torn_tail_repair(tmp_path):
     path = str(tmp_path / "dlq.jsonl")
     dlq = DeadLetterQueue(path)
